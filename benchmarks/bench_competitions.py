@@ -1,0 +1,79 @@
+"""Paper Tables 1-3: sequential competition (streaming I/O accounting),
+parallel competition, and region-reduction percentages — on CPU-sized
+instances of the same families."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit_csv
+from repro.core import (SweepConfig, build, grid_partition, region_reduction,
+                        solve_mincut)
+from repro.data.grids import random_sparse, segmentation_grid, synthetic_grid
+
+
+def _instances(quick=False):
+    s = 20 if quick else 28
+    out = [
+        ("seg2d", segmentation_grid(s, s, seed=0),
+         grid_partition((s, s), (2, 2))),
+        ("synth-easy", synthetic_grid(s, s, strength=30, seed=1),
+         grid_partition((s, s), (2, 2))),
+        ("synth-hard", synthetic_grid(s, s, strength=150, seed=1),
+         grid_partition((s, s), (2, 2))),
+    ]
+    if not quick:
+        out.append(("seg3d", segmentation_grid(12, 12, depth=6, seed=2),
+                    None))
+    return out
+
+
+def table1_sequential(emit=emit_csv, quick=False):
+    """S-ARD vs S-PRD: sweeps and streaming I/O (page + boundary bytes) —
+    the paper's Table 1 criterion (ARD needs far less disk traffic)."""
+    for name, p, part in _instances(quick):
+        row = {}
+        for m in ("ard", "prd"):
+            t0 = time.perf_counter()
+            res = solve_mincut(p, part=part, num_regions=4,
+                               config=SweepConfig(method=m, parallel=False))
+            us = (time.perf_counter() - t0) * 1e6
+            s = res.stats
+            emit(f"table1/S-{m.upper()}/{name}", us,
+                 f"sweeps={s.sweeps};io_bytes={s.page_bytes};"
+                 f"boundary_bytes={s.boundary_bytes};flow={res.flow_value}")
+            row[m] = s.sweeps
+
+
+def table2_parallel(emit=emit_csv, quick=False):
+    """P-ARD vs P-PRD (all regions concurrently + fusion)."""
+    for name, p, part in _instances(quick):
+        for m in ("ard", "prd"):
+            t0 = time.perf_counter()
+            res = solve_mincut(p, part=part, num_regions=4,
+                               config=SweepConfig(method=m, parallel=True))
+            us = (time.perf_counter() - t0) * 1e6
+            emit(f"table2/P-{m.upper()}/{name}", us,
+                 f"sweeps={res.stats.sweeps};flow={res.flow_value}")
+
+
+def table3_reduction(emit=emit_csv, quick=False):
+    """Percentage of vertices decided by Alg. 5 preprocessing."""
+    for name, p, part in _instances(quick):
+        if part is None:
+            from repro.core.partition import block_partition
+            part = block_partition(p.num_vertices, 4)
+        t0 = time.perf_counter()
+        meta, state, _ = build(p, part)
+        red = region_reduction(meta, state)
+        us = (time.perf_counter() - t0) * 1e6
+        frac = float(np.asarray(red.decided).sum()) / p.num_vertices
+        emit(f"table3/reduction/{name}", us, f"decided={frac * 100:.1f}%")
+
+
+def run(emit=emit_csv, quick=False):
+    table1_sequential(emit, quick)
+    table2_parallel(emit, quick)
+    table3_reduction(emit, quick)

@@ -1,0 +1,84 @@
+"""LM-side microbenchmarks: smoke-scale train/decode step timings per
+architecture family + kernel timings (CPU interpret — correctness-scale
+numbers; the TPU numbers come from the dry-run roofline)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit_csv, time_call
+from repro.configs import ARCHS
+from repro.models.model import forward, init_cache, init_params
+from repro.train import optimizer as opt_lib
+from repro.train import train_loop as tl
+
+FAMILIES = ["phi3-mini-3.8b", "deepseek-moe-16b", "xlstm-350m",
+            "recurrentgemma-9b", "hubert-xlarge"]
+
+
+def _batch(cfg, key, B, S):
+    if cfg.frontend == "audio_frames":
+        return {"frames": jax.random.normal(key, (B, S, cfg.frontend_dim)),
+                "labels": jnp.zeros((B, S), jnp.int32),
+                "mask": jnp.ones((B, S), jnp.float32)}
+    return {"tokens": jnp.ones((B, S), jnp.int32),
+            "labels": jnp.zeros((B, S), jnp.int32)}
+
+
+def train_step_bench(emit=emit_csv, quick=False):
+    B, S = (2, 32) if quick else (4, 64)
+    for name in (FAMILIES[:3] if quick else FAMILIES):
+        cfg = ARCHS[name].smoke()
+        params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+        state = tl.TrainState(params=params,
+                              opt=opt_lib.init_opt_state(params))
+        step = jax.jit(tl.make_train_step(
+            cfg, opt_lib.AdamWConfig(), jnp.float32))
+        batch = _batch(cfg, jax.random.PRNGKey(1), B, S)
+        us, _ = time_call(lambda: step(state, batch), repeats=3)
+        emit(f"lm/train_step/{name}", us,
+             f"tok_per_s={B * S / (us / 1e6):.0f}")
+
+
+def decode_step_bench(emit=emit_csv, quick=False):
+    B, T = (2, 64) if quick else (4, 128)
+    for name in (["phi3-mini-3.8b"] if quick
+                 else ["phi3-mini-3.8b", "xlstm-350m", "recurrentgemma-9b"]):
+        cfg = ARCHS[name].smoke()
+        params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+        cache = init_cache(cfg, B, T, dtype=jnp.float32)
+        toks = jnp.ones((B, 8), jnp.int32)
+        _, cache = forward(cfg, params, {"tokens": toks}, mode="prefill",
+                           cache=cache, dtype=jnp.float32)
+        step = jax.jit(lambda p, t, c: forward(
+            cfg, p, {"tokens": t}, mode="decode", cache=c,
+            dtype=jnp.float32))
+        tok = jnp.ones((B, 1), jnp.int32)
+        us, _ = time_call(lambda: step(params, tok, cache), repeats=3)
+        emit(f"lm/decode_step/{name}", us,
+             f"tok_per_s={B / (us / 1e6):.0f}")
+
+
+def kernel_bench(emit=emit_csv, quick=False):
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.ref import attention_ref
+
+    B, H, S, D = 1, 2, 128, 64
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(B, H, S, D), jnp.float32)
+    us_k, _ = time_call(
+        lambda: flash_attention(q, q, q, block_q=64, block_k=64,
+                                interpret=True), repeats=2)
+    emit("kernel/flash_attention_interp", us_k, f"S={S}")
+    us_r, _ = time_call(lambda: attention_ref(q, q, q), repeats=2)
+    emit("kernel/attention_ref", us_r, f"S={S}")
+
+
+def run(emit=emit_csv, quick=False):
+    train_step_bench(emit, quick)
+    decode_step_bench(emit, quick)
+    kernel_bench(emit, quick)

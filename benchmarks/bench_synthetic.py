@@ -1,0 +1,94 @@
+"""Paper Sec. 7.1 synthetic sweeps — Figures 6b, 7, 8, 9, 10.
+
+Each figure becomes a CSV block: sweeps + CPU time for S-ARD vs S-PRD as a
+function of one generator parameter, on CPU-sized grids (the paper's
+qualitative claims — ARD's sweep count is flat where PRD's grows — are the
+assertions checked by EXPERIMENTS.md §Paper-validation).
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit_csv
+from repro.core import SweepConfig, grid_partition, solve_mincut
+from repro.data.grids import synthetic_grid
+
+
+def _solve(p, part, method, **kw):
+    t0 = time.perf_counter()
+    res = solve_mincut(p, part=part,
+                       config=SweepConfig(method=method, **kw))
+    dt = (time.perf_counter() - t0) * 1e6
+    return res, dt
+
+
+def fig6b_strength(emit=emit_csv, quick=False):
+    size = 20 if quick else 28
+    part = grid_partition((size, size), (2, 2))
+    strengths = [10, 150, 1000] if quick else [10, 50, 150, 500, 1000]
+    for s in strengths:
+        p = synthetic_grid(size, size, connectivity=8, strength=s, seed=0)
+        for m in ("ard", "prd"):
+            res, us = _solve(p, part, m)
+            emit(f"fig6b/{m}/strength={s}", us,
+                 f"sweeps={res.stats.sweeps};flow={res.flow_value}")
+
+
+def fig7_regions(emit=emit_csv, quick=False):
+    size = 24 if quick else 32
+    splits = [(1, 2), (2, 2)] if quick else [(1, 2), (2, 2), (2, 4), (4, 4)]
+    p = synthetic_grid(size, size, connectivity=8, strength=150, seed=0)
+    for sy, sx in splits:
+        part = grid_partition((size, size), (sy, sx))
+        for m in ("ard", "prd"):
+            res, us = _solve(p, part, m)
+            emit(f"fig7/{m}/regions={sy * sx}", us,
+                 f"sweeps={res.stats.sweeps}")
+
+
+def fig8_size(emit=emit_csv, quick=False):
+    sizes = [16, 24] if quick else [16, 24, 32, 40]
+    for size in sizes:
+        p = synthetic_grid(size, size, connectivity=8, strength=150, seed=0)
+        part = grid_partition((size, size), (2, 2))
+        for m in ("ard", "prd"):
+            res, us = _solve(p, part, m)
+            emit(f"fig8/{m}/n={size * size}", us,
+                 f"sweeps={res.stats.sweeps}")
+
+
+def fig9_connectivity(emit=emit_csv, quick=False):
+    size = 20 if quick else 24
+    conns = [4, 8] if quick else [4, 8, 16, 24]
+    part = grid_partition((size, size), (2, 2))
+    for c in conns:
+        strength = max(1, (150 * 8) // c)       # paper's normalisation
+        p = synthetic_grid(size, size, connectivity=c, strength=strength,
+                           seed=0)
+        for m in ("ard", "prd"):
+            res, us = _solve(p, part, m)
+            emit(f"fig9/{m}/conn={c}", us, f"sweeps={res.stats.sweeps}")
+
+
+def fig10_workload(emit=emit_csv, quick=False):
+    """Workload split proxy: engine iterations vs sweeps vs boundary bytes
+    (the paper's msg/discharge/relabel/gap split maps to engine iterations
+    [discharge], boundary bytes [msg] and sweeps [gap+relabel overhead])."""
+    size = 20 if quick else 28
+    p = synthetic_grid(size, size, connectivity=8, strength=150, seed=0)
+    part = grid_partition((size, size), (2, 2))
+    for m in ("ard", "prd"):
+        res, us = _solve(p, part, m)
+        s = res.stats
+        emit(f"fig10/{m}/workload", us,
+             f"sweeps={s.sweeps};engine_iters={s.engine_iters};"
+             f"boundary_bytes={s.boundary_bytes};page_bytes={s.page_bytes}")
+
+
+def run(emit=emit_csv, quick=False):
+    fig6b_strength(emit, quick)
+    fig7_regions(emit, quick)
+    fig8_size(emit, quick)
+    fig9_connectivity(emit, quick)
+    fig10_workload(emit, quick)

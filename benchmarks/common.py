@@ -1,0 +1,31 @@
+"""Shared benchmark utilities: timing + CSV emission.
+
+Every benchmark module exposes ``run(emit, quick)`` and prints rows through
+``emit(name, us_per_call, derived)`` — the ``name,us_per_call,derived``
+CSV contract of benchmarks/run.py.
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def emit_csv(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def time_call(fn, *args, repeats: int = 3, warmup: int = 1):
+    """Median wall time of fn(*args) in microseconds (post-warmup)."""
+    import jax
+
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready(r)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6, r

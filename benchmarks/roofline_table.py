@@ -1,0 +1,92 @@
+"""Format the dry-run JSON artifacts into the EXPERIMENTS.md roofline table.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table \
+        --dir experiments/dryrun [--markdown]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+
+def load_records(d: str | Path):
+    recs = []
+    for p in sorted(Path(d).glob("*.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def fmt_seconds(s: float) -> str:
+    if s == 0:
+        return "0"
+    if s < 1e-3:
+        return f"{s * 1e6:.0f}us"
+    if s < 1:
+        return f"{s * 1e3:.1f}ms"
+    return f"{s:.2f}s"
+
+
+def rows(recs):
+    out = []
+    for r in recs:
+        if r.get("status") != "ok":
+            out.append({
+                "cell": f"{r['arch']}/{r.get('shape')}/{r['mesh']}",
+                "status": r.get("status"),
+                "note": (r.get("reason") or r.get("error", ""))[:80],
+            })
+            continue
+        rl = r["roofline"]
+        mem = r.get("memory", {}).get("approx_peak_bytes_per_device", 0)
+        dom = rl["bottleneck"]
+        dom_s = rl[f"{dom}_s"] if f"{dom}_s" in rl else 0
+        frac = 0.0
+        if dom_s:
+            frac = rl["compute_s"] / dom_s
+        out.append({
+            "cell": f"{r['arch']}/{r.get('shape')}/{r['mesh']}",
+            "status": "ok",
+            "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+            "collective_s": rl["collective_s"], "bottleneck": dom,
+            "mem_gb": mem / 1e9,
+            "useful": rl.get("useful_ratio", 0.0),
+            "roofline_frac": frac,
+        })
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rs = rows(load_records(args.dir))
+    if args.markdown:
+        print("| cell | compute | memory | collective | bound | mem/dev "
+              "| useful |")
+        print("|---|---|---|---|---|---|---|")
+        for r in rs:
+            if r["status"] != "ok":
+                print(f"| {r['cell']} | {r['status']}: {r['note']} "
+                      "| | | | | |")
+                continue
+            print(f"| {r['cell']} | {fmt_seconds(r['compute_s'])} "
+                  f"| {fmt_seconds(r['memory_s'])} "
+                  f"| {fmt_seconds(r['collective_s'])} "
+                  f"| {r['bottleneck']} | {r['mem_gb']:.1f}GB "
+                  f"| {r['useful']:.2f} |")
+    else:
+        print("cell,compute_s,memory_s,collective_s,bottleneck,mem_gb,useful")
+        for r in rs:
+            if r["status"] != "ok":
+                print(f"{r['cell']},{r['status']},{r['note']},,,,")
+                continue
+            print(f"{r['cell']},{r['compute_s']:.4f},{r['memory_s']:.4f},"
+                  f"{r['collective_s']:.4f},{r['bottleneck']},"
+                  f"{r['mem_gb']:.2f},{r['useful']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Benchmark entry point — one block per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks instance
+sizes; full runs feed EXPERIMENTS.md §Paper-validation.  Roofline numbers
+come from the dry-run artifacts (benchmarks/roofline_table formats them),
+not from CPU timing.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.common import emit_csv  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark module names")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import bench_competitions, bench_lm, bench_synthetic
+
+    mods = [("synthetic", bench_synthetic),
+            ("competitions", bench_competitions),
+            ("lm", bench_lm)]
+    print("name,us_per_call,derived")
+    for name, mod in mods:
+        if args.only and args.only not in name:
+            continue
+        mod.run(emit_csv, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

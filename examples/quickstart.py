@@ -1,0 +1,37 @@
+"""Quickstart: solve a distributed MINCUT with the public API.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+from repro.core import Problem, SweepConfig, solve_mincut
+
+# A tiny hand-built network: 6 vertices, terminal masses, symmetric edges.
+problem = Problem(
+    num_vertices=6,
+    edges=np.array([[0, 1], [1, 2], [2, 3], [3, 4], [4, 5], [0, 3]]),
+    cap_fwd=np.array([4, 3, 2, 5, 6, 1], np.int32),
+    cap_bwd=np.array([4, 3, 2, 5, 6, 1], np.int32),
+    excess=np.array([9, 0, 0, 0, 0, 0], np.int32),     # source mass at v0
+    sink_cap=np.array([0, 0, 0, 0, 0, 9], np.int32),   # sink drain at v5
+)
+
+# Solve with the paper's S/P-ARD (augmented-path region discharge).
+result = solve_mincut(problem, num_regions=2,
+                      config=SweepConfig(method="ard", parallel=True))
+print(f"max-flow / min-cut value : {result.flow_value}")
+print(f"source side              : {np.nonzero(result.source_side)[0]}")
+print(f"sweeps                   : {result.stats.sweeps} "
+      f"(bound {2 * result.meta.num_boundary**2 + 1})")
+print(f"boundary message bytes   : {result.stats.boundary_bytes}")
+
+# Compare against the push-relabel region discharge baseline (Delong-Boykov)
+baseline = solve_mincut(problem, num_regions=2,
+                        config=SweepConfig(method="prd"))
+assert baseline.flow_value == result.flow_value
+print(f"PRD baseline sweeps      : {baseline.stats.sweeps}")

@@ -1,0 +1,66 @@
+"""End-to-end driver: train a ~100M-parameter transformer for a few hundred
+steps on the deterministic Markov stream and watch the loss approach the
+stream's entropy floor.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--tiny]
+
+--tiny trains a few-M-param model instead (seconds on this CPU container);
+the default ~100M config is sized for a real accelerator.
+"""
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import MarkovSpec, markov_batch
+from repro.models.model import init_params, param_count
+from repro.train import optimizer as opt_lib
+from repro.train import train_loop as tl
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--tiny", action="store_true")
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=256)
+args = ap.parse_args()
+
+if args.tiny:
+    cfg = ArchConfig(name="tiny-lm", family="dense", num_layers=4,
+                     d_model=128, num_heads=4, num_kv_heads=2, d_ff=512,
+                     vocab_size=512, remat=False)
+else:
+    # ~100M params: 12L x 768 with a 32k vocab
+    cfg = ArchConfig(name="lm-100m", family="dense", num_layers=12,
+                     d_model=768, num_heads=12, num_kv_heads=12, d_ff=3072,
+                     vocab_size=32768, remat=False)
+
+spec = MarkovSpec(vocab=cfg.vocab_size, branching=4, seed=11)
+params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+print(f"params: {param_count(cfg) / 1e6:.1f}M  "
+      f"entropy floor: {spec.entropy_floor():.4f}")
+
+state = tl.TrainState(params=params, opt=opt_lib.init_opt_state(params))
+step = jax.jit(tl.make_train_step(
+    cfg, opt_lib.AdamWConfig(lr=1e-3, warmup_steps=30,
+                             total_steps=args.steps), jnp.float32))
+
+t0 = time.time()
+for i in range(1, args.steps + 1):
+    batch = jax.tree.map(jnp.asarray,
+                         markov_batch(spec, i, args.batch, args.seq))
+    state, m = step(state, batch)
+    if i % 20 == 0 or i == 1:
+        print(f"step {i:4d}  ce={float(m['ce']):.4f}  "
+              f"lr={float(m['lr']):.2e}  "
+              f"({args.batch * args.seq * i / (time.time() - t0):.0f} tok/s)",
+              flush=True)
+final = float(m["ce"])
+print(f"final ce {final:.4f} vs floor {spec.entropy_floor():.4f}")

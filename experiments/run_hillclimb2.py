@@ -1,0 +1,32 @@
+"""Second hillclimb batch: gradient-accumulation microbatching for the
+dense-train cells that exceed HBM."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, sys
+from pathlib import Path
+sys.path.insert(0, "src")
+
+from repro.launch import dryrun as dr
+
+OUT = Path("experiments/hillclimb"); OUT.mkdir(parents=True, exist_ok=True)
+
+def run(tag, arch, shape, mb, multi=False):
+    if (OUT / f"{tag}.json").exists():
+        print(f"{tag}: cached"); return
+    dr.MICROBATCHES = mb
+    try:
+        rec = dr.dryrun_lm_cell(arch, shape, multi_pod=multi)
+    except Exception as e:
+        import traceback
+        rec = {"status": "error", "error": str(e),
+               "traceback": traceback.format_exc()[-3000:]}
+    finally:
+        dr.MICROBATCHES = 1
+    (OUT / f"{tag}.json").write_text(json.dumps(rec, indent=2))
+    m = rec.get("memory", {}).get("approx_peak_bytes_per_device", 0)/1e9
+    print(f"{tag}: {rec['status']} mem={m:.1f}GB", flush=True)
+
+run("command-r-plus-104b__train_4k__single__mb4", "command-r-plus-104b", "train_4k", 4)
+run("qwen1.5-32b__train_4k__single__mb2", "qwen1.5-32b", "train_4k", 2)
+run("gemma3-27b__train_4k__single__mb2", "gemma3-27b", "train_4k", 2)
+print("hillclimb2 complete")

@@ -1,0 +1,32 @@
+"""MoE iteration 2: tokens constrained on data axes only."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, sys
+from pathlib import Path
+sys.path.insert(0, "src")
+from repro.launch import dryrun as dr
+
+OUT = Path("experiments/hillclimb"); OUT.mkdir(exist_ok=True)
+
+def run(tag, arch, shape, mb=1):
+    if (OUT / f"{tag}.json").exists():
+        print(f"{tag}: cached"); return
+    dr.MICROBATCHES = mb
+    try:
+        rec = dr.dryrun_lm_cell(arch, shape, multi_pod=False)
+    except Exception as e:
+        import traceback
+        rec = {"status": "error", "error": str(e), "traceback": traceback.format_exc()[-2500:]}
+    finally:
+        dr.MICROBATCHES = 1
+    (OUT / f"{tag}.json").write_text(json.dumps(rec, indent=2))
+    m = rec.get("memory", {}).get("approx_peak_bytes_per_device", 0)/1e9
+    rl = rec.get("roofline", {})
+    print(f"{tag}: {rec['status']} mem={m:.1f}GB c={rl.get('compute_s',0):.2f} "
+          f"m={rl.get('memory_s',0):.2f} x={rl.get('collective_s',0):.2f}", flush=True)
+
+run("deepseek-moe-16b__train_4k__single__moefix2", "deepseek-moe-16b", "train_4k")
+run("llama4-scout-17b-a16e__train_4k__single__moefix2", "llama4-scout-17b-a16e", "train_4k")
+run("deepseek-moe-16b__train_4k__single__moefix2_mb4", "deepseek-moe-16b", "train_4k", mb=4)
+run("deepseek-moe-16b__prefill_32k__single__moefix2", "deepseek-moe-16b", "prefill_32k")
+print("hillclimb3 complete")

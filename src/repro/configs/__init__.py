@@ -1,0 +1,5 @@
+from repro.configs.base import SHAPES, ArchConfig, MoEConfig, ShapeConfig, shape_skip_reason
+from repro.configs.registry import ARCHS, get_arch
+
+__all__ = ["ARCHS", "ArchConfig", "MoEConfig", "SHAPES", "ShapeConfig",
+           "get_arch", "shape_skip_reason"]

@@ -1,0 +1,7 @@
+"""qwen1.5-32b [dense] — MHA (kv=40) with QKV bias. [hf:Qwen/Qwen1.5-0.5B; hf]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen1.5-32b", family="dense", num_layers=64, d_model=5120,
+    num_heads=40, num_kv_heads=40, d_ff=27392, vocab_size=152064,
+    qkv_bias=True, tie_embeddings=False, sharding="fsdp_tp")

@@ -1,0 +1,25 @@
+"""Architecture registry: --arch <id> resolution for every launcher."""
+
+from repro.configs.base import ArchConfig
+
+from repro.configs.command_r_plus_104b import CONFIG as _command_r
+from repro.configs.deepseek_moe_16b import CONFIG as _deepseek
+from repro.configs.gemma3_27b import CONFIG as _gemma3
+from repro.configs.hubert_xlarge import CONFIG as _hubert
+from repro.configs.llama4_scout_17b_a16e import CONFIG as _llama4
+from repro.configs.llava_next_mistral_7b import CONFIG as _llava
+from repro.configs.phi3_mini_38b import CONFIG as _phi3
+from repro.configs.qwen15_32b import CONFIG as _qwen
+from repro.configs.recurrentgemma_9b import CONFIG as _rg
+from repro.configs.xlstm_350m import CONFIG as _xlstm
+
+ARCHS: dict[str, ArchConfig] = {c.name: c for c in [
+    _gemma3, _qwen, _command_r, _phi3, _llava, _llama4, _deepseek, _xlstm,
+    _hubert, _rg,
+]}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]

@@ -1,0 +1,21 @@
+"""Core distributed mincut/maxflow library (the paper's contribution).
+
+Public surface:
+  Problem, build, solve_mincut, SweepConfig — single-host solver
+  solve_sharded, make_sharded_sweep        — shard_map distributed solver
+  region_reduction                          — Alg. 5 preprocessing
+"""
+
+from repro.core.api import MincutResult, solve_mincut
+from repro.core.graph import (FlowState, GraphMeta, Layout, Problem, build,
+                              init_labels)
+from repro.core.partition import bfs_partition, block_partition, grid_partition
+from repro.core.reduction import region_reduction
+from repro.core.sweep import SweepConfig, SweepStats, cut_value, extract_cut, solve
+
+__all__ = [
+    "FlowState", "GraphMeta", "Layout", "MincutResult", "Problem",
+    "SweepConfig", "SweepStats", "bfs_partition", "block_partition", "build",
+    "cut_value", "extract_cut", "grid_partition", "init_labels",
+    "region_reduction", "solve", "solve_mincut",
+]

@@ -1,0 +1,238 @@
+"""Distributed P-ARD/P-PRD under shard_map — regions sharded over devices.
+
+This is the paper's parallel mode mapped onto a TPU mesh: each device owns a
+contiguous block of regions (rows of every [K, V, E] array); one sweep is a
+single SPMD program whose only cross-device traffic is
+
+  * an all-gather of the distance labels d[K, V] (the paper's boundary-label
+    messages), and
+  * a psum of the flat cross-arc flow deltas [X] plus the acceptance fusion
+    (the paper's boundary-flow messages),
+
+i.e. exactly the paper's "communication ∝ boundary" property — the roofline
+collective term of the maxflow workload is the boundary exchange and nothing
+else.  Region discharges themselves contain no collectives (they are the
+paper's independent region computations), so compute/communication overlap
+is naturally available to the scheduler.
+
+The sweep driver (host loop) stays in core/sweep.py; this module provides
+the sharded one-sweep program plus spec builders for the multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import heuristics
+from repro.core.ard import ard_discharge_one
+from repro.core.graph import FlowState, GraphMeta, INF_LABEL
+from repro.core.labels import GAP_HIST_CAP
+from repro.core.prd import prd_discharge_one
+from repro.core.sweep import SweepConfig
+
+_I32 = jnp.int32
+
+
+def region_axis_sharding(mesh: Mesh, axes) -> dict:
+    """PartitionSpecs for a FlowState sharded over its region axis."""
+    kv = P(axes)                     # [K, V]   arrays
+    kve = P(axes)                    # [K, V, E] arrays
+    rep = P()
+    return dict(
+        nbr_region=kve, nbr_local=kve, rev_slot=kve, emask=kve, vmask=kv,
+        is_boundary=kv, cross_src=rep, cross_dst=rep, cross_group=rep,
+        cross_valid=rep, cf=kve, sink_cf=kv, excess=kv, d=kv, flow_to_t=rep,
+    )
+
+
+def flowstate_shardings(mesh: Mesh, axes) -> FlowState:
+    spec = region_axis_sharding(mesh, axes)
+    return FlowState(**{k: NamedSharding(mesh, v) for k, v in spec.items()})
+
+
+def _one_sweep_local(meta: GraphMeta, cfg: SweepConfig, axes,
+                     state: FlowState, sweep_idx,
+                     exchange: str = "full"):
+    """Per-shard body of one parallel sweep (runs under shard_map).
+
+    ``exchange`` — "full": all-gather the whole label array (baseline);
+    "boundary": exchange only the labels the remote side actually needs
+    (one psum over the flat cross-arc table) — the beyond-paper optimized
+    schedule; see EXPERIMENTS.md §Perf (maxflow pair).
+    """
+    Kl, V, E = state.cf.shape                     # local regions
+    # region offset of this shard (flat index over possibly-multiple axes)
+    idx = jnp.zeros((), _I32)
+    for a in axes:
+        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    offset = idx * Kl
+
+    src, dst = state.cross_src, state.cross_dst
+    dst_local_r0 = dst[:, 0] - offset
+    dst_mine0 = (dst_local_r0 >= 0) & (dst_local_r0 < Kl)
+    dl0 = jnp.clip(dst_local_r0, 0, Kl - 1)
+    src_local_r0 = src[:, 0] - offset
+    src_mine0 = (src_local_r0 >= 0) & (src_local_r0 < Kl)
+    sl0 = jnp.clip(src_local_r0, 0, Kl - 1)
+
+    # ---- boundary label exchange ----
+    if exchange == "full":
+        d_full = jax.lax.all_gather(state.d, axes, axis=0, tiled=True)
+        ghost_d = d_full[state.nbr_region, state.nbr_local]
+    else:
+        # labels of cross-arc destinations only: one [X] psum
+        contrib = jnp.where(dst_mine0, state.d[dl0, dst[:, 1]], 0)
+        dst_label = jax.lax.psum(contrib, axes)                    # [X]
+        ghost_flat = jnp.zeros((Kl * V * E,), _I32).at[
+            (sl0 * V + src[:, 1]) * E + src[:, 2]].max(
+            jnp.where(src_mine0, dst_label, 0), mode="drop")
+        ghost_d = ghost_flat.reshape(Kl, V, E)
+
+    own = offset + jnp.arange(Kl, dtype=_I32)
+    intra = (state.nbr_region == own[:, None, None]) & state.emask
+
+    stage_cap = jnp.where(
+        jnp.asarray(cfg.partial_discharge),
+        jnp.maximum(sweep_idx - 1, -1).astype(_I32),
+        _I32(meta.d_inf_ard))
+
+    if cfg.method == "ard":
+        fn = lambda cf, s, e, g, nl, rs, it, em, vm: ard_discharge_one(
+            cf, s, e, g, nbr_local=nl, rev_slot=rs, intra=it, emask=em,
+            vmask=vm, d_inf=meta.d_inf_ard, stage_cap=stage_cap,
+            max_iters=cfg.engine_max_iters)
+        res = jax.vmap(fn)(state.cf, state.sink_cf, state.excess, ghost_d,
+                           state.nbr_local, state.rev_slot, intra,
+                           state.emask, state.vmask)
+    else:
+        fn = lambda cf, s, e, d, g, nl, rs, it, em, vm: prd_discharge_one(
+            cf, s, e, d, g, nbr_local=nl, rev_slot=rs, intra=it, emask=em,
+            vmask=vm, d_inf=meta.d_inf_prd, max_iters=cfg.engine_max_iters)
+        res = jax.vmap(fn)(state.cf, state.sink_cf, state.excess, state.d,
+                           ghost_d, state.nbr_local, state.rev_slot, intra,
+                           state.emask, state.vmask)
+
+    new_d_local = jnp.maximum(state.d, res.d)
+    cf, sink_cf, excess = res.cf, res.sink_cf, res.excess
+
+    # ---- boundary flow exchange + fusion (Alg. 2 lines 4-6) ----
+    src_mine, sl = src_mine0, sl0
+    dst_mine, dl = dst_mine0, dl0
+    delta_local = jnp.where(src_mine,
+                            res.out_push[sl, src[:, 1], src[:, 2]], 0)
+    if exchange == "full":
+        delta = jax.lax.psum(delta_local, axes)                  # [X]
+        d_full2 = jax.lax.all_gather(new_d_local, axes, axis=0, tiled=True)
+        du = d_full2[src[:, 0], src[:, 1]]
+        dv = d_full2[dst[:, 0], dst[:, 1]]
+    else:
+        # fuse the three [X] exchanges into one stacked psum
+        du_c = jnp.where(src_mine, new_d_local[sl, src[:, 1]], 0)
+        dv_c = jnp.where(dst_mine, new_d_local[dl, dst[:, 1]], 0)
+        packed = jax.lax.psum(
+            jnp.stack([delta_local, du_c, dv_c]), axes)          # [3, X]
+        delta, du, dv = packed[0], packed[1], packed[2]
+    accept = dv <= du + 1
+    acc = jnp.where(accept, delta, 0)
+    rej = delta - acc
+    flat = cf.reshape(-1)
+    flat = flat.at[(dl * V + dst[:, 1]) * E + dst[:, 2]].add(
+        jnp.where(dst_mine, acc, 0), mode="drop")
+    flat = flat.at[(sl * V + src[:, 1]) * E + src[:, 2]].add(
+        jnp.where(src_mine, rej, 0), mode="drop")
+    cf = flat.reshape(Kl, V, E)
+    ef = excess.reshape(-1)
+    ef = ef.at[dl * V + dst[:, 1]].add(jnp.where(dst_mine, acc, 0),
+                                       mode="drop")
+    ef = ef.at[sl * V + src[:, 1]].add(jnp.where(src_mine, rej, 0),
+                                       mode="drop")
+    excess = ef.reshape(Kl, V)
+
+    flow_to_t = state.flow_to_t + jax.lax.psum(res.sink_pushed.sum(), axes)
+
+    # ---- global gap heuristic on boundary labels (psum histogram) ----
+    d_local = new_d_local
+    if cfg.use_global_gap and cfg.method == "ard":
+        d_inf = meta.d_inf_ard
+        cap = min(d_inf + 1, GAP_HIST_CAP)
+        member = state.vmask & (d_local < d_inf) & state.is_boundary
+        vals = jnp.where(member, d_local, 0).reshape(-1)
+        hist = jnp.zeros((cap,), _I32).at[jnp.clip(vals, 0, cap - 1)].add(
+            member.reshape(-1).astype(_I32))
+        hist = jax.lax.psum(hist, axes)
+        idxs = jnp.arange(cap)
+        max_lab = jax.lax.pmax(jnp.max(jnp.where(member, d_local, 0)), axes)
+        is_gap = (hist == 0) & (idxs >= 1) & \
+            (idxs <= jnp.minimum(max_lab, cap - 1))
+        g = jnp.min(jnp.where(is_gap, idxs, INF_LABEL))
+        d_local = jnp.where(state.vmask & (d_local > g) & (d_local < d_inf),
+                            d_inf, d_local).astype(_I32)
+
+    n_active = jax.lax.psum(
+        ((excess > 0) & (d_local < (meta.d_inf_ard if cfg.method == "ard"
+                                    else meta.d_inf_prd))
+         & state.vmask).sum(), axes)
+
+    out = state.replace(cf=cf, sink_cf=sink_cf, excess=excess, d=d_local,
+                        flow_to_t=flow_to_t)
+    return out, n_active
+
+
+def make_sharded_sweep(meta: GraphMeta, mesh: Mesh, cfg: SweepConfig,
+                       axes=("regions",), exchange: str = "full"):
+    """Build the jitted one-sweep SPMD program for a region-sharded mesh.
+
+    ``axes`` — mesh axis name(s) the region dimension is sharded over; for
+    the production pod mesh the regions axis spans ("pod", "data", "model")
+    flattened, i.e. K = 512 regions on 512 chips.
+    """
+    spec = region_axis_sharding(mesh, axes)
+    in_specs = (FlowState(**spec), P())
+    out_specs = (FlowState(**spec), P())
+    body = partial(_one_sweep_local, meta, cfg, axes, exchange=exchange)
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_vma=False)
+    return jax.jit(fn)
+
+
+def maxflow_input_specs(meta: GraphMeta) -> FlowState:
+    """ShapeDtypeStructs of a FlowState for AOT lowering (dry-run)."""
+    K, V, E = meta.num_regions, meta.region_size, meta.max_degree
+    X = meta.num_cross_arcs
+    f = jax.ShapeDtypeStruct
+    return FlowState(
+        nbr_region=f((K, V, E), jnp.int32), nbr_local=f((K, V, E), jnp.int32),
+        rev_slot=f((K, V, E), jnp.int32), emask=f((K, V, E), jnp.bool_),
+        vmask=f((K, V), jnp.bool_), is_boundary=f((K, V), jnp.bool_),
+        cross_src=f((X, 3), jnp.int32), cross_dst=f((X, 3), jnp.int32),
+        cross_group=f((X,), jnp.int32), cross_valid=f((X,), jnp.bool_),
+        cf=f((K, V, E), jnp.int32), sink_cf=f((K, V), jnp.int32),
+        excess=f((K, V), jnp.int32), d=f((K, V), jnp.int32),
+        flow_to_t=f((), jnp.int32))
+
+
+def solve_sharded(meta: GraphMeta, state: FlowState, mesh: Mesh,
+                  cfg: SweepConfig | None = None, axes=("regions",),
+                  max_sweeps: int | None = None, exchange: str = "full"):
+    """Host loop over sharded sweeps (device-resident state)."""
+    cfg = cfg or SweepConfig()
+    sweep_fn = make_sharded_sweep(meta, mesh, cfg, axes, exchange=exchange)
+    shardings = flowstate_shardings(mesh, axes)
+    state = jax.device_put(state, shardings)
+    bound = (2 * meta.num_boundary ** 2 + 1 if cfg.method == "ard"
+             else 2 * meta.num_vertices ** 2)
+    limit = max_sweeps if max_sweeps is not None else bound
+    sweeps = 0
+    while sweeps < limit:
+        state, n_active = sweep_fn(state, jnp.asarray(sweeps, _I32))
+        sweeps += 1
+        if int(n_active) == 0:
+            break
+    return state, sweeps

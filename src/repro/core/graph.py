@@ -1,0 +1,284 @@
+"""Region-partitioned flow-network representation.
+
+The paper (Shekhovtsov & Hlavac 2011) partitions the vertex set of a sparse
+network into K regions; every discharge operation touches exactly one region's
+subnetwork plus its boundary.  On TPU we mirror that structure directly:
+
+* vertices are stored region-blocked, padded to a common region size ``V``;
+* adjacency is a padded ELL layout ``[K, V, E]`` (``E`` = max degree) so that
+  every per-vertex operation is a dense, vectorizable row operation;
+* the source is eliminated by the paper's ``Init`` (saturate all (s,v) edges
+  -> per-vertex ``excess``), the sink is kept as an implicit 0-labelled
+  vertex reachable through a per-vertex terminal capacity ``sink_cf``;
+* every *directed* residual arc (u,v) lives in u's row.  A cross-region arc
+  (u,v), part(u)=r != q=part(v), therefore lives in region r while its
+  reverse (v,u) lives in region q — exactly the paper's region network
+  ``G^R`` in which incoming boundary arcs ``(B^R, R)`` have zero capacity
+  *inside* R (they simply are not R's rows).
+
+All capacities are int32 (the paper uses natural numbers); flow arithmetic is
+exact.  ``INF_CAP`` marks "unbounded" arcs used by region reduction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Large-but-safe sentinel values (int32 arithmetic must never overflow:
+# INF_LABEL + 1 and INF_CAP + INF_CAP must stay < 2**31).
+INF_LABEL = np.int32(2**30)
+INF_CAP = np.int32(2**30)
+
+
+@dataclass(frozen=True)
+class GraphMeta:
+    """Static (host-side) metadata for a region-partitioned network."""
+
+    num_regions: int          # K
+    region_size: int          # V  (padded per-region vertex count)
+    max_degree: int           # E  (padded per-vertex arc slots)
+    num_vertices: int         # n  (true, unpadded)
+    num_boundary: int         # |B|  (vertices incident to inter-region arcs)
+    num_cross_arcs: int       # X  (directed inter-region arcs, padded table)
+    num_ghost_groups: int     # distinct (region, adjacent-ghost) pairs
+    d_inf_ard: int            # |B|      (ARD label ceiling, paper Sec. 4.1)
+    d_inf_prd: int            # n        (PRD label ceiling, paper Sec. 2)
+
+    def __post_init__(self):
+        assert self.num_regions >= 1
+        assert self.region_size >= 1
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class FlowState:
+    """Device-resident mutable state of the solver (a JAX pytree).
+
+    Shapes: K = num_regions, V = region_size, E = max_degree,
+    X = num_cross_arcs (flattened inter-region arc table).
+    """
+
+    # --- static topology (never mutated) ---
+    nbr_region: jax.Array    # i32[K,V,E] neighbour's region id (== own for intra)
+    nbr_local: jax.Array     # i32[K,V,E] neighbour's local vertex id
+    rev_slot: jax.Array      # i32[K,V,E] slot of the reverse arc in nbr's row
+    emask: jax.Array         # bool[K,V,E] valid arc slot
+    vmask: jax.Array         # bool[K,V] valid vertex
+    is_boundary: jax.Array   # bool[K,V] vertex in the boundary set B
+    # flat cross-arc table: for cross arc x: (region,local,slot) of source row
+    cross_src: jax.Array     # i32[X,3]
+    cross_dst: jax.Array     # i32[X,3]  (row holding the reverse arc)
+    cross_group: jax.Array   # i32[X]    id of the (src_region, dst_vertex)
+    #                                    pair — "ghost w as seen from R"
+    cross_valid: jax.Array   # bool[X]   padded-entry mask
+    # --- mutable flow state ---
+    cf: jax.Array            # i32[K,V,E] residual capacity of each arc
+    sink_cf: jax.Array       # i32[K,V]  residual capacity of the t-link
+    excess: jax.Array        # i32[K,V]  current excess e_f(v)
+    d: jax.Array             # i32[K,V]  distance labels
+    flow_to_t: jax.Array     # i32[]     |f| — total flow absorbed by the sink
+
+    def active(self, d_inf: int) -> jax.Array:
+        """Active vertices w.r.t. (f, d): positive excess and d < d_inf."""
+        return (self.excess > 0) & (self.d < d_inf) & self.vmask
+
+    def replace(self, **kw) -> "FlowState":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class Problem:
+    """Host-side problem description before region blocking."""
+
+    num_vertices: int
+    edges: np.ndarray        # i64[m, 2]  undirected pairs (u, v), u != v
+    cap_fwd: np.ndarray      # i32[m]     capacity u->v
+    cap_bwd: np.ndarray      # i32[m]     capacity v->u
+    excess: np.ndarray       # i32[n]     source-side terminal mass (paper Init)
+    sink_cap: np.ndarray     # i32[n]     t-link capacity
+
+
+def _check_problem(p: Problem) -> None:
+    n, m = p.num_vertices, len(p.edges)
+    assert p.edges.shape == (m, 2)
+    assert p.cap_fwd.shape == (m,) and p.cap_bwd.shape == (m,)
+    assert p.excess.shape == (n,) and p.sink_cap.shape == (n,)
+    assert (p.cap_fwd >= 0).all() and (p.cap_bwd >= 0).all()
+    assert (p.excess >= 0).all() and (p.sink_cap >= 0).all()
+    if m:
+        assert p.edges.min() >= 0 and p.edges.max() < n
+        assert (p.edges[:, 0] != p.edges[:, 1]).all(), "self loops not allowed"
+
+
+@dataclass(frozen=True)
+class Layout:
+    """Host-side mapping between flat vertex ids and (region, local) slots."""
+
+    part: np.ndarray        # i64[n] region of each vertex
+    local_id: np.ndarray    # i64[n] slot within the region
+
+    def to_flat(self, arr_kv: np.ndarray) -> np.ndarray:
+        """Gather a [K,V] per-slot array back to flat vertex order."""
+        return np.asarray(arr_kv)[self.part, self.local_id]
+
+
+def build(problem: Problem, part: np.ndarray) -> tuple[GraphMeta, FlowState, "Layout"]:
+    """Block a flat problem into the region-partitioned device layout.
+
+    ``part[v]`` gives the region id of vertex v (0..K-1).  Pure numpy; runs
+    once on the host (the paper's ``splitter`` tool, Sec. 5.3).
+    """
+    _check_problem(problem)
+    n = problem.num_vertices
+    part = np.asarray(part, dtype=np.int64)
+    assert part.shape == (n,)
+    K = int(part.max()) + 1 if n else 1
+
+    # local ids within each region
+    local_id = np.zeros(n, dtype=np.int64)
+    region_count = np.zeros(K, dtype=np.int64)
+    order = np.argsort(part, kind="stable")
+    for v in order:
+        r = part[v]
+        local_id[v] = region_count[r]
+        region_count[r] += 1
+    V = max(1, int(region_count.max()))
+
+    # per-vertex directed arc lists (both directions of every undirected edge)
+    u_arr = problem.edges[:, 0]
+    v_arr = problem.edges[:, 1]
+    deg = np.zeros(n, dtype=np.int64)
+    np.add.at(deg, u_arr, 1)
+    np.add.at(deg, v_arr, 1)
+    E = max(1, int(deg.max()) if n else 1)
+
+    nbr_region = np.full((K, V, E), 0, dtype=np.int32)
+    nbr_local = np.full((K, V, E), 0, dtype=np.int32)
+    rev_slot = np.zeros((K, V, E), dtype=np.int32)
+    emask = np.zeros((K, V, E), dtype=bool)
+    cf = np.zeros((K, V, E), dtype=np.int32)
+
+    slot_ctr = np.zeros(n, dtype=np.int64)
+    m = len(problem.edges)
+    slot_u = np.zeros(m, dtype=np.int64)
+    slot_v = np.zeros(m, dtype=np.int64)
+    # first pass: assign slots
+    for i in range(m):
+        u, v = u_arr[i], v_arr[i]
+        slot_u[i] = slot_ctr[u]; slot_ctr[u] += 1
+        slot_v[i] = slot_ctr[v]; slot_ctr[v] += 1
+    # second pass: fill rows (vectorised where possible)
+    ru, lu = part[u_arr], local_id[u_arr]
+    rv, lv = part[v_arr], local_id[v_arr]
+    nbr_region[ru, lu, slot_u] = rv.astype(np.int32)
+    nbr_local[ru, lu, slot_u] = lv.astype(np.int32)
+    rev_slot[ru, lu, slot_u] = slot_v.astype(np.int32)
+    emask[ru, lu, slot_u] = True
+    cf[ru, lu, slot_u] = problem.cap_fwd
+    nbr_region[rv, lv, slot_v] = ru.astype(np.int32)
+    nbr_local[rv, lv, slot_v] = lu.astype(np.int32)
+    rev_slot[rv, lv, slot_v] = slot_u.astype(np.int32)
+    emask[rv, lv, slot_v] = True
+    cf[rv, lv, slot_v] = problem.cap_bwd
+
+    vmask = np.zeros((K, V), dtype=bool)
+    vmask[part, local_id] = True
+
+    sink_cf = np.zeros((K, V), dtype=np.int32)
+    sink_cf[part, local_id] = problem.sink_cap
+    excess = np.zeros((K, V), dtype=np.int32)
+    excess[part, local_id] = problem.excess
+
+    # boundary set B: endpoints of inter-region edges
+    cross_edge = ru != rv
+    is_boundary = np.zeros((K, V), dtype=bool)
+    if cross_edge.any():
+        cu = u_arr[cross_edge]; cv = v_arr[cross_edge]
+        is_boundary[part[cu], local_id[cu]] = True
+        is_boundary[part[cv], local_id[cv]] = True
+    num_boundary = int(is_boundary.sum())
+
+    # flat directed cross-arc table.  Invariant: arcs come in mutual-reverse
+    # pairs at indices (2i, 2i+1), so pair(x) = x ^ 1.
+    src_list, dst_list = [], []
+    idx = np.nonzero(cross_edge)[0]
+    for i in idx:
+        u, v = u_arr[i], v_arr[i]
+        a = (part[u], local_id[u], slot_u[i])
+        b = (part[v], local_id[v], slot_v[i])
+        src_list += [a, b]
+        dst_list += [b, a]
+    X = max(1, len(src_list))
+    cross_src = np.zeros((X, 3), dtype=np.int32)
+    cross_dst = np.zeros((X, 3), dtype=np.int32)
+    cross_group = np.zeros(X, dtype=np.int32)
+    cross_valid = np.zeros(X, dtype=bool)
+    num_groups = 1
+    if src_list:
+        cross_src[: len(src_list)] = np.asarray(src_list, dtype=np.int32)
+        cross_dst[: len(dst_list)] = np.asarray(dst_list, dtype=np.int32)
+        cross_valid[: len(src_list)] = True
+        # group id of the (viewing region, ghost vertex) pair: arcs from R to
+        # the same boundary vertex w share a group — region reduction and the
+        # boundary heuristics aggregate per ghost, not per arc.
+        keys = {}
+        for x in range(len(src_list)):
+            k = (src_list[x][0], dst_list[x][0], dst_list[x][1])
+            cross_group[x] = keys.setdefault(k, len(keys))
+        num_groups = max(1, len(keys))
+
+    meta = GraphMeta(
+        num_regions=K,
+        region_size=V,
+        max_degree=E,
+        num_vertices=n,
+        num_boundary=num_boundary,
+        num_cross_arcs=X,
+        num_ghost_groups=num_groups,
+        d_inf_ard=max(1, num_boundary),
+        d_inf_prd=max(1, n),
+    )
+    state = FlowState(
+        nbr_region=jnp.asarray(nbr_region),
+        nbr_local=jnp.asarray(nbr_local),
+        rev_slot=jnp.asarray(rev_slot),
+        emask=jnp.asarray(emask),
+        vmask=jnp.asarray(vmask),
+        is_boundary=jnp.asarray(is_boundary),
+        cross_src=jnp.asarray(cross_src),
+        cross_dst=jnp.asarray(cross_dst),
+        cross_group=jnp.asarray(cross_group),
+        cross_valid=jnp.asarray(cross_valid),
+        cf=jnp.asarray(cf),
+        sink_cf=jnp.asarray(sink_cf),
+        excess=jnp.asarray(excess),
+        d=jnp.zeros((K, V), dtype=jnp.int32),
+        flow_to_t=jnp.zeros((), dtype=jnp.int32),
+    )
+    return meta, state, Layout(part=part, local_id=local_id)
+
+
+def init_labels(meta: GraphMeta, state: FlowState) -> FlowState:
+    """Paper's ``Init``: d := 0 everywhere (source already eliminated)."""
+    return state.replace(d=jnp.zeros_like(state.d))
+
+
+def intra_mask(state: FlowState) -> jax.Array:
+    """bool[K,V,E] — arc stays within its own region."""
+    K = state.nbr_region.shape[0]
+    own = jnp.arange(K, dtype=state.nbr_region.dtype)[:, None, None]
+    return (state.nbr_region == own) & state.emask
+
+
+def flow_value(state: FlowState) -> jax.Array:
+    return state.flow_to_t
+
+
+def total_excess(state: FlowState) -> jax.Array:
+    return jnp.sum(jnp.where(state.vmask, state.excess, 0))

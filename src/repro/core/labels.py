@@ -1,0 +1,135 @@
+"""Distance labelings: region-relabel (Alg. 3) and gap heuristics (Alg. 4).
+
+Two label semantics coexist in the paper and here:
+
+* PRD labels lower-bound the *hop* distance ``d*`` to the sink
+  (ceiling ``d_inf_prd = n``);
+* ARD labels lower-bound the *region* distance ``d*B`` — the number of
+  inter-region boundary crossings on a residual path to the sink
+  (ceiling ``d_inf_ard = |B|``, paper Sec. 4.1).
+
+Both region-relabel variants are one vectorized Bellman-Ford fixpoint over
+the region's residual arcs: ARD propagates labels at zero cost through
+intra-region arcs (Alg. 3 without the `d_current += 1` line), PRD at unit
+cost.  Gap heuristics operate on label histograms — boundary-only bins for
+ARD (sufficient per Sec. 5.3), all-vertex bins for PRD.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import FlowState, GraphMeta, INF_LABEL, intra_mask
+
+_I32 = jnp.int32
+
+# static histogram cap for gap heuristics (labels above the cap are simply
+# not gap-checked; the heuristic stays sound)
+GAP_HIST_CAP = 4096
+
+
+def gather_ghost_labels(state: FlowState) -> jax.Array:
+    """i32[K,V,E] — label of every arc's destination vertex (global gather).
+
+    In the distributed runtime this is the per-sweep boundary label exchange;
+    under pjit it lowers to an all-gather of the (small) label array.
+    """
+    return state.d[state.nbr_region, state.nbr_local]
+
+
+def _region_relabel_one(cf, sink_cf, ghost_d, *, nbr_local, intra, emask,
+                        vmask, d_inf, hop_cost: int):
+    """Alg. 3 on one region network (vmapped over regions by the caller)."""
+    V, E = cf.shape
+    d_inf = jnp.asarray(d_inf, _I32)
+    cross = emask & ~intra
+    seed_ok = cross & (cf > 0) & (ghost_d < d_inf)
+    base = jnp.where(seed_ok, ghost_d + 1, INF_LABEL).min(axis=1)
+    sink_lab = _I32(0) if hop_cost == 0 else _I32(1)
+    base = jnp.where(sink_cf > 0, jnp.minimum(base, sink_lab), base)
+    base = jnp.where(vmask, base, INF_LABEL)
+
+    def body(carry):
+        lab, _ = carry
+        nlab = jnp.where(intra & emask & (cf > 0), lab[nbr_local], INF_LABEL)
+        relaxed = jnp.minimum(base, nlab.min(axis=1) + hop_cost)
+        relaxed = jnp.minimum(lab, jnp.where(vmask, relaxed, INF_LABEL))
+        return relaxed, (relaxed != lab).any()
+
+    lab, _ = jax.lax.while_loop(lambda c: c[1], body, (base, jnp.asarray(True)))
+    return jnp.minimum(lab, d_inf)
+
+
+def region_relabel(meta: GraphMeta, state: FlowState, *, ard: bool) -> FlowState:
+    """Recompute labels of every region from the boundary labels (Alg. 3).
+
+    Returns labels ``max(d, relabel(d))`` — the max of two valid labelings is
+    valid (paper Sec. 6.1), and monotony (d' >= d) is required by the sweep
+    complexity proofs.
+    """
+    ghost_d = gather_ghost_labels(state)
+    intra = intra_mask(state)
+    d_inf = meta.d_inf_ard if ard else meta.d_inf_prd
+    fn = jax.vmap(
+        lambda cf, s, g, nl, it, em, vm: _region_relabel_one(
+            cf, s, g, nbr_local=nl, intra=it, emask=em, vmask=vm,
+            d_inf=d_inf, hop_cost=0 if ard else 1))
+    new_d = fn(state.cf, state.sink_cf, ghost_d, state.nbr_local, intra,
+               state.emask, state.vmask)
+    return state.replace(d=jnp.maximum(state.d, new_d))
+
+
+def global_gap(meta: GraphMeta, state: FlowState, *, ard: bool) -> FlowState:
+    """Global gap heuristic (Sec. 5.1).
+
+    If no vertex carries label g (0 < g < d_inf) then every vertex with a
+    label above g cannot reach the sink and is raised to d_inf.  For ARD the
+    histogram over *boundary* labels suffices (Sec. 5.3); PRD uses all
+    vertices.
+    """
+    d_inf = meta.d_inf_ard if ard else meta.d_inf_prd
+    cap = min(d_inf + 1, GAP_HIST_CAP)
+    member = state.vmask & (state.d < d_inf)
+    if ard:
+        member = member & state.is_boundary
+    vals = jnp.where(member, state.d, 0).reshape(-1)
+    w = member.reshape(-1).astype(_I32)
+    hist = jnp.zeros((cap,), _I32).at[jnp.clip(vals, 0, cap - 1)].add(w)
+    idx = jnp.arange(cap)
+    max_lab = jnp.max(jnp.where(member, state.d, 0))
+    is_gap = (hist == 0) & (idx >= 1) & (idx <= jnp.minimum(max_lab, cap - 1))
+    g = jnp.min(jnp.where(is_gap, idx, INF_LABEL))
+    new_d = jnp.where(
+        state.vmask & (state.d > g) & (state.d < d_inf), d_inf, state.d)
+    return state.replace(d=new_d.astype(_I32))
+
+
+def region_gap_prd(meta: GraphMeta, state: FlowState, region: jax.Array) -> FlowState:
+    """Region gap heuristic for PRD (Alg. 4), applied to one region.
+
+    If no vertex of R has label g, vertices of R with g < d(v) < d_next are
+    raised to d_next + 1 where d_next is the smallest boundary label > g.
+    """
+    d_inf = meta.d_inf_prd
+    cap = min(d_inf + 1, GAP_HIST_CAP)
+    K, V = state.d.shape
+    in_r = (jnp.arange(K)[:, None] == region) & state.vmask
+    member = in_r & (state.d < d_inf)
+    vals = jnp.where(member, state.d, 0).reshape(-1)
+    w = member.reshape(-1).astype(_I32)
+    hist = jnp.zeros((cap,), _I32).at[jnp.clip(vals, 0, cap - 1)].add(w)
+    idx = jnp.arange(cap)
+    max_lab = jnp.max(jnp.where(member, state.d, 0))
+    is_gap = (hist == 0) & (idx >= 1) & (idx <= jnp.minimum(max_lab, cap - 1))
+    g = jnp.min(jnp.where(is_gap, idx, INF_LABEL))
+    # smallest boundary label above the gap (paper: d_next; d_inf if none)
+    ghost_d = gather_ghost_labels(state)
+    cross = state.emask & ~intra_mask(state)
+    r_cross = cross & in_r[:, :, None]
+    bnd = jnp.where(r_cross & (ghost_d > g), ghost_d, INF_LABEL)
+    d_next = jnp.minimum(jnp.min(bnd), d_inf)
+    raise_mask = member & (state.d > g) & (state.d < d_next)
+    new_d = jnp.where(raise_mask,
+                      jnp.minimum(d_next + 1, d_inf), state.d)
+    return state.replace(d=new_d.astype(_I32))

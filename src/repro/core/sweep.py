@@ -1,0 +1,316 @@
+"""Generic sequential (Alg. 1) and parallel (Alg. 2) region-discharge sweeps.
+
+A *sweep* is one pass in which every region is discharged once — the paper's
+complexity currency (≈ disk I/O in streaming mode, ≈ network messages in
+parallel mode, ≈ ICI collective traffic here).
+
+Parallel sweeps discharge all regions concurrently on frozen boundary labels
+and then *fuse* boundary flow with the conflict rule of Alg. 2:
+
+    alpha(u, v) = [ d'(u) <= d'(v) + 1 ]
+    flow u->v is accepted iff alpha(v, u)   (the reverse arc stays valid)
+
+Rejected flow is refunded to the sender's excess and residual.  Sequential
+sweeps discharge regions one at a time, applying boundary flow immediately
+(no conflicts by construction).
+
+The driver also hosts the optional heuristics of Secs. 5-6 (global gap,
+boundary-relabel, partial discharges) and the per-sweep accounting used by
+the paper's tables (sweeps, boundary bytes, engine iterations, page I/O).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import heuristics
+from repro.core.ard import ard_discharge_one
+from repro.core.graph import FlowState, GraphMeta, intra_mask
+from repro.core.labels import (gather_ghost_labels, global_gap,
+                               region_relabel)
+from repro.core.prd import prd_discharge_one
+
+_I32 = jnp.int32
+
+
+@dataclass(frozen=True)
+class SweepConfig:
+    """Solver configuration.
+
+    method              — "ard" (paper's contribution) or "prd" (baseline).
+    parallel            — Alg. 2 (all regions concurrently + fusion) vs Alg. 1.
+    partial_discharge   — Sec. 6.2: sweep s only augments to labels < s.
+    use_global_gap      — Sec. 5.1 global gap heuristic each sweep.
+    use_boundary_relabel— Sec. 6.1 boundary-relabel heuristic each sweep.
+    max_sweeps          — hard cap (defaults to the theoretical bound).
+    engine_max_iters    — safety cap for the inner engine (None = unbounded).
+    """
+
+    method: str = "ard"
+    parallel: bool = True
+    partial_discharge: bool = False
+    use_global_gap: bool = True
+    use_boundary_relabel: bool = False
+    max_sweeps: int | None = None
+    engine_max_iters: int | None = None
+
+    def __post_init__(self):
+        assert self.method in ("ard", "prd")
+
+
+@dataclass
+class SweepStats:
+    sweeps: int = 0
+    engine_iters: int = 0
+    boundary_bytes: int = 0      # flow+label messages over the cut (paper: I/O)
+    page_bytes: int = 0          # streaming-mode region load/store bytes
+    regions_discharged: int = 0
+    flow_curve: list = dataclasses.field(default_factory=list)
+    active_curve: list = dataclasses.field(default_factory=list)
+
+
+def _d_inf(meta: GraphMeta, cfg: SweepConfig) -> int:
+    return meta.d_inf_ard if cfg.method == "ard" else meta.d_inf_prd
+
+
+def _discharge_all(meta: GraphMeta, state: FlowState, cfg: SweepConfig,
+                   ghost_d: jax.Array, stage_cap) :
+    """vmap the configured discharge over all regions."""
+    intra = intra_mask(state)
+    if cfg.method == "ard":
+        fn = lambda cf, s, e, g, nl, rs, it, em, vm: ard_discharge_one(
+            cf, s, e, g, nbr_local=nl, rev_slot=rs, intra=it, emask=em,
+            vmask=vm, d_inf=meta.d_inf_ard, stage_cap=stage_cap,
+            max_iters=cfg.engine_max_iters)
+        return jax.vmap(fn)(state.cf, state.sink_cf, state.excess, ghost_d,
+                            state.nbr_local, state.rev_slot, intra,
+                            state.emask, state.vmask)
+    fn = lambda cf, s, e, d, g, nl, rs, it, em, vm: prd_discharge_one(
+        cf, s, e, d, g, nbr_local=nl, rev_slot=rs, intra=it, emask=em,
+        vmask=vm, d_inf=meta.d_inf_prd, max_iters=cfg.engine_max_iters)
+    return jax.vmap(fn)(state.cf, state.sink_cf, state.excess, state.d,
+                        ghost_d, state.nbr_local, state.rev_slot, intra,
+                        state.emask, state.vmask)
+
+
+def _apply_cross_flow(state: FlowState, out_push: jax.Array,
+                      accept: jax.Array) -> FlowState:
+    """Apply fused boundary flow through the flat cross-arc table.
+
+    ``accept[x]`` — Alg. 2 line 5 decision for cross arc x.  Accepted flow
+    raises the receiver's reverse residual + excess; rejected flow is
+    refunded to the sender (residual and excess), matching the paper's
+    "do not allow the flow to cross the boundary in one of the directions".
+    """
+    K, V, E = state.cf.shape
+    src, dst = state.cross_src, state.cross_dst
+    delta = out_push[src[:, 0], src[:, 1], src[:, 2]]
+    acc = jnp.where(accept, delta, 0)
+    rej = delta - acc
+    cf = state.cf
+    flat = cf.reshape(-1)
+    dst_idx = (dst[:, 0] * V + dst[:, 1]) * E + dst[:, 2]
+    src_idx = (src[:, 0] * V + src[:, 1]) * E + src[:, 2]
+    flat = flat.at[dst_idx].add(acc, mode="drop")
+    flat = flat.at[src_idx].add(rej, mode="drop")
+    cf = flat.reshape(K, V, E)
+    excess = state.excess
+    eflat = excess.reshape(-1)
+    eflat = eflat.at[dst[:, 0] * V + dst[:, 1]].add(acc, mode="drop")
+    eflat = eflat.at[src[:, 0] * V + src[:, 1]].add(rej, mode="drop")
+    excess = eflat.reshape(K, V)
+    return state.replace(cf=cf, excess=excess)
+
+
+@partial(jax.jit, static_argnums=(0, 2))
+def parallel_sweep(meta: GraphMeta, state: FlowState, cfg: SweepConfig,
+                   sweep_idx: jax.Array):
+    """One sweep of Alg. 2: concurrent discharges + label/flow fusion."""
+    ghost_d = gather_ghost_labels(state)
+    stage_cap = jnp.where(
+        jnp.asarray(cfg.partial_discharge),
+        jnp.maximum(sweep_idx - 1, -1).astype(_I32),
+        _I32(meta.d_inf_ard))
+    res = _discharge_all(meta, state, cfg, ghost_d, stage_cap)
+    new = state.replace(cf=res.cf, sink_cf=res.sink_cf, excess=res.excess,
+                        d=jnp.maximum(state.d, res.d),
+                        flow_to_t=state.flow_to_t + res.sink_pushed.sum())
+    # ---- fusion (Alg. 2 lines 4-6) ----
+    src, dst = new.cross_src, new.cross_dst
+    du = new.d[src[:, 0], src[:, 1]]
+    dv = new.d[dst[:, 0], dst[:, 1]]
+    accept = dv <= du + 1          # alpha(v, u): reverse arc stays valid
+    new = _apply_cross_flow(new, res.out_push, accept)
+    if cfg.use_boundary_relabel and cfg.method == "ard":
+        new = heuristics.boundary_relabel(meta, new)
+    if cfg.use_global_gap:
+        new = global_gap(meta, new, ard=cfg.method == "ard")
+    iters = res.engine_iters.sum()
+    return new, iters
+
+
+@partial(jax.jit, static_argnums=(0, 2))
+def sequential_sweep(meta: GraphMeta, state: FlowState, cfg: SweepConfig,
+                     sweep_idx: jax.Array):
+    """One sweep of Alg. 1: discharge regions one by one, apply immediately.
+
+    Regions with no active vertex are skipped (paper Sec. 5.3) — the
+    discharge engine exits in O(1) for them and the page-I/O accounting in
+    ``solve`` only counts discharged regions.
+    """
+    K, V, E = state.cf.shape
+    d_inf = _d_inf(meta, cfg)
+    stage_cap_all = jnp.where(
+        jnp.asarray(cfg.partial_discharge),
+        jnp.maximum(sweep_idx - 1, -1).astype(_I32),
+        _I32(meta.d_inf_ard))
+
+    def body(k, carry):
+        state, iters, discharged = carry
+        intra = intra_mask(state)
+        ghost_d = gather_ghost_labels(state)
+        sl = lambda a: jax.lax.dynamic_index_in_dim(a, k, 0, keepdims=False)
+        active = ((sl(state.excess) > 0) & (sl(state.d) < d_inf)
+                  & sl(state.vmask)).any()
+
+        def run(state):
+            if cfg.method == "ard":
+                res = ard_discharge_one(
+                    sl(state.cf), sl(state.sink_cf), sl(state.excess),
+                    sl(ghost_d), nbr_local=sl(state.nbr_local),
+                    rev_slot=sl(state.rev_slot), intra=sl(intra),
+                    emask=sl(state.emask), vmask=sl(state.vmask),
+                    d_inf=meta.d_inf_ard, stage_cap=stage_cap_all,
+                    max_iters=cfg.engine_max_iters)
+            else:
+                res = prd_discharge_one(
+                    sl(state.cf), sl(state.sink_cf), sl(state.excess),
+                    sl(state.d), sl(ghost_d), nbr_local=sl(state.nbr_local),
+                    rev_slot=sl(state.rev_slot), intra=sl(intra),
+                    emask=sl(state.emask), vmask=sl(state.vmask),
+                    d_inf=meta.d_inf_prd, max_iters=cfg.engine_max_iters)
+            upd = lambda a, v: jax.lax.dynamic_update_index_in_dim(a, v, k, 0)
+            st = state.replace(
+                cf=upd(state.cf, res.cf),
+                sink_cf=upd(state.sink_cf, res.sink_cf),
+                excess=upd(state.excess, res.excess),
+                d=upd(state.d, jnp.maximum(sl(state.d), res.d)),
+                flow_to_t=state.flow_to_t + res.sink_pushed)
+            # apply this region's boundary pushes immediately (no conflicts)
+            out_push = jnp.zeros_like(state.cf).at[k].set(res.out_push)
+            src = st.cross_src
+            mine = src[:, 0] == k
+            st = _apply_cross_flow(st, out_push, accept=mine)
+            if cfg.use_global_gap:
+                st = global_gap(meta, st, ard=cfg.method == "ard")
+            return st, res.engine_iters
+
+        def skip(state):
+            return state, jnp.zeros((), _I32)
+
+        state, it = jax.lax.cond(active, run, skip, state)
+        return state, iters + it, discharged + active.astype(_I32)
+
+    state, iters, discharged = jax.lax.fori_loop(
+        0, K, body, (state, jnp.zeros((), _I32), jnp.zeros((), _I32)))
+    if cfg.use_boundary_relabel and cfg.method == "ard":
+        state = heuristics.boundary_relabel(meta, state)
+    return state, iters, discharged
+
+
+def num_active(meta: GraphMeta, state: FlowState, cfg: SweepConfig) -> jax.Array:
+    return state.active(_d_inf(meta, cfg)).sum()
+
+
+def sweep_bound(meta: GraphMeta, cfg: SweepConfig) -> int:
+    """Theoretical sweep bound: 2|B|^2 + 1 for ARD, 2 n^2 for PRD."""
+    if cfg.method == "ard":
+        return 2 * meta.num_boundary * meta.num_boundary + 1
+    return 2 * meta.num_vertices * meta.num_vertices
+
+
+def solve(meta: GraphMeta, state: FlowState, cfg: SweepConfig | None = None):
+    """Run sweeps until no active vertex remains (maximum preflow reached).
+
+    Returns (state, SweepStats).  The host-level loop is intentional: each
+    sweep is one jitted device program and the paper's statistics (sweeps,
+    I/O bytes) are accumulated between programs, exactly like the streaming
+    solver accounts disk I/O between region loads.
+    """
+    cfg = cfg or SweepConfig()
+    stats = SweepStats()
+    bound = sweep_bound(meta, cfg)
+    max_sweeps = cfg.max_sweeps if cfg.max_sweeps is not None else bound
+    # bytes of one region page (cf + labels + excess + topology) — paper's
+    # streaming unit; boundary message = 4B flow + 4B label per cross arc.
+    page_bytes = (state.cf.itemsize * state.cf[0].size * 4
+                  + 4 * state.excess[0].size * 4)
+    msg_bytes = 8 * meta.num_cross_arcs
+
+    sweep_idx = 0
+    while sweep_idx < max_sweeps:
+        n_act = int(num_active(meta, state, cfg))
+        stats.active_curve.append(n_act)
+        if n_act == 0:
+            break
+        if cfg.parallel:
+            state, iters = parallel_sweep(meta, state, cfg,
+                                          jnp.asarray(sweep_idx, _I32))
+            discharged = meta.num_regions
+        else:
+            state, iters, disc = sequential_sweep(meta, state, cfg,
+                                                  jnp.asarray(sweep_idx, _I32))
+            discharged = int(disc)
+        stats.sweeps += 1
+        stats.engine_iters += int(iters)
+        stats.regions_discharged += discharged
+        stats.page_bytes += discharged * page_bytes
+        stats.boundary_bytes += msg_bytes
+        stats.flow_curve.append(int(state.flow_to_t))
+        sweep_idx += 1
+    return state, stats
+
+
+def extract_cut(meta: GraphMeta, state: FlowState) -> jax.Array:
+    """Minimum cut (bool[K,V]: True = sink side T = {v : v -> t in G_f}).
+
+    Global residual-reachability fixpoint — the paper's final labeling
+    sweeps, collapsed into one exact computation.
+    """
+    @jax.jit
+    def run(state: FlowState):
+        def body(carry):
+            reach, _ = carry
+            nbr_reach = reach[state.nbr_region, state.nbr_local]
+            ok = (state.cf > 0) & state.emask & nbr_reach
+            new = (state.sink_cf > 0) | ok.any(axis=2)
+            new = (new | reach) & state.vmask
+            return new, (new != reach).any()
+
+        init = (state.sink_cf > 0) & state.vmask
+        reach, _ = jax.lax.while_loop(lambda c: c[1], body,
+                                      (init, jnp.asarray(True)))
+        return reach
+
+    return run(state)
+
+
+def cut_value(meta: GraphMeta, state0: FlowState, sink_side: jax.Array) -> jax.Array:
+    """Cost of the cut (C, C̄) with C̄ = sink_side, in the *initial* network.
+
+    cost = sum_{v in C̄} e(v) + sum_{v in C} sink_cap(v)
+         + sum of cap(u,v) over arcs u in C, v in C̄.
+    """
+    src_side = ~sink_side & state0.vmask
+    e_term = jnp.sum(jnp.where(sink_side & state0.vmask, state0.excess, 0))
+    t_term = jnp.sum(jnp.where(src_side, state0.sink_cf, 0))
+    nbr_sink = sink_side[state0.nbr_region, state0.nbr_local]
+    arc_cut = (src_side[:, :, None] & nbr_sink & state0.emask)
+    c_term = jnp.sum(jnp.where(arc_cut, state0.cf, 0))
+    return e_term + t_term + c_term

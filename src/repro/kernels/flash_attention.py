@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: blockwise online-softmax (flash) attention.
+
+The LM-side compute hot spot.  Standard TPU tiling:
+
+  * grid = (batch*heads, q_blocks, kv_blocks), kv fastest — the VMEM scratch
+    accumulator (acc, m, l) persists across the kv dimension and the output
+    block is written once at the last kv step;
+  * block shapes default to (Bq, D) = (256, head_dim) and Bk = 512: with
+    f32 scratch acc 256x128 = 128 KiB plus the q/k/v tiles, comfortably
+    inside VMEM with double buffering, and the 128-wide lane dimension on D
+    keeps the MXU fed;
+  * causal masking happens on global positions with a query offset so the
+    same kernel serves prefill (Sq = Sk) and decode (Sq = 1, Sk = cache).
+
+Validated against kernels/ref.py attention_ref in interpret mode across a
+shape/dtype sweep; used by the model stack when cfg.use_flash_attention is
+set (the dry-run default keeps the pure-jnp path so cost_analysis sees the
+attention FLOPs — Pallas custom calls are opaque to XLA cost analysis; see
+EXPERIMENTS.md §Roofline).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, q_off: int, sk_real: int):
+    iq, ik = pl.program_id(1), pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # [Bq, D]
+    k = k_ref[0].astype(jnp.float32)                  # [Bk, D]
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [Bq, Bk]
+    bq, bk = s.shape
+    kj = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kj < sk_real                               # padded keys are dead
+    if causal:
+        qp = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        mask &= kj <= qp + q_off
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = l_ref[...]
+        out = jnp.where(l[:, None] > 0, acc_ref[...] / l[:, None], 0.0)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 256,
+                    block_k: int = 512, interpret: bool = True):
+    """q [B,H,Sq,D], k/v [B,Hkv,Sk,D] (GQA folded by repeat), same dtype out."""
+    B, H, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    if Hkv != H:
+        assert H % Hkv == 0
+        k = jnp.repeat(k, H // Hkv, axis=1)
+        v = jnp.repeat(v, H // Hkv, axis=1)
+    qf = q.reshape(B * H, Sq, D)
+    kf = k.reshape(B * H, Sk, D)
+    vf = v.reshape(B * H, Sk, D)
+
+    bq = min(block_q, max(Sq, 8))
+    bk = min(block_k, Sk)
+    pad_q = (-Sq) % bq
+    pad_k = (-Sk) % bk
+    # queries pad at the FRONT so real queries keep their causal offsets;
+    # keys pad at the back and are masked via sk_real.
+    qf = jnp.pad(qf, ((0, 0), (pad_q, 0), (0, 0)))
+    kf = jnp.pad(kf, ((0, 0), (0, pad_k), (0, 0)))
+    vf = jnp.pad(vf, ((0, 0), (0, pad_k), (0, 0)))
+    # padded query index p maps to real position p - pad_q; causal bound:
+    # kj <= (p - pad_q) + (Sk - Sq)
+    q_off = Sk - Sq - pad_q
+
+    BH, Sqp, _ = qf.shape
+    Skp = kf.shape[1]
+    grid = (BH, Sqp // bq, Skp // bk)
+    kernel = functools.partial(_flash_kernel, scale=1.0 / (D ** 0.5),
+                               causal=causal, q_off=q_off, sk_real=Sk)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, iq, ik: (b, ik, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, iq, ik: (b, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, iq, ik: (b, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sqp, D), qf.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out[:, pad_q:, :].reshape(B, H, Sq, D)

@@ -1,0 +1,34 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU hosts (this container) and False when
+a TPU is attached — the kernels are written for TPU BlockSpec tiling and
+validated on CPU via the Pallas interpreter against kernels/ref.py.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.push_relabel import push_relabel_phase as _pr_phase
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 256,
+                    block_k: int = 512, interpret: bool | None = None):
+    if interpret is None:
+        interpret = default_interpret()
+    return _flash(q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+                  interpret=interpret)
+
+
+def push_relabel_phase(lab, cf, sink_cf, excess, nbr, intra, pushable,
+                       cross_lab, d_inf, *, block_v: int = 256,
+                       interpret: bool | None = None):
+    if interpret is None:
+        interpret = default_interpret()
+    return _pr_phase(lab, cf, sink_cf, excess, nbr, intra, pushable,
+                     cross_lab, d_inf, block_v=block_v, interpret=interpret)

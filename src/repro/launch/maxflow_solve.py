@@ -1,0 +1,77 @@
+"""Distributed mincut launcher.
+
+    PYTHONPATH=src python -m repro.launch.maxflow_solve \
+        --height 64 --width 64 --regions 2x2 --method ard [--sharded]
+
+Solves a synthetic instance (paper Sec. 7.1) with the region-discharge
+solver and verifies flow value == independently-computed cut cost.  With
+--sharded the parallel sweep runs under shard_map across however many
+devices are available (regions per device = K / n_devices).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--height", type=int, default=64)
+    ap.add_argument("--width", type=int, default=64)
+    ap.add_argument("--connectivity", type=int, default=8)
+    ap.add_argument("--strength", type=int, default=150)
+    ap.add_argument("--regions", default="2x2")
+    ap.add_argument("--method", choices=["ard", "prd"], default="ard")
+    ap.add_argument("--sequential", action="store_true")
+    ap.add_argument("--sharded", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import (SweepConfig, build, cut_value, extract_cut,
+                            grid_partition, init_labels, solve_mincut)
+    from repro.data.grids import synthetic_grid
+
+    ry, rx = (int(v) for v in args.regions.split("x"))
+    prob = synthetic_grid(args.height, args.width,
+                          connectivity=args.connectivity,
+                          strength=args.strength, seed=args.seed)
+    part = grid_partition((args.height, args.width), (ry, rx))
+    cfg = SweepConfig(method=args.method, parallel=not args.sequential)
+
+    t0 = time.time()
+    if args.sharded:
+        from repro.core.distributed import solve_sharded
+        from repro.core.graph import build as build_graph
+
+        meta, state, layout = build_graph(prob, part)
+        state0 = state
+        state = init_labels(meta, state)
+        n_dev = len(jax.devices())
+        assert meta.num_regions % n_dev == 0, \
+            f"K={meta.num_regions} must divide over {n_dev} devices"
+        mesh = jax.make_mesh((n_dev,), ("regions",))
+        st, sweeps = solve_sharded(meta, state, mesh, cfg)
+        flow = int(st.flow_to_t)
+        cut = extract_cut(meta, st)
+        cost = int(cut_value(meta, state0, cut))
+        print(f"[maxflow] sharded {args.method} on {n_dev} devices: "
+              f"flow={flow} cut={cost} sweeps={sweeps} "
+              f"t={time.time()-t0:.2f}s")
+        assert flow == cost
+    else:
+        res = solve_mincut(prob, part=part, config=cfg)
+        print(f"[maxflow] {args.method} parallel={cfg.parallel}: "
+              f"flow={res.flow_value} sweeps={res.stats.sweeps} "
+              f"boundary_bytes={res.stats.boundary_bytes} "
+              f"page_bytes={res.stats.page_bytes} "
+              f"t={time.time()-t0:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

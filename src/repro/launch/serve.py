@@ -1,0 +1,51 @@
+"""Serving launcher: batched prefill + greedy decode on a smoke config.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch phi3-mini-3.8b \
+        --smoke --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_arch
+from repro.models import model as model_lib
+from repro.train.serve import greedy_generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    if cfg.encoder_only:
+        raise SystemExit(f"{cfg.name} is encoder-only: no decode serving")
+    dtype = jnp.float32 if args.smoke else jnp.bfloat16
+
+    key = jax.random.PRNGKey(0)
+    params = model_lib.init_params(cfg, key, dtype=dtype)
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    t0 = time.time()
+    out = greedy_generate(cfg, params, prompts, args.gen,
+                          args.prompt_len + args.gen + 8, dtype=dtype)
+    dt = time.time() - t0
+    print(f"[serve] arch={cfg.name} batch={args.batch} "
+          f"generated {args.gen} tokens/seq in {dt:.2f}s "
+          f"({args.batch*args.gen/dt:.1f} tok/s)")
+    print("sample:", out[0, :12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,202 @@
+"""GSPMD sharding rules for every architecture family.
+
+Policy (MaxText-style, adapted per arch):
+
+* TP over "model": attention heads / kv heads / d_ff / experts / vocab —
+  whichever dimension is divisible by the axis size; when a head count is
+  not divisible (qwen 40H, command-r kv=8 on a 16-way axis) the rule falls
+  back to sharding d_model (row/col-parallel) for the projection and, for
+  KV caches, to sharding the *sequence* dimension (sequence-parallel decode:
+  GSPMD inserts the flash-decode softmax-merge collectives).
+* FSDP over "data" (cfg.sharding == "fsdp_tp"): parameters additionally
+  sharded over the data axis on a divisible non-TP dimension; the "pod"
+  axis stays pure DP (pod-local FSDP, cross-pod all-reduce only).
+* ZeRO-1: optimizer moments always take the param spec *plus* "data" on a
+  divisible dimension (train/optimizer.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def _axsize(mesh: Mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _fits(dim: int, mesh: Mesh, axis) -> bool:
+    return dim % _axsize(mesh, axis) == 0
+
+
+def _spec(*parts):
+    return P(*parts)
+
+
+def param_spec(cfg: ArchConfig, mesh: Mesh, path: str, shape: tuple,
+               fsdp: bool) -> P:
+    """PartitionSpec for one parameter leaf.  ``path`` is a '/'-joined name;
+    stacked block params carry a leading period dimension (never sharded).
+    """
+    if cfg.sharding == "dp":
+        # pure data parallelism: params replicated, batch over every axis —
+        # the right policy for sub-1B archs where TP all-reduces dominate
+        # (EXPERIMENTS.md §Perf, xlstm pair)
+        return P(*([None] * len(shape)))
+    tp = "model"
+    dp = "data"
+    name = path.split("/")[-1]
+    stacked = path.startswith("blocks/")
+    L = (None,) if stacked else ()
+    dims = shape[1:] if stacked else shape
+
+    def ok(i, ax):
+        return _fits(dims[i], mesh, ax)
+
+    # ---- embeddings / head ----
+    if name == "embed":
+        v_ax = tp if _fits(shape[0], mesh, tp) else None
+        d_ax = dp if fsdp and _fits(shape[1], mesh, dp) and v_ax != dp \
+            else None
+        return P(v_ax, d_ax)
+    if name == "head":
+        v_ax = tp if _fits(shape[1], mesh, tp) else None
+        d_ax = dp if fsdp and _fits(shape[0], mesh, dp) else None
+        return P(d_ax, v_ax)
+    if name.startswith("ln") or name in ("final_norm", "lam"):
+        return P(*([None] * len(shape)))
+
+    # ---- attention ----
+    if name in ("wq", "wk", "wv") and len(dims) == 3:
+        d, h, hd = dims
+        if ok(1, tp):
+            return P(*L, dp if fsdp and ok(0, dp) else None, tp, None)
+        # fallback: row-parallel on d_model
+        return P(*L, tp, None, dp if fsdp and ok(2, dp) else None)
+    if name == "wo" and len(dims) == 3:
+        h, hd, d = dims
+        if ok(0, tp):
+            return P(*L, tp, None, dp if fsdp and ok(2, dp) else None)
+        return P(*L, None, None, tp)
+    if name in ("bq", "bk", "bv"):
+        h = dims[0]
+        return P(*L, tp if ok(0, tp) else None, None)
+
+    # ---- dense mlp ----
+    if name in ("w_gate", "w_up") and len(dims) == 2:
+        return P(*L, dp if fsdp and ok(0, dp) else None,
+                 tp if ok(1, tp) else None)
+    if name == "w_down" and len(dims) == 2:
+        return P(*L, tp if ok(0, tp) else None,
+                 dp if fsdp and ok(1, dp) else None)
+
+    # ---- moe ----
+    if name == "router":
+        return P(*L, None, tp if ok(1, tp) else None)
+    if name in ("w_gate", "w_up") and len(dims) == 3:      # [E, D, Fe]
+        return P(*L, tp if ok(0, tp) else None,
+                 dp if fsdp and ok(1, dp) else None, None)
+    if name == "w_down" and len(dims) == 3:                # [E, Fe, D]
+        return P(*L, tp if ok(0, tp) else None, None,
+                 dp if fsdp and ok(2, dp) else None)
+
+    # ---- xlstm ----
+    if name in ("wi", "wf"):                               # [D, H]
+        return P(*L, None, tp if ok(1, tp) else None)
+    if name == "w_in":                                     # [D, H, 4dh]
+        return P(*L, None, tp if ok(1, tp) else None, None)
+    if name == "r":                                        # [H, dh, 4dh]
+        return P(*L, tp if ok(0, tp) else None, None, None)
+    if name in ("wg",):
+        return P(*L, None, tp if ok(1, tp) else None)
+
+    # ---- rglru / generic square projections ----
+    if name in ("w_x", "w_r", "w_i"):
+        return P(*L, None, tp if ok(1, tp) else None)
+    if name == "w_out" or name == "wo":
+        return P(*L, tp if ok(0, tp) else None,
+                 dp if fsdp and len(dims) > 1 and ok(1, dp) else None)
+    if name == "conv":                                     # [4, Dr]
+        return P(*L, None, tp if ok(1, tp) else None)
+
+    # ---- frontends ----
+    if name in ("proj", "proj1", "proj2"):
+        return P(None, tp if _fits(shape[1], mesh, tp) else None)
+
+    return P(*([None] * len(shape)))
+
+
+def _tree_paths(tree) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, x: "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in kp), tree)
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh, params_shape) -> Any:
+    """NamedShardings for a params pytree (from jax.eval_shape)."""
+    fsdp = cfg.sharding == "fsdp_tp" and "data" in mesh.axis_names
+    paths = _tree_paths(params_shape)
+    return jax.tree.map(
+        lambda p, x: NamedSharding(
+            mesh, param_spec(cfg, mesh, p, x.shape, fsdp)),
+        paths, params_shape)
+
+
+def batch_pspec(mesh: Mesh, cfg: ArchConfig | None = None,
+                global_batch: int | None = None) -> P:
+    if cfg is not None and cfg.sharding == "dp" and global_batch \
+            and global_batch % mesh.size == 0:
+        return P(tuple(mesh.axis_names))
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return P(dp)
+
+
+def cache_specs(cfg: ArchConfig, mesh: Mesh, cache_shape) -> Any:
+    """PartitionSpecs for the serving cache.
+
+    KV stacks [Lx, B, T, Kv, Dh]: batch over DP axes when divisible; kv
+    heads over "model" when divisible, otherwise the sequence dim goes over
+    "model" (sequence-parallel decode).  Recurrent states shard batch only.
+    """
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp_n = _axsize(mesh, dp)
+    tp_n = mesh.shape["model"]
+    paths = _tree_paths(cache_shape)
+
+    def spec_for(path, x):
+        shape = x.shape
+        name = path.split("/")[-1].split("_")[0] if "/" in path else path
+        base = path.split("/")[0]
+        if base in ("gk", "gv", "lk", "lv"):
+            Lx, B, T, Kv, Dh = shape
+            b_ax = dp if B % dp_n == 0 else None
+            if Kv % tp_n == 0:
+                return P(None, b_ax, None, "model", None)
+            if T % tp_n == 0:
+                return P(None, b_ax, "model", None, None)
+            return P(None, b_ax, None, None, None)
+        if base in ("gpos", "lpos"):
+            B = shape[0]
+            return P(dp if B % dp_n == 0 else None, None)
+        if base == "pos":
+            return P()
+        # recurrent states: [n, B, ...]
+        if len(shape) >= 2:
+            B = shape[1]
+            parts = [None, dp if B % dp_n == 0 else None]
+            parts += [None] * (len(shape) - 2)
+            return P(*parts)
+        return P(*([None] * len(shape)))
+
+    return jax.tree.map(lambda p, x: NamedSharding(mesh, spec_for(p, x)),
+                        paths, cache_shape)

@@ -1,0 +1,185 @@
+"""Shared neural layers: norms, RoPE, GQA attention (global / sliding-window
+ring cache), SwiGLU MLP, embeddings.
+
+All layers are pure functions over parameter dicts (no framework deps).
+Dtype policy: parameters and activations in the caller's dtype (bf16 for the
+production configs), reductions and softmax in f32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# norms / embeddings
+# --------------------------------------------------------------------------
+
+def rms_norm(x, w, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * (1.0 + w)
+
+
+def init_rms_norm(d, dtype):
+    return jnp.zeros((d,), dtype)
+
+
+def embed_lookup(table, tokens):
+    return jnp.take(table, tokens, axis=0)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x [..., S, H, Dh]; positions [..., S] (absolute)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = (theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freq      # [..,S,half]
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+def init_attention(key, d_model, n_heads, n_kv, head_dim, *, qkv_bias, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(d_model)
+    p = {
+        "wq": jax.random.normal(k1, (d_model, n_heads, head_dim), dtype) * s,
+        "wk": jax.random.normal(k2, (d_model, n_kv, head_dim), dtype) * s,
+        "wv": jax.random.normal(k3, (d_model, n_kv, head_dim), dtype) * s,
+        "wo": jax.random.normal(k4, (n_heads, head_dim, d_model), dtype) * s,
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads, head_dim), dtype)
+        p["bk"] = jnp.zeros((n_kv, head_dim), dtype)
+        p["bv"] = jnp.zeros((n_kv, head_dim), dtype)
+    return p
+
+
+def _sdpa(q, k, v, mask):
+    """q [B,S,H,Dh], k/v [B,T,Kv,Dh], mask [B,1,S,T] bool — pure jnp path."""
+    B, S, H, Dh = q.shape
+    Kv = k.shape[2]
+    rep = H // Kv
+    qg = q.reshape(B, S, Kv, rep, Dh)
+    logits = jnp.einsum("bskrd,btkd->bkrst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(Dh)
+    logits = jnp.where(mask[:, :, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkrst,btkd->bskrd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, Dh).astype(q.dtype)
+
+
+def _sdpa_q_chunked(q, k, v, mask, q_chunk: int, unroll: int | bool = 1):
+    """Query-chunked SDPA: scores exist only as [.., q_chunk, T] tiles.
+
+    Long-sequence prefill cannot materialise [S, T] score tensors (32k x 32k
+    is terabytes); k/v fit comfortably, so each scan step computes a full
+    softmax over T for one query tile.  This is the pure-jnp analogue of the
+    Pallas flash kernel that keeps XLA cost analysis transparent.
+    """
+    B, S, H, Dh = q.shape
+    pad = (-S) % q_chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        mask = jnp.pad(mask, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nc = q.shape[1] // q_chunk
+    qs = q.reshape(B, nc, q_chunk, H, Dh).swapaxes(0, 1)
+    ms = mask.reshape(B, 1, nc, q_chunk, -1).swapaxes(0, 2)
+
+    def body(_, inp):
+        qc, mc = inp                      # [B,qc,H,Dh], [1,B,qc? ...]
+        return None, _sdpa(qc, k, v, mc.swapaxes(0, 1))
+
+    _, outs = jax.lax.scan(body, None, (qs, ms), unroll=unroll)
+    out = outs.swapaxes(0, 1).reshape(B, S + pad, H, Dh)
+    return out[:, :S]
+
+
+def attention(params, x, *, positions, kv_positions, k_cache, v_cache,
+              causal: bool, window, rope_theta: float,
+              use_flash: bool = False, q_chunk: int | None = None,
+              chunk_unroll: int | bool = 1):
+    """Generic GQA attention against a (possibly cached) KV set.
+
+    x [B,S,D]; k_cache/v_cache [B,T,Kv,Dh] already containing this step's
+    keys (the caller writes them); kv_positions [B,T] absolute positions of
+    cache slots (-1 = empty).  ``window`` may be a traced i32 scalar:
+    window > 0 masks keys older than position - window + 1 (sliding-window
+    attention / ring cache); window == 0 means global.
+    """
+    B, S, D = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if "bq" in params:
+        q = q + params["bq"]
+    q = rope(q, positions, rope_theta)
+    T = k_cache.shape[1]
+    valid = kv_positions[:, None, None, :] >= 0                 # [B,1,1,T]
+    mask = jnp.broadcast_to(valid, (B, 1, S, T))
+    if causal:
+        mask = mask & (kv_positions[:, None, None, :]
+                       <= positions[:, None, :, None])
+    window = jnp.asarray(window, jnp.int32)
+    eff = jnp.where(window > 0, window, T + S + 2)    # 0 => effectively inf
+    mask = mask & (kv_positions[:, None, None, :]
+                   > positions[:, None, :, None] - eff)
+    if use_flash and causal and S == T:
+        # contiguous full-causal case lowers to the Pallas kernel
+        # (caller guarantees window == 0 statically on this path)
+        o = kops.flash_attention(
+            q.transpose(0, 2, 1, 3), k_cache.transpose(0, 2, 1, 3),
+            v_cache.transpose(0, 2, 1, 3), causal=True)
+        o = o.transpose(0, 2, 1, 3)
+    elif q_chunk is not None and S > q_chunk:
+        o = _sdpa_q_chunked(q, k_cache, v_cache, mask, q_chunk,
+                            unroll=chunk_unroll)
+    else:
+        o = _sdpa(q, k_cache, v_cache, mask)
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+
+
+def project_kv(params, x, positions, rope_theta):
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if "bk" in params:
+        k = k + params["bk"]
+        v = v + params["bv"]
+    k = rope(k, positions, rope_theta)
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+def init_mlp(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / np.sqrt(d_model)
+    s_out = 1.0 / np.sqrt(d_ff)
+    return {
+        "w_gate": jax.random.normal(k1, (d_model, d_ff), dtype) * s_in,
+        "w_up": jax.random.normal(k2, (d_model, d_ff), dtype) * s_in,
+        "w_down": jax.random.normal(k3, (d_ff, d_model), dtype) * s_out,
+    }
+
+
+def mlp(params, x):
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, params["w_gate"]))
+    h = h * jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"])

@@ -1,0 +1,499 @@
+"""Model factory: assembles every assigned architecture family from the
+shared layer library.
+
+Layers are grouped into *periods* — the smallest repeating block pattern of
+the architecture (dense: 1 attention layer; xLSTM: [mLSTM, sLSTM];
+RecurrentGemma: [RG-LRU, RG-LRU, local-attn], each with its own MLP) — and
+the period is scanned with stacked parameters (+ optional remat), so the
+HLO stays O(period) deep regardless of depth: essential for the 62-layer
+x 512-device dry-runs.
+
+Heterogeneous per-layer state (full-length KV for global-attention layers,
+ring-buffer KV for sliding-window layers, matrix/vector recurrent states)
+is threaded through the scan; partially-filled final periods are masked with
+static per-period activity flags (their outputs are zeroed).
+
+Modes:
+  train    — full-sequence logits (no cache) + MoE aux loss;
+  prefill  — fills the cache, returns last-position logits;
+  decode   — one token against a pre-filled cache (the serve_step that the
+             decode_* / long_* shapes lower).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import layers, moe as moe_lib, rglru, xlstm
+
+_I32 = jnp.int32
+
+
+# --------------------------------------------------------------------------
+# period plan
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Plan:
+    period: tuple                 # block kinds in one period
+    n_periods: int
+    active: dict                  # kind -> np.bool_[n_periods]
+    is_global: np.ndarray         # [n_periods] attention flavour per period
+
+
+def build_plan(cfg: ArchConfig) -> Plan:
+    L = cfg.num_layers
+    if cfg.block_kind == "xlstm":
+        period = ("mlstm", "slstm")
+        n = -(-L // 2)
+        active = {"mlstm": np.arange(n) * 2 < L,
+                  "slstm": np.arange(n) * 2 + 1 < L}
+        return Plan(period, n, active, np.zeros(n, bool))
+    if cfg.block_kind == "rglru":
+        period = ("rglru", "rglru2", "attn")
+        n = -(-L // 3)
+        active = {"rglru": np.arange(n) * 3 < L,
+                  "rglru2": np.arange(n) * 3 + 1 < L,
+                  "attn": np.arange(n) * 3 + 2 < L}
+        return Plan(period, n, active, np.zeros(n, bool))  # attn all local
+    period = ("attn",)
+    if cfg.pattern_local:
+        p = cfg.pattern_local + cfg.pattern_global
+        is_global = (np.arange(L) % p) >= cfg.pattern_local
+    else:
+        is_global = np.ones(L, bool)
+    return Plan(period, L, {"attn": np.ones(L, bool)}, is_global)
+
+
+# --------------------------------------------------------------------------
+# parameters
+# --------------------------------------------------------------------------
+
+def _stack_init(fn, key, n, *args, **kw):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: fn(k, *args, **kw))(keys)
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.bfloat16):
+    plan = build_plan(cfg)
+    keys = jax.random.split(key, 12)
+    D, H, Kv, Dh = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                    cfg.resolved_head_dim)
+    p: dict[str, Any] = {}
+    p["embed"] = jax.random.normal(keys[0], (cfg.vocab_size, D), dtype) \
+        * (1.0 / np.sqrt(D))
+    if not cfg.tie_embeddings:
+        p["head"] = jax.random.normal(keys[1], (D, cfg.vocab_size), dtype) \
+            * (1.0 / np.sqrt(D))
+    p["final_norm"] = layers.init_rms_norm(D, dtype)
+
+    n = plan.n_periods
+    blocks: dict[str, Any] = {}
+    if "attn" in plan.period:
+        blocks["attn"] = _stack_init(
+            layers.init_attention, keys[2], n, D, H, Kv, Dh,
+            qkv_bias=cfg.qkv_bias, dtype=dtype)
+        blocks["ln_attn"] = jnp.zeros((n, D), dtype)
+        if cfg.moe is not None:
+            blocks["moe"] = _stack_init(moe_lib.init_moe, keys[4], n, D,
+                                        cfg.moe, cfg.d_ff, dtype)
+            blocks["ln_moe"] = jnp.zeros((n, D), dtype)
+        elif cfg.d_ff:
+            blocks["mlp_attn"] = _stack_init(layers.init_mlp, keys[3], n, D,
+                                             cfg.d_ff, dtype)
+            blocks["ln_mlp_attn"] = jnp.zeros((n, D), dtype)
+    if "mlstm" in plan.period:
+        blocks["mlstm"] = _stack_init(xlstm.init_mlstm, keys[5], n, D, H,
+                                      dtype)
+        blocks["ln_mlstm"] = jnp.zeros((n, D), dtype)
+    if "slstm" in plan.period:
+        blocks["slstm"] = _stack_init(xlstm.init_slstm, keys[6], n, D, H,
+                                      dtype)
+        blocks["ln_slstm"] = jnp.zeros((n, D), dtype)
+    for kind, kidx in (("rglru", 7), ("rglru2", 8)):
+        if kind in plan.period:
+            blocks[kind] = _stack_init(rglru.init_rglru_block, keys[kidx],
+                                       n, D, dtype)
+            blocks[f"ln_{kind}"] = jnp.zeros((n, D), dtype)
+            blocks[f"mlp_{kind}"] = _stack_init(layers.init_mlp, keys[9], n,
+                                                D, cfg.d_ff, dtype)
+            blocks[f"ln_mlp_{kind}"] = jnp.zeros((n, D), dtype)
+    p["blocks"] = blocks
+
+    if cfg.frontend == "audio_frames":
+        p["frontend"] = {"proj": jax.random.normal(
+            keys[10], (cfg.frontend_dim, D), dtype)
+            / np.sqrt(cfg.frontend_dim)}
+    elif cfg.frontend == "vision_patches":
+        k1, k2 = jax.random.split(keys[10])
+        p["frontend"] = {
+            "proj1": jax.random.normal(k1, (cfg.frontend_dim, D), dtype)
+            / np.sqrt(cfg.frontend_dim),
+            "proj2": jax.random.normal(k2, (D, D), dtype) / np.sqrt(D),
+        }
+    return p
+
+
+def param_count(cfg: ArchConfig, *, active_only: bool = False) -> int:
+    """Analytic parameter count (used for MODEL_FLOPS = 6 N D)."""
+    shapes = jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+    if active_only and cfg.moe is not None:
+        m = cfg.moe
+        d_e = m.d_expert or cfg.d_ff
+        per_expert = 3 * cfg.d_model * d_e
+        plan = build_plan(cfg)
+        inactive = plan.n_periods * per_expert * (m.num_experts - m.top_k)
+        total -= inactive
+    return total
+
+
+# --------------------------------------------------------------------------
+# cache
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> dict:
+    plan = build_plan(cfg)
+    D, H, Kv, Dh = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                    cfg.resolved_head_dim)
+    n = plan.n_periods
+    cache: dict[str, Any] = {"pos": jnp.zeros((), _I32)}
+    if "attn" in plan.period:
+        n_global = int(plan.is_global.sum())
+        n_local = n - n_global
+        W = min(cfg.local_window or max_seq, max_seq)
+        if n_global:
+            cache["gk"] = jnp.zeros((n_global, batch, max_seq, Kv, Dh), dtype)
+            cache["gv"] = jnp.zeros((n_global, batch, max_seq, Kv, Dh), dtype)
+            cache["gpos"] = jnp.full((batch, max_seq), -1, _I32)
+        if n_local:
+            cache["lk"] = jnp.zeros((n_local, batch, W, Kv, Dh), dtype)
+            cache["lv"] = jnp.zeros((n_local, batch, W, Kv, Dh), dtype)
+            cache["lpos"] = jnp.full((batch, W), -1, _I32)
+    if "mlstm" in plan.period:
+        dh_m = xlstm.PROJ_FACTOR * D // H
+        cache["mlstm"] = jax.vmap(
+            lambda _: xlstm.mlstm_init_state(batch, H, dh_m, dtype))(
+            jnp.arange(n))
+    if "slstm" in plan.period:
+        cache["slstm"] = jax.vmap(
+            lambda _: xlstm.slstm_init_state(batch, H, D // H, dtype))(
+            jnp.arange(n))
+    for kind in ("rglru", "rglru2"):
+        if kind in plan.period:
+            cache[kind] = jax.vmap(
+                lambda _: rglru.rglru_init_state(batch, D, dtype))(
+                jnp.arange(n))
+    return cache
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def _embed_inputs(cfg, params, batch_inputs, dtype):
+    if cfg.frontend == "audio_frames":
+        frames = batch_inputs["frames"]                       # [B,S,Fd]
+        return jnp.einsum("bsf,fd->bsd", frames.astype(dtype),
+                          params["frontend"]["proj"])
+    x = layers.embed_lookup(params["embed"], batch_inputs["tokens"])
+    if cfg.frontend == "vision_patches" and "patches" in batch_inputs:
+        pt = batch_inputs["patches"].astype(dtype)            # [B,P,Fd]
+        pe = jnp.einsum("bpf,fd->bpd", pt, params["frontend"]["proj1"])
+        pe = jnp.einsum("bpd,de->bpe", jax.nn.gelu(pe),
+                        params["frontend"]["proj2"])
+        x = jnp.concatenate([pe, x], axis=1)
+    return x
+
+
+def forward(cfg: ArchConfig, params, batch_inputs, *, mode: str = "train",
+            cache: dict | None = None, dtype=jnp.bfloat16,
+            return_hidden: bool = False, act_sharding=None,
+            scan_unroll: int | bool = 1, attn_q_chunk: int | None = None,
+            attn_chunk_unroll: int | bool = 1):
+    """train: (logits [B,S,V], aux);  prefill/decode: (logits [B,V], cache).
+
+    ``return_hidden`` (train only): skip the LM head and return the final
+    hidden states — the training loss computes the head in sequence chunks
+    so the full [B, S, V] logits tensor is never materialised (essential
+    for 262k vocabularies).
+
+    ``act_sharding`` — optional NamedSharding for the residual stream
+    (Megatron-style sequence parallelism: P(data, "model", None)); applied
+    to the scan carry so remat activation memory is sharded over the full
+    mesh.
+
+    ``scan_unroll`` — forwarded to the layer scan; the dry-run lowers with
+    True (full unroll) so XLA cost analysis counts every layer (while-loop
+    bodies are otherwise counted once).
+    """
+    assert mode in ("train", "prefill", "decode")
+    plan = build_plan(cfg)
+    D, H = cfg.d_model, cfg.num_heads
+    x = _embed_inputs(cfg, params, batch_inputs, dtype)
+    B, S, _ = x.shape
+    causal = not cfg.encoder_only
+    serving = mode != "train"
+    W = cfg.local_window or 0
+    n = plan.n_periods
+
+    if serving:
+        assert cache is not None
+        pos0 = cache["pos"]
+    else:
+        pos0 = jnp.zeros((), _I32)
+    positions = pos0 + jnp.broadcast_to(jnp.arange(S, dtype=_I32), (B, S))
+
+    has_g = serving and cache is not None and "gk" in cache
+    has_l = serving and cache is not None and "lk" in cache
+    rec_kinds = [k for k in ("mlstm", "slstm", "rglru", "rglru2")
+                 if k in plan.period]
+
+    # shared (all-layers) cache position arrays, updated once
+    gpos_new = lpos_new = None
+    if has_g:
+        gpos_new = jax.lax.dynamic_update_slice(cache["gpos"], positions,
+                                                (0, pos0))
+    if has_l:
+        Wc = cache["lk"].shape[2]
+        if S >= Wc:
+            tailp = positions[:, -Wc:]
+            lpos_new = cache["lpos"].at[
+                jnp.arange(B)[:, None], tailp % Wc].set(tailp)
+        else:
+            lpos_new = cache["lpos"].at[
+                jnp.arange(B)[:, None], positions % Wc].set(positions)
+
+    def attn_sublayer(x, prm, ln, is_global, g_ord, l_ord, kvstacks):
+        h = layers.rms_norm(x, ln, cfg.norm_eps)
+        window = jnp.where(is_global, 0, W).astype(_I32) if W else \
+            jnp.zeros((), _I32)
+        if not serving:
+            k, v = layers.project_kv(prm, h, positions, cfg.rope_theta)
+            out = layers.attention(
+                prm, h, positions=positions, kv_positions=positions,
+                k_cache=k, v_cache=v, causal=causal, window=window,
+                rope_theta=cfg.rope_theta,
+                use_flash=cfg.use_flash_attention and W == 0,
+                q_chunk=attn_q_chunk, chunk_unroll=attn_chunk_unroll)
+            return x + out, kvstacks
+        k, v = layers.project_kv(prm, h, positions, cfg.rope_theta)
+        gk, gv, lk, lv = kvstacks
+        prefilling = S > 1        # static: prefill chunks vs one-token decode
+
+        def write_global(stacks, kc_new=None):
+            gk, gv, lk, lv = stacks
+            kc = jax.lax.dynamic_update_slice(
+                gk[g_ord], k.astype(gk.dtype), (0, pos0, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                gv[g_ord], v.astype(gv.dtype), (0, pos0, 0, 0))
+            return kc, vc, (gk.at[g_ord].set(kc), gv.at[g_ord].set(vc),
+                            lk, lv)
+
+        def write_local(stacks):
+            gk, gv, lk, lv = stacks
+            Wc = lk.shape[2]
+            if S >= Wc:
+                kt, vt = k[:, -Wc:], v[:, -Wc:]
+                pt = positions[:, -Wc:]
+            else:
+                kt, vt, pt = k, v, positions
+            rows = jnp.arange(B)[:, None]
+            kc = lk[l_ord].at[rows, pt % Wc].set(kt.astype(lk.dtype))
+            vc = lv[l_ord].at[rows, pt % Wc].set(vt.astype(lv.dtype))
+            return kc, vc, (gk, gv, lk.at[l_ord].set(kc),
+                            lv.at[l_ord].set(vc))
+
+        if prefilling:
+            # attend within the current chunk (prefill starts at pos 0);
+            # the cache is written for subsequent decode steps.
+            window = jnp.where(is_global, 0, W).astype(_I32) if W else \
+                jnp.zeros((), _I32)
+            out = layers.attention(
+                prm, h, positions=positions, kv_positions=positions,
+                k_cache=k, v_cache=v, causal=causal, window=window,
+                rope_theta=cfg.rope_theta,
+                q_chunk=attn_q_chunk, chunk_unroll=attn_chunk_unroll)
+
+            def wg(stacks):
+                return write_global(stacks)[2]
+
+            def wl(stacks):
+                return write_local(stacks)[2]
+
+            if has_g and has_l:
+                stacks = jax.lax.cond(is_global, wg, wl, (gk, gv, lk, lv))
+            elif has_g:
+                stacks = wg((gk, gv, lk, lv))
+            else:
+                stacks = wl((gk, gv, lk, lv))
+            return x + out, stacks
+
+        # one-token decode: attend against the cache stack for this layer
+        def dec_global(stacks):
+            kc, vc, stacks = write_global(stacks)
+            out = layers.attention(
+                prm, h, positions=positions, kv_positions=gpos_new,
+                k_cache=kc, v_cache=vc, causal=causal,
+                window=jnp.zeros((), _I32), rope_theta=cfg.rope_theta)
+            return out, stacks
+
+        def dec_local(stacks):
+            kc, vc, stacks = write_local(stacks)
+            out = layers.attention(
+                prm, h, positions=positions, kv_positions=lpos_new,
+                k_cache=kc, v_cache=vc, causal=causal,
+                window=jnp.asarray(W or kc.shape[1], _I32),
+                rope_theta=cfg.rope_theta)
+            return out, stacks
+
+        if has_g and has_l:
+            out, stacks = jax.lax.cond(is_global, dec_global, dec_local,
+                                       (gk, gv, lk, lv))
+        elif has_g:
+            out, stacks = dec_global((gk, gv, lk, lv))
+        else:
+            out, stacks = dec_local((gk, gv, lk, lv))
+        return x + out, stacks
+
+    # token/expert mesh axes for the MoE dispatch sharding constraints.
+    # Tokens stay on the *data* axes only (Megatron-style: gather the
+    # sequence shards before the expert FFN) — constraining tokens over
+    # (data, model) was measured to force involuntary SPMD remats
+    # (EXPERIMENTS.md §Perf iteration log).
+    moe_token_axes = None
+    moe_expert_axis = None
+    if act_sharding is not None and cfg.moe is not None:
+        sp = act_sharding.spec
+        part = list(sp)[0] if len(sp) else None
+        if part is not None:
+            moe_token_axes = tuple(part) if isinstance(part, tuple) \
+                else (part,)
+        moe_expert_axis = "model"
+
+    def mlp_sublayer(x, blk, tag):
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.moe is not None and tag == "attn":
+            h = layers.rms_norm(x, blk["ln_moe"], cfg.norm_eps)
+            out, aux = moe_lib.moe_ffn(blk["moe"], h, cfg.moe,
+                                       token_axes=moe_token_axes,
+                                       expert_axis=moe_expert_axis)
+            return x + out, aux
+        key = f"mlp_{tag}"
+        if key in blk:
+            h = layers.rms_norm(x, blk[f"ln_mlp_{tag}"], cfg.norm_eps)
+            return x + layers.mlp(blk[key], h), aux
+        return x, aux
+
+    def fresh_state(kind):
+        if kind == "mlstm":
+            return xlstm.mlstm_init_state(B, H, xlstm.PROJ_FACTOR * D // H,
+                                          dtype)
+        if kind == "slstm":
+            return xlstm.slstm_init_state(B, H, D // H, dtype)
+        return rglru.rglru_init_state(B, D, dtype)
+
+    def period_body(carry, xs_t):
+        x, stacks, aux_tot = carry
+        if act_sharding is not None:
+            x = jax.lax.with_sharding_constraint(x, act_sharding)
+        blk = xs_t["params"]
+        rec_out = {}
+        for kind in plan.period:
+            act = xs_t["active"][kind]
+            if kind == "attn":
+                x2, stacks2 = attn_sublayer(
+                    x, blk["attn"], blk["ln_attn"], xs_t["is_global"],
+                    xs_t["g_ord"], xs_t["l_ord"], stacks)
+                x2, aux = mlp_sublayer(x2, blk, "attn")
+                x = jnp.where(act, x2, x)
+                stacks = jax.tree.map(
+                    lambda a, b: jnp.where(act, b, a), stacks, stacks2)
+                aux_tot = aux_tot + jnp.where(act, aux, 0.0)
+            else:
+                st_in = xs_t["rec"][kind] if serving else fresh_state(kind)
+                h = layers.rms_norm(x, blk[f"ln_{kind}"], cfg.norm_eps)
+                if kind == "mlstm":
+                    out, st = xlstm.mlstm_apply(blk["mlstm"], h, st_in,
+                                                chunk=cfg.mlstm_chunk,
+                                                unroll=attn_chunk_unroll)
+                elif kind == "slstm":
+                    out, st = xlstm.slstm_apply(blk["slstm"], h, st_in)
+                else:
+                    out, st = rglru.rglru_block_apply(blk[kind], h, st_in)
+                x2 = x + out
+                x2, aux = mlp_sublayer(x2, blk, kind)
+                x = jnp.where(act, x2, x)
+                aux_tot = aux_tot + jnp.where(act, aux, 0.0)
+                rec_out[kind] = jax.tree.map(
+                    lambda a, b: jnp.where(act, a, b), st, st_in)
+        return (x, stacks, aux_tot), rec_out
+
+    # ---- per-period xs ----
+    isg = plan.is_global
+    g_ord = np.maximum(np.cumsum(isg) - 1, 0)
+    l_ord = np.maximum(np.cumsum(~isg) - 1, 0)
+    xs = {
+        "params": params["blocks"],
+        "is_global": jnp.asarray(isg),
+        "g_ord": jnp.asarray(g_ord, _I32),
+        "l_ord": jnp.asarray(l_ord, _I32),
+        "active": {k: jnp.asarray(v) for k, v in plan.active.items()},
+    }
+    if serving and rec_kinds:
+        xs["rec"] = {k: cache[k] for k in rec_kinds}
+    else:
+        xs["rec"] = {}
+
+    if has_g:
+        stacks0 = (cache["gk"], cache["gv"],
+                   cache.get("lk", jnp.zeros((0,))),
+                   cache.get("lv", jnp.zeros((0,))))
+    elif has_l:
+        stacks0 = (jnp.zeros((0,)), jnp.zeros((0,)), cache["lk"],
+                   cache["lv"])
+    else:
+        z = jnp.zeros((0,))
+        stacks0 = (z, z, z, z)
+
+    body = jax.checkpoint(period_body) if cfg.remat else period_body
+    if act_sharding is not None:
+        x = jax.lax.with_sharding_constraint(x, act_sharding)
+    (x, stacks, aux), rec_ys = jax.lax.scan(
+        body, (x, stacks0, jnp.zeros((), jnp.float32)), xs,
+        unroll=scan_unroll)
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden and not serving:
+        return x, aux
+    head = params.get("head")
+    if serving:
+        x = x[:, -1:]
+    if head is None:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, head)
+
+    if not serving:
+        return logits, aux
+
+    new_cache = dict(cache)
+    gk, gv, lk, lv = stacks
+    if has_g:
+        new_cache["gk"], new_cache["gv"] = gk, gv
+        new_cache["gpos"] = gpos_new
+    if has_l:
+        new_cache["lk"], new_cache["lv"] = lk, lv
+        new_cache["lpos"] = lpos_new
+    for k in rec_kinds:
+        new_cache[k] = rec_ys[k]
+    new_cache["pos"] = pos0 + S
+    return logits[:, 0], new_cache

@@ -1,0 +1,119 @@
+"""Mixture-of-Experts FFN with sort-based token dispatch (dropping).
+
+Expert parallelism: experts live on the leading axis of every expert weight
+and are sharded over the "model" mesh axis (launch/shardings.py).  Dispatch
+is the sort-based capacity scheme (as in MaxText / Switch): tokens are
+sorted by expert id, ranked within their expert group, dropped beyond the
+capacity C = ceil(T * top_k / E * capacity_factor), processed as a dense
+[E, C, D] batch (one einsum — MXU friendly, flops proportional to *active*
+parameters), and combined back with their router gates.  Shared experts
+(DeepSeekMoE) are a dense SwiGLU over num_shared * d_expert.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MoEConfig
+from repro.models import layers
+
+
+def init_moe(key, d_model, cfg: MoEConfig, d_ff_default, dtype):
+    d_e = cfg.d_expert or d_ff_default
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    s_in = 1.0 / np.sqrt(d_model)
+    s_out = 1.0 / np.sqrt(d_e)
+    E = cfg.num_experts
+    p = {
+        "router": jax.random.normal(k1, (d_model, E), jnp.float32) * s_in,
+        "w_gate": jax.random.normal(k2, (E, d_model, d_e), dtype) * s_in,
+        "w_up": jax.random.normal(k3, (E, d_model, d_e), dtype) * s_in,
+        "w_down": jax.random.normal(k4, (E, d_e, d_model), dtype) * s_out,
+    }
+    if cfg.num_shared:
+        p["shared"] = layers.init_mlp(k5, d_model, cfg.num_shared * d_e,
+                                      dtype)
+    return p
+
+
+def _constrain(x, *spec):
+    """Best-effort sharding constraint (no-op without an ambient mesh)."""
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.PartitionSpec(*spec))
+    except Exception:
+        return x
+
+
+def moe_ffn(params, x, cfg: MoEConfig, token_axes=None, expert_axis=None):
+    """x [B,S,D] -> [B,S,D]; returns (out, aux_loss).
+
+    ``token_axes`` / ``expert_axis``: mesh axes for the flattened token dim
+    and the expert dim.  GSPMD cannot infer shardings through the
+    sort/gather dispatch chain, so without explicit constraints the
+    token-major [T*k, D] tensors replicate per device (O(10GB) each at
+    production shapes) — pinning them is the difference between the
+    274GB/dev baseline and the fitting version (EXPERIMENTS.md §Perf,
+    deepseek-moe hillclimb).
+    """
+    B, S, D = x.shape
+    T = B * S
+    E, k = cfg.num_experts, cfg.top_k
+    xf = x.reshape(T, D)
+    if token_axes:
+        xf = _constrain(xf, token_axes, None)
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)                        # [T,k]
+    gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balance auxiliary loss (Switch) ----
+    me = probs.mean(axis=0)                                     # [E]
+    ce = jnp.zeros((E,), jnp.float32).at[eidx.reshape(-1)].add(
+        jnp.ones((T * k,), jnp.float32)) / (T * k)
+    aux = E * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch ----
+    flat_e = eidx.reshape(-1)                                   # [N], N = T*k
+    N = T * k
+    flat_t = jnp.arange(N, dtype=jnp.int32) // k
+    order = jnp.argsort(flat_e)
+    se = flat_e[order]
+    st = flat_t[order]
+    sg = gate.reshape(-1)[order]
+    rank = jnp.arange(N, dtype=jnp.int32) - jnp.searchsorted(
+        se, se, side="left").astype(jnp.int32)
+    C = int(np.ceil(T * k / E * cfg.capacity_factor))
+    C = max(8, -(-C // 8) * 8)                                  # pad to 8
+    keep = rank < C
+    dest = jnp.where(keep, se * C + rank, E * C)                # drop slot
+    gathered = xf[st]
+    if token_axes:
+        gathered = _constrain(gathered, token_axes, None)
+    buf = jnp.zeros((E * C + 1, D), x.dtype).at[dest].set(gathered)
+    buf = buf[:-1].reshape(E, C, D)
+    if expert_axis:
+        buf = _constrain(buf, expert_axis, None, None)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    eout = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    if expert_axis:
+        eout = _constrain(eout, expert_axis, None, None)
+    eout = eout.reshape(E * C, D)
+
+    vals = eout[jnp.clip(dest, 0, E * C - 1)] * sg[:, None].astype(x.dtype)
+    if token_axes:
+        vals = _constrain(vals, token_axes, None)
+    out = jnp.zeros((T, D), x.dtype).at[st].add(
+        jnp.where(keep[:, None], vals, 0))
+    if token_axes:
+        out = _constrain(out, token_axes, None)
+
+    if "shared" in params:
+        out = out + layers.mlp(params["shared"], x).reshape(T, D)
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,84 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The Real-Gated Linear Recurrent Unit is a *diagonal* linear recurrence
+
+    a_t = exp(-c * softplus(Lambda) * r_t),   r_t = sigmoid(W_r x_t)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t^2) ⊙ (i_t ⊙ x_t)
+
+which maps to ``jax.lax.associative_scan`` over (a, b) pairs — O(log S)
+depth, fully parallel across the feature dimension: the TPU-native form.
+Decode carries the [B, D_r] hidden state (O(1) per step — the reason the
+long_500k shape runs for this arch).
+
+The surrounding Griffin block: two up-projections (recurrent branch +
+GeLU gate), a short temporal conv (width 4) on the recurrent branch, the
+RG-LRU, gated merge, down-projection.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_C = 8.0
+
+
+def init_rglru_block(key, d_model, dtype):
+    dr = d_model
+    ks = jax.random.split(key, 7)
+    s = 1.0 / np.sqrt(d_model)
+    return {
+        "w_x": jax.random.normal(ks[0], (d_model, dr), dtype) * s,
+        "w_gate": jax.random.normal(ks[1], (d_model, dr), dtype) * s,
+        "conv": jax.random.normal(ks[2], (4, dr), dtype) * 0.5,
+        "w_r": jax.random.normal(ks[3], (dr, dr), dtype) * s,
+        "w_i": jax.random.normal(ks[4], (dr, dr), dtype) * s,
+        "lam": jnp.full((dr,), 2.0, jnp.float32),      # softplus(2) ~ 2.1
+        "w_out": jax.random.normal(ks[6], (dr, d_model), dtype) * s,
+    }
+
+
+def rglru_init_state(batch, d_model, dtype):
+    return (jnp.zeros((batch, d_model), jnp.float32),        # lru hidden
+            jnp.zeros((batch, 3, d_model), jnp.float32))     # conv tail
+
+
+def _lru_scan(a, b, h0):
+    """h_t = a_t h_{t-1} + b_t with initial h0; a,b [B,S,D]."""
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    # fold h0 into the first step
+    b = b.at[:, 0].add(a[:, 0] * h0)
+    A, Bc = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return Bc
+
+
+def rglru_block_apply(params, x, state):
+    """x [B,S,D] -> [B,S,D]; state = (lru hidden, conv tail)."""
+    B, S, D = x.shape
+    h0, conv_tail = state
+    u = jnp.einsum("bsd,de->bse", x, params["w_x"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, params["w_gate"]))
+    # temporal conv width 4 with carried tail (decode-friendly)
+    uc = jnp.concatenate([conv_tail.astype(u.dtype), u], axis=1)
+    w = params["conv"]
+    u = sum(uc[:, 3 - i: 3 - i + S] * w[i] for i in range(4))
+    new_tail = uc[:, -3:].astype(jnp.float32)
+
+    r = jax.nn.sigmoid(jnp.einsum("bse,ef->bsf", u, params["w_r"])
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bse,ef->bsf", u, params["w_i"])
+                       .astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 0.0)) * \
+        (i * u.astype(jnp.float32))
+    h = _lru_scan(a, b, h0)
+    new_h0 = h[:, -1]
+    out = (h.astype(x.dtype) * gate)
+    return jnp.einsum("bse,ed->bsd", out, params["w_out"]), (new_h0, new_tail)

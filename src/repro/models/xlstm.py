@@ -1,0 +1,172 @@
+"""xLSTM blocks (arXiv:2405.04517): chunkwise-parallel mLSTM + recurrent sLSTM.
+
+TPU adaptation notes (DESIGN.md §Arch-applicability):
+
+* mLSTM — matrix-memory linear recurrence  C_t = f_t C_{t-1} + i_t v_t k_t^T,
+  h_t = C_t q_t / max(|n_t . q_t|, 1).  Implemented in the standard chunkwise
+  form: O(c^2) masked intra-chunk attention + an [dh, dh] state scanned
+  across chunks — the MXU-friendly shape (all matmuls, no per-step scan).
+  Gates are per-head scalars; the paper's exponential input gate is
+  stabilised here as sigmoid gating in log space (bounded chunk arithmetic),
+  preserving the matrix-memory structure.
+* sLSTM — genuinely recurrent (hidden-to-gate connections): lax.scan over
+  time with per-head block-diagonal recurrent weights.  Sequential by
+  construction; it is the reason xlstm-350m keeps a modest d_model.
+
+Both blocks support O(1)-state decode (the long_500k shape): the mLSTM state
+is [B, H, dh, dh] + normaliser, the sLSTM state [B, H, dh] tuples — no KV
+cache growth.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+PROJ_FACTOR = 2      # xLSTM mLSTM pre-up-projection factor
+
+
+def init_mlstm(key, d_model, n_heads, dtype):
+    inner = PROJ_FACTOR * d_model
+    dh = inner // n_heads
+    ks = jax.random.split(key, 8)
+    s = 1.0 / np.sqrt(d_model)
+    si = 1.0 / np.sqrt(inner)
+    return {
+        "wu": jax.random.normal(ks[7], (d_model, inner), dtype) * s,
+        "wq": jax.random.normal(ks[0], (inner, n_heads, dh), dtype) * si,
+        "wk": jax.random.normal(ks[1], (inner, n_heads, dh), dtype) * si,
+        "wv": jax.random.normal(ks[2], (inner, n_heads, dh), dtype) * si,
+        "wi": jax.random.normal(ks[3], (inner, n_heads), dtype) * si,
+        "wf": jax.random.normal(ks[4], (inner, n_heads), dtype) * si,
+        "wg": jax.random.normal(ks[5], (d_model, inner), dtype) * s,
+        "wo": jax.random.normal(ks[6], (inner, d_model), dtype) * si,
+    }
+
+
+def mlstm_init_state(batch, n_heads, dh, dtype):
+    return (jnp.zeros((batch, n_heads, dh, dh), jnp.float32),
+            jnp.zeros((batch, n_heads, dh), jnp.float32))
+
+
+def _mlstm_scan_chunks(q, k, v, logf, logi, state, chunk,
+                       unroll: int | bool = 1):
+    """q,k,v [B,H,S,dh]; logf/logi [B,H,S]; state (C [B,H,dh,dh], n [B,H,dh])."""
+    B, H, S, dh = q.shape
+    nc = S // chunk
+    # -> [nc, B, H, chunk, ...] with the chunk axis scanned on dim 0
+    qc = q.reshape(B, H, nc, chunk, dh).transpose(2, 0, 1, 3, 4)
+    kc = k.reshape(B, H, nc, chunk, dh).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, H, nc, chunk, dh).transpose(2, 0, 1, 3, 4)
+    fc = logf.reshape(B, H, nc, chunk).transpose(2, 0, 1, 3)
+    ic = logi.reshape(B, H, nc, chunk).transpose(2, 0, 1, 3)
+
+    def body(carry, inp):
+        C, n = carry                                   # [B,H,dh,dh], [B,H,dh]
+        qt, kt, vt, lf, li = inp                       # [B,H,c,dh], [B,H,c]
+        qf = qt.astype(jnp.float32)
+        kf = kt.astype(jnp.float32)
+        vf = vt.astype(jnp.float32)
+        cum = jnp.cumsum(lf, axis=-1)                  # inclusive
+        # intra-chunk decay: D[i,j] = exp(cum_i - cum_j + li_j), j <= i
+        gap = cum[..., :, None] - cum[..., None, :] + li[..., None, :]
+        tri = jnp.tril(jnp.ones((qt.shape[-2], qt.shape[-2]), bool))
+        D = jnp.where(tri, jnp.exp(gap), 0.0)
+        scores = jnp.einsum("bhid,bhjd->bhij", qf, kf) * D
+        intra = jnp.einsum("bhij,bhjd->bhid", scores, vf)
+        n_intra = jnp.einsum("bhij,bhjd->bhid", D, kf)
+        # inter-chunk contribution of the carried (C, n) state
+        qdec = qf * jnp.exp(cum)[..., None]
+        inter = jnp.einsum("bhid,bhde->bhie", qdec, C)
+        n_vec = n_intra + jnp.exp(cum)[..., None] * n[..., None, :]
+        num = intra + inter
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("bhid,bhid->bhi", qf, n_vec)), 1.0)
+        h = num / denom[..., None]
+        # state update to the end of the chunk
+        total = cum[..., -1]
+        kdec = kf * jnp.exp(total[..., None] - cum + li)[..., None]
+        C_new = C * jnp.exp(total)[..., None, None] + jnp.einsum(
+            "bhjd,bhje->bhde", kdec, vf)
+        n_new = n * jnp.exp(total)[..., None] + kdec.sum(axis=-2)
+        return (C_new, n_new), h
+
+    (C, n), hs = jax.lax.scan(body, state, (qc, kc, vc, fc, ic),
+                               unroll=unroll)
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, dh)
+    return h, (C, n)
+
+
+def mlstm_apply(params, x, state, *, chunk: int,
+                unroll: int | bool = 1):
+    """x [B,S,D] -> [B,S,D]; state carried across calls (decode)."""
+    B, S, D = x.shape
+    H = params["wq"].shape[1]
+    dh = params["wq"].shape[2]
+    u = jnp.einsum("bsd,de->bse", x, params["wu"])     # pre-up-projection
+    q = jnp.einsum("bse,ehk->bhsk", u, params["wq"])
+    k = jnp.einsum("bse,ehk->bhsk", u, params["wk"]) / np.sqrt(dh)
+    v = jnp.einsum("bse,ehk->bhsk", u, params["wv"])
+    logf = jax.nn.log_sigmoid(
+        jnp.einsum("bse,eh->bhs", u, params["wf"]).astype(jnp.float32))
+    logi = jax.nn.log_sigmoid(
+        jnp.einsum("bse,eh->bhs", u, params["wi"]).astype(jnp.float32))
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        zp = lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, pad)) + ((0, 0),) *
+                               (a.ndim - 3))
+        q, k, v, logf, logi = zp(q), zp(k), zp(v), zp(logf), zp(logi)
+    h, state = _mlstm_scan_chunks(q, k, v, logf, logi, state, c,
+                                  unroll=unroll)
+    h = h[:, :, :S]
+    inner = H * dh
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, inner).astype(x.dtype)
+    gate = jax.nn.silu(jnp.einsum("bsd,de->bse", x, params["wg"]))
+    return jnp.einsum("bse,ed->bsd", h * gate, params["wo"]), state
+
+
+def init_slstm(key, d_model, n_heads, dtype):
+    dh = d_model // n_heads
+    ks = jax.random.split(key, 3)
+    s = 1.0 / np.sqrt(d_model)
+    return {
+        "w_in": jax.random.normal(ks[0], (d_model, n_heads, 4 * dh),
+                                  dtype) * s,
+        "r": jax.random.normal(ks[1], (n_heads, dh, 4 * dh), dtype) / \
+            np.sqrt(dh),
+        "wo": jax.random.normal(ks[2], (d_model, d_model), dtype) * s,
+    }
+
+
+def slstm_init_state(batch, n_heads, dh, dtype):
+    z = jnp.zeros((batch, n_heads, dh), jnp.float32)
+    return (z, z, z)          # (c, n, h)
+
+
+def slstm_apply(params, x, state):
+    """Truly recurrent sLSTM: lax.scan over time."""
+    B, S, D = x.shape
+    H, dh4 = params["r"].shape[0], params["r"].shape[2]
+    dh = dh4 // 4
+    pre_in = jnp.einsum("bsd,dhk->sbhk", x, params["w_in"])
+
+    def step(carry, pre_t):
+        c, n, h = carry
+        pre = pre_t.astype(jnp.float32) + jnp.einsum(
+            "bhd,hdk->bhk", h, params["r"].astype(jnp.float32))
+        zi, zf, zz, zo = jnp.split(pre, 4, axis=-1)
+        i = jnp.exp(jnp.minimum(zi, 0.0))            # stabilised exp gate
+        f = jax.nn.sigmoid(zf)
+        z = jnp.tanh(zz)
+        o = jax.nn.sigmoid(zo)
+        c = f * c + i * z
+        n = f * n + i
+        h = o * c / jnp.maximum(jnp.abs(n), 1.0)
+        return (c, n, h), h
+
+    state, hs = jax.lax.scan(step, state, pre_in)
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
+    return jnp.einsum("bsd,de->bse", h, params["wo"]), state

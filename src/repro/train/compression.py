@@ -1,0 +1,67 @@
+"""Gradient compression with error feedback.
+
+At 1000+ node scale the cross-pod gradient all-reduce is the dominant
+collective; int8 block-quantised gradients cut its bytes 4x (bf16) to 8x
+(f32).  The compressor is a composable hook applied to the global gradient
+before the optimizer update:
+
+  * int8 symmetric block quantisation (block = last dim) with an f32 scale
+    per block — quantise, (all-reduce happens on the quantised values in a
+    real deployment; under GSPMD the reduction is already placed, so here
+    the hook models the *quantisation error path*), dequantise;
+  * error feedback (Seide et al.): the quantisation residual is carried in
+    an f32 buffer and added to the next step's gradient, which restores
+    convergence to the uncompressed trajectory.
+
+Use ``make_error_feedback_compressor`` to get a (compress_fn, init_state)
+pair; the train driver threads the EF state.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    gf = g.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(gf), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_int8(g: jax.Array) -> jax.Array:
+    q, s = quantize_int8(g)
+    return dequantize_int8(q, s)
+
+
+def init_ef_state(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_compress(grads, ef_state):
+    """Error-feedback int8 compression: returns (compressed, new_ef)."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        comp = compress_int8(corrected)
+        return comp.astype(g.dtype), corrected - comp
+
+    out = jax.tree.map(one, grads, ef_state)
+    comp = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    new_ef = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return comp, new_ef
+
+
+def make_plain_compressor() -> Callable:
+    """Stateless int8 compressor (no error feedback) for the optimizer hook."""
+    return lambda grads: jax.tree.map(
+        lambda g: compress_int8(g).astype(g.dtype), grads)

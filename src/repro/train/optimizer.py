@@ -1,0 +1,114 @@
+"""AdamW with ZeRO-1 sharded moments, gradient clipping, LR schedules.
+
+No optax dependency — the optimizer is ~80 lines and owning it lets the
+moment shardings be chosen explicitly: each moment takes its parameter's
+PartitionSpec with the "data" axis added on the first divisible unsharded
+dimension (ZeRO-1), so optimizer memory scales with the full mesh even for
+TP-only parameter layouts.  Supports a gradient-compression hook
+(train/compression.py) applied to the global gradient before the update.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def lr_at(cfg: AdamWConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * \
+        (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, opt_state,
+                 compress: Callable | None = None):
+    """Returns (new_params, new_opt_state, metrics)."""
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = opt_state["step"] + 1
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        step_ = mh / (jnp.sqrt(vh) + cfg.eps) \
+            + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step_).astype(p.dtype), m, v
+
+    if compress is not None:
+        grads = compress(grads)
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}
+
+
+def zero1_spec(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """Add the 'data' axis to the first divisible unsharded dim (ZeRO-1)."""
+    if "data" not in mesh.axis_names:
+        return spec
+    dsize = mesh.shape["data"]
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    used = set()
+    for p in parts:
+        for a in (p if isinstance(p, tuple) else (p,)):
+            if a:
+                used.add(a)
+    if "data" in used:
+        return spec
+    for i, (p, dim) in enumerate(zip(parts, shape)):
+        if p is None and dim % dsize == 0:
+            parts[i] = "data"
+            return P(*parts)
+    return spec
+
+
+def opt_state_shardings(mesh: Mesh, params_shape, params_shardings):
+    """ZeRO-1 shardings for the optimizer moments."""
+    def mom(ps, x):
+        return NamedSharding(mesh, zero1_spec(ps.spec, x.shape, mesh))
+
+    m = jax.tree.map(mom, params_shardings, params_shape)
+    return {"m": m, "v": m, "step": NamedSharding(mesh, P())}

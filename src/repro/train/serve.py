@@ -1,0 +1,91 @@
+"""Serving steps: prefill and single-token decode (the serve_step the
+decode_*/long_* dry-run shapes lower), plus a batched greedy-decode driver.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.launch import shardings as shd
+from repro.models import model as model_lib
+
+
+def make_prefill_step(cfg: ArchConfig, dtype=jnp.bfloat16,
+                      unroll: int | bool = 1, q_chunk: int | None = None,
+                      act_sharding=None):
+    def prefill(params, batch, cache):
+        return model_lib.forward(cfg, params, batch, mode="prefill",
+                                 cache=cache, dtype=dtype,
+                                 scan_unroll=unroll, attn_q_chunk=q_chunk,
+                                 attn_chunk_unroll=unroll,
+                                 act_sharding=act_sharding)
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig, dtype=jnp.bfloat16,
+                     unroll: int | bool = 1):
+    def decode(params, tokens, cache):
+        logits, cache = model_lib.forward(
+            cfg, params, {"tokens": tokens}, mode="decode", cache=cache,
+            dtype=dtype, scan_unroll=unroll)
+        return logits, cache
+    return decode
+
+
+def decode_batch_specs(cfg: ArchConfig, batch: int):
+    return jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+
+
+def cache_specs_struct(cfg: ArchConfig, batch: int, max_seq: int,
+                       dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: model_lib.init_cache(cfg, batch, max_seq, dtype))
+
+
+def make_sharded_decode_step(cfg: ArchConfig, mesh: Mesh, batch: int,
+                             max_seq: int, dtype=jnp.bfloat16,
+                             unroll: int | bool = 1):
+    params_shape = jax.eval_shape(
+        lambda k: model_lib.init_params(cfg, k, dtype), jax.random.PRNGKey(0))
+    p_shard = shd.param_shardings(cfg, mesh, params_shape)
+    cache_shape = cache_specs_struct(cfg, batch, max_seq, dtype)
+    c_shard = shd.cache_specs(cfg, mesh, cache_shape)
+    tok_shard = NamedSharding(mesh, shd.batch_pspec(mesh)
+                              if batch % _dp(mesh) == 0
+                              else P())
+    step = make_decode_step(cfg, dtype, unroll=unroll)
+    jit_step = jax.jit(step,
+                       in_shardings=(p_shard, tok_shard, c_shard),
+                       out_shardings=(None, c_shard),
+                       donate_argnums=(2,))
+    return jit_step, p_shard, c_shard, tok_shard
+
+
+def _dp(mesh: Mesh) -> int:
+    n = 1
+    for a in mesh.axis_names:
+        if a in ("pod", "data"):
+            n *= mesh.shape[a]
+    return n
+
+
+def greedy_generate(cfg: ArchConfig, params, prompt_tokens, steps: int,
+                    max_seq: int, dtype=jnp.float32):
+    """Small-scale greedy generation (examples / tests; single device)."""
+    B, S = prompt_tokens.shape
+    cache = model_lib.init_cache(cfg, B, max_seq, dtype)
+    logits, cache = model_lib.forward(
+        cfg, params, {"tokens": prompt_tokens}, mode="prefill", cache=cache,
+        dtype=dtype)
+    toks = [jnp.argmax(logits, -1)[:, None]]
+    for _ in range(steps - 1):
+        logits, cache = model_lib.forward(
+            cfg, params, {"tokens": toks[-1]}, mode="decode", cache=cache,
+            dtype=dtype)
+        toks.append(jnp.argmax(logits, -1)[:, None])
+    return jnp.concatenate(toks, axis=1)

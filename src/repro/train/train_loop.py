@@ -1,0 +1,211 @@
+"""Sharded training step: chunked cross-entropy, remat, ZeRO-1 AdamW.
+
+The LM head is applied inside the loss in sequence chunks (the full
+[B, S, vocab] logits tensor is never materialised — with 262k vocabularies
+it would dominate activation memory).  Loss is computed in f32 with the
+log-sum-exp over the (model-sharded) vocab dimension; GSPMD turns the
+per-chunk reductions into a single all-reduce per chunk.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.launch import shardings as shd
+from repro.models import model as model_lib
+from repro.train import optimizer as opt_lib
+
+CE_CHUNK = 512
+AUX_WEIGHT = 0.01
+
+
+def chunked_ce_loss(cfg: ArchConfig, params, hidden, labels, mask,
+                    unroll: int | bool = 1):
+    """hidden [B,S,D], labels [B,S] (next-token ids), mask [B,S]."""
+    B, S, D = hidden.shape
+    head = params.get("head")
+    table = head if head is not None else params["embed"]
+
+    c = min(CE_CHUNK, S)
+    pad = (-S) % c
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nc = hidden.shape[1] // c
+    hs = hidden.reshape(B, nc, c, D).swapaxes(0, 1)
+    ls = labels.reshape(B, nc, c).swapaxes(0, 1)
+    ms = mask.reshape(B, nc, c).swapaxes(0, 1)
+
+    def chunk_body(carry, inp):
+        tot, cnt = carry
+        h, l, m = inp
+        if head is not None:
+            logits = jnp.einsum("bcd,dv->bcv", h, table)
+        else:
+            logits = jnp.einsum("bcd,vd->bcv", h, table)
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        ce = (lse - gold) * m
+        return (tot + ce.sum(), cnt + m.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        chunk_body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hs, ls, ms), unroll=unroll)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(cfg: ArchConfig, params, batch, dtype=jnp.bfloat16,
+            act_sharding=None, unroll: int | bool = 1,
+            q_chunk: int | None = None):
+    hidden, aux = model_lib.forward(cfg, params, batch, mode="train",
+                                    dtype=dtype, return_hidden=True,
+                                    act_sharding=act_sharding,
+                                    scan_unroll=unroll,
+                                    attn_q_chunk=q_chunk,
+                                    attn_chunk_unroll=unroll)
+    S_h = hidden.shape[1]
+    labels = batch["labels"]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    if labels.shape[1] != S_h:            # vlm: patches prepended
+        pad = S_h - labels.shape[1]
+        labels = jnp.pad(labels, ((0, 0), (pad, 0)))
+        mask = jnp.pad(mask, ((0, 0), (pad, 0)))
+    ce = chunked_ce_loss(cfg, params, hidden, labels,
+                         mask.astype(jnp.float32), unroll=unroll)
+    return ce + AUX_WEIGHT * aux, (ce, aux)
+
+
+@dataclass
+class TrainState:
+    params: Any
+    opt: Any
+
+    def tree_flatten(self):
+        return (self.params, self.opt), None
+
+
+jax.tree_util.register_pytree_node(
+    TrainState, lambda s: ((s.params, s.opt), None),
+    lambda _, c: TrainState(params=c[0], opt=c[1]))
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: opt_lib.AdamWConfig,
+                    dtype=jnp.bfloat16,
+                    compress: Callable | None = None,
+                    act_sharding=None, unroll: int | bool = 1,
+                    q_chunk: int | None = None,
+                    microbatches: int = 1):
+    """``microbatches`` > 1: gradient accumulation — the global batch is
+    split into G sequential microbatches whose grads accumulate in f32,
+    dividing live activation memory by G (the standard lever for fitting
+    large-model training steps into HBM; see EXPERIMENTS.md §Perf)."""
+
+    def grad_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, dtype, act_sharding, unroll,
+                              q_chunk), has_aux=True)(params)
+
+    def train_step(state: TrainState, batch):
+        if microbatches > 1:
+            G = microbatches
+            mb = jax.tree.map(
+                lambda x: x.reshape(G, x.shape[0] // G, *x.shape[1:]),
+                batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+
+            def body(carry, b):
+                gsum, ls, cs, as_ = carry
+                (loss, (ce, aux)), g = grad_of(state.params, b)
+                gsum = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), gsum, g)
+                return (gsum, ls + loss, cs + ce, as_ + aux), None
+
+            (gsum, loss, ce, aux), _ = jax.lax.scan(
+                body, (zeros, 0.0, 0.0, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / G, gsum)
+            loss, ce, aux = loss / G, ce / G, aux / G
+        else:
+            (loss, (ce, aux)), grads = grad_of(state.params, batch)
+        new_params, new_opt, metrics = opt_lib.adamw_update(
+            opt_cfg, state.params, grads, state.opt, compress=compress)
+        metrics.update(loss=loss, ce=ce, aux=aux)
+        return TrainState(params=new_params, opt=new_opt), metrics
+
+    return train_step
+
+
+def make_sharded_train_step(cfg: ArchConfig, mesh: Mesh,
+                            opt_cfg: opt_lib.AdamWConfig | None = None,
+                            dtype=jnp.bfloat16,
+                            compress: Callable | None = None,
+                            donate: bool = True,
+                            seq_len: int | None = None,
+                            unroll: int | bool = 1,
+                            q_chunk: int | None = None,
+                            global_batch: int | None = None,
+                            microbatches: int = 1):
+    """jit the train step with full in/out shardings for the given mesh.
+
+    When ``seq_len`` divides the model axis, the residual stream is
+    sequence-sharded over "model" (Megatron sequence parallelism) so remat
+    activation memory scales with the full mesh.
+    """
+    opt_cfg = opt_cfg or opt_lib.AdamWConfig()
+    params_shape = jax.eval_shape(
+        lambda k: model_lib.init_params(cfg, k, dtype), jax.random.PRNGKey(0))
+    p_shard = shd.param_shardings(cfg, mesh, params_shape)
+    opt_shape = jax.eval_shape(opt_lib.init_opt_state, params_shape)
+    o_shard = opt_lib.opt_state_shardings(mesh, params_shape, p_shard)
+    state_shardings = TrainState(params=p_shard, opt=o_shard)
+    bspec = NamedSharding(mesh, shd.batch_pspec(mesh, cfg, global_batch))
+    act_sharding = None
+    if cfg.sharding != "dp" and seq_len is not None \
+            and seq_len % mesh.shape["model"] == 0:
+        dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+        act_sharding = NamedSharding(mesh, P(dp, "model", None))
+    step = make_train_step(cfg, opt_cfg, dtype, compress,
+                           act_sharding=act_sharding, unroll=unroll,
+                           q_chunk=q_chunk, microbatches=microbatches)
+    jit_step = jax.jit(
+        step,
+        in_shardings=(state_shardings, bspec),
+        out_shardings=(state_shardings, None),
+        donate_argnums=(0,) if donate else ())
+    return jit_step, state_shardings, bspec
+
+
+def train_batch_specs(cfg: ArchConfig, seq_len: int, global_batch: int,
+                      dtype=jnp.bfloat16):
+    """ShapeDtypeStructs of one training batch (for AOT lowering)."""
+    f = jax.ShapeDtypeStruct
+    if cfg.frontend == "audio_frames":
+        return {
+            "frames": f((global_batch, seq_len, cfg.frontend_dim),
+                        jnp.bfloat16),
+            "labels": f((global_batch, seq_len), jnp.int32),
+            "mask": f((global_batch, seq_len), jnp.float32),
+        }
+    if cfg.frontend == "vision_patches":
+        s_text = seq_len - cfg.num_patches
+        return {
+            "tokens": f((global_batch, s_text), jnp.int32),
+            "patches": f((global_batch, cfg.num_patches, cfg.frontend_dim),
+                         jnp.bfloat16),
+            "labels": f((global_batch, s_text), jnp.int32),
+            "mask": f((global_batch, s_text), jnp.float32),
+        }
+    return {
+        "tokens": f((global_batch, seq_len), jnp.int32),
+        "labels": f((global_batch, seq_len), jnp.int32),
+    }

@@ -1,0 +1,15 @@
+import os
+import sys
+from pathlib import Path
+
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
+# and benches must see 1 device; multi-device tests spawn subprocesses with
+# their own XLA_FLAGS (tests/_subproc.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_compilation_cache_dir", "/tmp/repro_jax_cache")
+jax.config.update("jax_persistent_cache_min_compile_time_secs", 1.0)

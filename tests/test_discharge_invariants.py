@@ -1,0 +1,122 @@
+"""Statement 9 (ARD) / Statement 1 (PRD) discharge properties, checked
+directly on the discharge operators — these are the properties the
+2|B|^2+1 and O(n^2) sweep-bound proofs rest on."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ard import ard_discharge_one
+from repro.core.graph import build, init_labels, intra_mask
+from repro.core.labels import gather_ghost_labels, region_relabel
+from repro.core.prd import prd_discharge_one
+from repro.data.grids import random_sparse
+from repro.core.partition import block_partition
+
+
+def _region_view(meta, state, k):
+    intra = intra_mask(state)
+    ghost_d = gather_ghost_labels(state)
+    sl = lambda a: a[k]
+    return dict(cf=sl(state.cf), sink_cf=sl(state.sink_cf),
+                excess=sl(state.excess), d=sl(state.d), ghost=sl(ghost_d),
+                nbr_local=sl(state.nbr_local), rev_slot=sl(state.rev_slot),
+                intra=sl(intra), emask=sl(state.emask),
+                vmask=sl(state.vmask))
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_ard_discharge_properties(seed):
+    p = random_sparse(16, 30, seed=seed)
+    part = block_partition(16, 3)
+    meta, state, _ = build(p, part)
+    state = init_labels(meta, state)
+    # give it a nontrivial valid labeling first
+    state = region_relabel(meta, state, ard=True)
+    v = _region_view(meta, state, 0)
+    res = ard_discharge_one(
+        v["cf"], v["sink_cf"], v["excess"], v["ghost"],
+        nbr_local=v["nbr_local"], rev_slot=v["rev_slot"], intra=v["intra"],
+        emask=v["emask"], vmask=v["vmask"], d_inf=meta.d_inf_ard,
+        stage_cap=meta.d_inf_ard)
+
+    # 1. optimality: no active vertices left w.r.t. (f', d')
+    active = (np.asarray(res.excess) > 0) & \
+        (np.asarray(res.d) < meta.d_inf_ard) & np.asarray(v["vmask"])
+    assert not active.any()
+
+    # 2. monotony: d' >= d
+    assert (np.asarray(res.d) >= np.asarray(v["d"]))[
+        np.asarray(v["vmask"])].all()
+
+    # 3. validity in the region network: residual intra arc (u,v) =>
+    #    d'(u) <= d'(v); residual cross arc => d'(u) <= d(ghost) + 1
+    d = np.asarray(res.d)
+    cf = np.asarray(res.cf)
+    intra = np.asarray(v["intra"])
+    emask = np.asarray(v["emask"])
+    nbr = np.asarray(v["nbr_local"])
+    ghost = np.asarray(v["ghost"])
+    V, E = cf.shape
+    for u in range(V):
+        if not bool(np.asarray(v["vmask"])[u]) or d[u] >= meta.d_inf_ard:
+            continue
+        for e in range(E):
+            if not emask[u, e] or cf[u, e] <= 0:
+                continue
+            if intra[u, e]:
+                assert d[u] <= d[nbr[u, e]], (u, e)
+            elif ghost[u, e] < meta.d_inf_ard:
+                assert d[u] <= ghost[u, e] + 1, (u, e)
+    # sink validity
+    sink_cf = np.asarray(res.sink_cf)
+    ok = (sink_cf == 0) | (d <= 0) | ~np.asarray(v["vmask"])
+    assert ok.all()
+
+    # 4. flow direction: cross pushes only into ghosts with label < d'(u)...
+    #    out_push(u, e) > 0 => d'(u) > d(ghost(e))
+    out = np.asarray(res.out_push)
+    for u, e in zip(*np.nonzero(out > 0)):
+        assert d[u] > ghost[u, e]
+
+    # conservation: excess in + nothing lost
+    before = int(np.asarray(v["excess"]).sum())
+    after = int(np.asarray(res.excess).sum()) + int(res.sink_pushed) + \
+        int(out.sum())
+    assert before == after
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_prd_discharge_properties(seed):
+    p = random_sparse(14, 26, seed=seed + 50)
+    part = block_partition(14, 2)
+    meta, state, _ = build(p, part)
+    state = init_labels(meta, state)
+    v = _region_view(meta, state, 0)
+    res = prd_discharge_one(
+        v["cf"], v["sink_cf"], v["excess"], v["d"], v["ghost"],
+        nbr_local=v["nbr_local"], rev_slot=v["rev_slot"], intra=v["intra"],
+        emask=v["emask"], vmask=v["vmask"], d_inf=meta.d_inf_prd)
+    vm = np.asarray(v["vmask"])
+    active = (np.asarray(res.excess) > 0) & \
+        (np.asarray(res.d) < meta.d_inf_prd) & vm
+    assert not active.any()
+    assert (np.asarray(res.d) >= np.asarray(v["d"]))[vm].all()
+    # validity (PRD): residual arc (u,v) => d'(u) <= d'(v)+1
+    d = np.asarray(res.d)
+    cf = np.asarray(res.cf)
+    intra = np.asarray(v["intra"])
+    nbr = np.asarray(v["nbr_local"])
+    ghost = np.asarray(v["ghost"])
+    emask = np.asarray(v["emask"])
+    V, E = cf.shape
+    for u in range(V):
+        if not vm[u]:
+            continue
+        for e in range(E):
+            if not emask[u, e] or cf[u, e] <= 0:
+                continue
+            dv = d[nbr[u, e]] if intra[u, e] else ghost[u, e]
+            assert d[u] <= dv + 1

@@ -1,0 +1,142 @@
+"""Multi-device behaviour, run in subprocesses with 8 forced host devices
+(XLA locks the device count at first init, so these cannot share the main
+test process).  Covers: shard_map P-ARD vs oracle, sharded train step vs
+single-device reference, elastic checkpoint restore across mesh sizes."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _run(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_sharded_pard_matches_oracle():
+    out = _run("""
+        import jax, numpy as np
+        from repro.data.grids import synthetic_grid
+        from repro.core.graph import build, init_labels
+        from repro.core import partition
+        from repro.core.distributed import solve_sharded
+        from repro.core.sweep import SweepConfig, extract_cut, cut_value
+        from repro.kernels.ref import maxflow_oracle
+
+        p = synthetic_grid(24, 24, connectivity=8, strength=120, seed=4)
+        want, _ = maxflow_oracle(p)
+        part = partition.grid_partition((24, 24), (2, 4))
+        meta, state, _ = build(p, part)
+        state0 = state
+        state = init_labels(meta, state)
+        mesh = jax.make_mesh((8,), ('regions',))
+        st, sweeps = solve_sharded(meta, state, mesh,
+                                   SweepConfig(method='ard'), max_sweeps=500)
+        assert int(st.flow_to_t) == want, (int(st.flow_to_t), want)
+        side = extract_cut(meta, st)
+        assert int(cut_value(meta, state0, side)) == want
+        print('OK sweeps', sweeps)
+    """)
+    assert "OK" in out
+
+
+def test_sharded_train_step_matches_single_device():
+    out = _run("""
+        import dataclasses, jax, numpy as np
+        import jax.numpy as jnp
+        from repro.configs import ARCHS
+        from repro.launch.mesh import make_host_mesh
+        from repro.models.model import init_params
+        from repro.train import optimizer as opt_lib
+        from repro.train import train_loop as tl
+        from repro.data.pipeline import MarkovSpec, markov_batch
+
+        cfg = dataclasses.replace(ARCHS['phi3-mini-3.8b'].smoke(),
+                                  num_layers=2, vocab_size=64,
+                                  num_kv_heads=2)
+        spec = MarkovSpec(vocab=64, branching=2)
+        params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+        batch = jax.tree.map(jnp.asarray, markov_batch(spec, 0, 8, 64))
+
+        # single-device reference
+        state = tl.TrainState(params=params,
+                              opt=opt_lib.init_opt_state(params))
+        ref_step = jax.jit(tl.make_train_step(
+            cfg, opt_lib.AdamWConfig(lr=1e-3), jnp.float32))
+        _, ref_m = ref_step(state, batch)
+
+        # sharded on a 2x4 mesh
+        mesh = make_host_mesh((2, 4), ('data', 'model'))
+        step, state_sh, bspec = tl.make_sharded_train_step(
+            cfg, mesh, opt_lib.AdamWConfig(lr=1e-3), jnp.float32,
+            donate=False, seq_len=64)
+        state2 = tl.TrainState(params=params,
+                               opt=opt_lib.init_opt_state(params))
+        state2 = jax.device_put(state2, state_sh)
+        batch2 = jax.device_put(batch, bspec)
+        _, m = step(state2, batch2)
+        a, b = float(ref_m['loss']), float(m['loss'])
+        assert abs(a - b) < 5e-4 * max(1, abs(a)), (a, b)
+        print('OK', a, b)
+    """)
+    assert "OK" in out
+
+
+def test_elastic_checkpoint_restore_across_meshes(tmp_path):
+    out = _run(f"""
+        import dataclasses, jax, numpy as np
+        import jax.numpy as jnp
+        from repro.configs import ARCHS
+        from repro.launch.mesh import make_host_mesh
+        from repro.launch import shardings as shd
+        from repro.models.model import init_params
+        from repro.train import checkpoint as ckpt
+        from repro.train import optimizer as opt_lib
+        from repro.train import train_loop as tl
+
+        cfg = dataclasses.replace(ARCHS['phi3-mini-3.8b'].smoke(),
+                                  num_layers=2, vocab_size=64,
+                                  num_kv_heads=2)
+        params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+        mesh_a = make_host_mesh((2, 4), ('data', 'model'))
+        shapes = jax.eval_shape(lambda: params)
+        sh_a = shd.param_shardings(cfg, mesh_a, shapes)
+        pa = jax.device_put(params, sh_a)
+        ckpt.save({str(tmp_path)!r}, 3, pa)
+
+        # restore onto a DIFFERENT mesh (4x2): elastic re-layout
+        mesh_b = make_host_mesh((4, 2), ('data', 'model'))
+        sh_b = shd.param_shardings(cfg, mesh_b, shapes)
+        pb = ckpt.restore({str(tmp_path)!r}, 3, shapes, sh_b)
+        for x, y in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        print('OK elastic')
+    """)
+    assert "OK elastic" in out
+
+
+def test_production_mesh_constructors():
+    out = _run("""
+        import jax
+        from repro.launch.mesh import make_production_mesh
+        m1 = make_production_mesh(multi_pod=False)
+        assert m1.axis_names == ('data', 'model') and m1.size == 256
+        m2 = make_production_mesh(multi_pod=True)
+        assert m2.axis_names == ('pod', 'data', 'model') and m2.size == 512
+        print('OK mesh')
+    """, devices=512)
+    assert "OK mesh" in out

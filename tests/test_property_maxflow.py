@@ -1,0 +1,106 @@
+"""Property-based tests (hypothesis): solver == oracle on arbitrary sparse
+networks; the paper's structural invariants hold after every sweep."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import SweepConfig, build, init_labels, solve_mincut
+from repro.core.graph import Problem
+from repro.core.labels import gather_ghost_labels
+from repro.core.sweep import num_active, parallel_sweep
+from repro.core.graph import intra_mask
+from repro.kernels.ref import maxflow_oracle
+
+
+@st.composite
+def problems(draw):
+    n = draw(st.integers(3, 12))
+    m = draw(st.integers(0, min(20, n * (n - 1) // 2)))
+    rng = np.random.RandomState(draw(st.integers(0, 2**31 - 1)))
+    pairs = set()
+    while len(pairs) < m:
+        u, v = rng.randint(0, n, 2)
+        if u != v and (u, v) not in pairs and (v, u) not in pairs:
+            pairs.add((u, v))
+    edges = np.asarray(sorted(pairs), np.int64).reshape(-1, 2)
+    return Problem(
+        num_vertices=n, edges=edges,
+        cap_fwd=rng.randint(0, 60, size=len(edges)).astype(np.int32),
+        cap_bwd=rng.randint(0, 60, size=len(edges)).astype(np.int32),
+        excess=rng.randint(0, 40, size=n).astype(np.int32),
+        sink_cap=rng.randint(0, 40, size=n).astype(np.int32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(problems(), st.integers(1, 4), st.booleans())
+def test_flow_matches_oracle(p, k, use_ard):
+    want, _ = maxflow_oracle(p)
+    cfg = SweepConfig(method="ard" if use_ard else "prd")
+    res = solve_mincut(p, num_regions=min(k, p.num_vertices), config=cfg)
+    assert res.flow_value == want
+
+
+def _labeling_valid_ard(meta, state):
+    """Paper eq. (9)/(10): d(u) <= d(v) + [cross] on residual arcs, capped."""
+    ghost_d = gather_ghost_labels(state)
+    intra = intra_mask(state)
+    d = state.d
+    du = jnp.broadcast_to(d[:, :, None], state.cf.shape)
+    resid = (state.cf > 0) & state.emask
+    at_cap = du >= meta.d_inf_ard
+    ok_intra = ~resid | ~intra | (du <= ghost_d) | at_cap
+    cross = state.emask & ~intra
+    ok_cross = ~resid | ~cross | (du <= ghost_d + 1) | at_cap
+    # sink validity: sink residual => d(u) <= 1... for ARD: d(u) <= 0 + 0
+    ok_sink = (state.sink_cf == 0) | (d <= 0) | (d >= meta.d_inf_ard) | \
+        ~state.vmask
+    return bool(jnp.all(ok_intra & ok_cross)) and bool(jnp.all(ok_sink))
+
+
+@settings(max_examples=10, deadline=None)
+@given(problems(), st.integers(2, 3))
+def test_sweep_invariants(p, k):
+    """After every parallel ARD sweep: labels valid, monotone; flow sane."""
+    from repro.core.partition import block_partition
+
+    part = block_partition(p.num_vertices, k)
+    meta, state, _ = build(p, part)
+    state = init_labels(meta, state)
+    cfg = SweepConfig(method="ard", use_global_gap=False)
+    prev_d = np.asarray(state.d)
+    total0 = int(jnp.sum(jnp.where(state.vmask, state.excess, 0))) + \
+        int(state.flow_to_t)
+    for sweep in range(12):
+        if int(num_active(meta, state, cfg)) == 0:
+            break
+        state, _ = parallel_sweep(meta, state, cfg,
+                                  jnp.asarray(sweep, jnp.int32))
+        d = np.asarray(state.d)
+        assert (d >= prev_d).all(), "labels must be monotone"
+        prev_d = d
+        assert _labeling_valid_ard(meta, state), "labeling must stay valid"
+        # conservation: excess + delivered flow is invariant
+        total = int(jnp.sum(jnp.where(state.vmask, state.excess, 0))) + \
+            int(state.flow_to_t)
+        assert total == total0, "flow mass must be conserved"
+        assert (np.asarray(state.cf) >= 0).all(), "residuals non-negative"
+
+
+@settings(max_examples=10, deadline=None)
+@given(problems())
+def test_reduction_sound(p):
+    from repro.core import region_reduction
+    from repro.core.partition import block_partition
+
+    part = block_partition(p.num_vertices, 2)
+    meta, state, layout = build(p, part)
+    red = region_reduction(meta, state)
+    want, _ = maxflow_oracle(p)
+    res = solve_mincut(p, part=part)
+    src = res.source_side
+    sk = layout.to_flat(np.asarray(red.strong_sink))
+    ss = layout.to_flat(np.asarray(red.strong_source))
+    assert not (src & sk).any(), "strong sink on source side"
+    assert (src[ss]).all() or not ss.any(), "strong source on sink side"
