@@ -1,0 +1,114 @@
+"""Engine-backend benchmark: XLA dense rows vs the fused Pallas kernel.
+
+Times one jitted parallel ARD sweep and the full solve on the synthetic
+grids of Sec. 7.1, once per engine backend, and writes ``BENCH_engine.json``
+so the perf trajectory of the hot path is recorded per PR.  On this
+CPU-only container the Pallas kernel runs in interpret mode, so its
+absolute numbers measure correctness-path overhead, not TPU speed — the
+JSON records platform and interpret mode so TPU runs are comparable.
+
+    PYTHONPATH=src python benchmarks/bench_engine_backend.py [--quick]
+        [--out BENCH_engine.json]
+
+Also exposes the ``run(emit, quick)`` contract of benchmarks/run.py.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.common import emit_csv, time_call  # noqa: E402
+
+BACKENDS = ("xla", "pallas")
+
+
+def _bench_instance(size, regions, backend, quick):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import SweepConfig, grid_partition, solve_mincut
+    from repro.core.graph import build, init_labels
+    from repro.core.sweep import parallel_sweep
+    from repro.data.grids import synthetic_grid
+
+    p = synthetic_grid(size, size, connectivity=8, strength=150, seed=0)
+    part = grid_partition((size, size), regions)
+    cfg = SweepConfig(method="ard", engine_backend=backend)
+
+    # one-sweep latency (jitted program, post-warmup median)
+    meta, state, _ = build(p, part)
+    state = init_labels(meta, state)
+    sweep_us, _ = time_call(
+        lambda: parallel_sweep(meta, state, cfg, jnp.asarray(0, jnp.int32)),
+        repeats=2 if quick else 3)
+
+    # full-solve wall time + solution stats (warm-up run first so the
+    # number measures execution, not trace/compile time)
+    solve_mincut(p, part=part, config=cfg)
+    t0 = time.perf_counter()
+    res = solve_mincut(p, part=part, config=cfg)
+    solve_s = time.perf_counter() - t0
+    return dict(
+        instance=f"grid{size}x{size}_r{regions[0]}x{regions[1]}",
+        backend=backend,
+        sweep_us=round(sweep_us, 1),
+        solve_s=round(solve_s, 3),
+        sweeps=res.stats.sweeps,
+        engine_iters=res.stats.engine_iters,
+        flow=res.flow_value,
+    )
+
+
+def collect(quick: bool = False) -> dict:
+    import jax
+
+    sizes = [(12, (2, 2))] if quick else [(16, (2, 2)), (24, (2, 2))]
+    rows = []
+    for size, regions in sizes:
+        per_backend = {}
+        for backend in BACKENDS:
+            row = _bench_instance(size, regions, backend, quick)
+            per_backend[backend] = row
+            rows.append(row)
+        a, b = per_backend["xla"], per_backend["pallas"]
+        assert a["flow"] == b["flow"], "backend parity violated in bench"
+        a["speedup_vs_pallas"] = round(b["sweep_us"] / a["sweep_us"], 2)
+    return dict(
+        bench="engine_backend",
+        platform=jax.default_backend(),
+        jax_version=jax.__version__,
+        pallas_interpret=jax.default_backend() != "tpu",
+        results=rows,
+    )
+
+
+def run(emit=emit_csv, quick: bool = False) -> None:
+    data = collect(quick=quick)
+    for row in data["results"]:
+        emit(f"engine/{row['backend']}/{row['instance']}", row["sweep_us"],
+             f"solve_s={row['solve_s']};sweeps={row['sweeps']};"
+             f"flow={row['flow']}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=str(Path(__file__).resolve().parents[1]
+                                         / "BENCH_engine.json"))
+    args = ap.parse_args()
+    data = collect(quick=args.quick)
+    Path(args.out).write_text(json.dumps(data, indent=2) + "\n")
+    print(f"wrote {args.out}")
+    for row in data["results"]:
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

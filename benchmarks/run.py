@@ -25,9 +25,11 @@ def main() -> None:
                     help="substring filter on benchmark module names")
     args, _ = ap.parse_known_args()
 
-    from benchmarks import bench_competitions, bench_lm, bench_synthetic
+    from benchmarks import (bench_competitions, bench_engine_backend,
+                            bench_lm, bench_synthetic)
 
     mods = [("synthetic", bench_synthetic),
+            ("engine_backend", bench_engine_backend),
             ("competitions", bench_competitions),
             ("lm", bench_lm)]
     print("name,us_per_call,derived")

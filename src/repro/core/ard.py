@@ -62,13 +62,15 @@ def _distinct_sorted_ghost_labels(ghost_d, cross, emask, d_inf):
 
 def ard_discharge_one(cf, sink_cf, excess, ghost_d, *, nbr_local, rev_slot,
                       intra, emask, vmask, d_inf: int, stage_cap,
-                      max_iters: int | None = None) -> DischargeResult:
+                      max_iters: int | None = None,
+                      backend: str = "xla") -> DischargeResult:
     """ARD on a single region network (vmapped over regions by sweep.py).
 
     ``ghost_d``  — frozen labels of cross-arc destinations (paper: d|B^R).
     ``stage_cap`` — largest ghost label admissible as an augmentation target
                     this sweep (partial discharges, Sec. 6.2); pass d_inf for
                     a full discharge.
+    ``backend``  — engine compute-phase backend ("xla" or "pallas").
     """
     V, E = cf.shape
     cross = emask & ~intra
@@ -89,7 +91,7 @@ def ard_discharge_one(cf, sink_cf, excess, ghost_d, *, nbr_local, rev_slot,
             nbr_local=nbr_local, rev_slot=rev_slot, intra=intra, emask=emask,
             vmask=vmask, cross_pushable=target_cross,
             cross_lab=jnp.zeros_like(ghost_d), d_inf=linf_local,
-            sink_open=True, max_iters=max_iters)
+            sink_open=True, max_iters=max_iters, backend=backend)
         return (i + 1, es.cf, es.sink_cf, es.excess,
                 out_push + es.out_push, sink_pushed + es.sink_pushed,
                 iters + es.iters)

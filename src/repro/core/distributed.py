@@ -27,8 +27,35 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+try:                                    # jax >= 0.5: public top-level API
+    from jax import shard_map as _shard_map
+except ImportError:                     # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """Version-compat shard_map: replication checking off on every JAX.
+
+    The checker kwarg was renamed (check_rep -> check_vma) across JAX
+    releases; we need it off because the sweep body mixes replicated
+    (cross-arc tables) and sharded (region) operands.
+    """
+    try:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+    except TypeError:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+
+
+def _axis_size(a):
+    """jax.lax.axis_size with a pre-0.5 fallback (psum of ones)."""
+    try:
+        return jax.lax.axis_size(a)
+    except AttributeError:
+        return jax.lax.psum(1, a)
 
 from repro.core import heuristics
 from repro.core.ard import ard_discharge_one
@@ -65,13 +92,14 @@ def _one_sweep_local(meta: GraphMeta, cfg: SweepConfig, axes,
     ``exchange`` — "full": all-gather the whole label array (baseline);
     "boundary": exchange only the labels the remote side actually needs
     (one psum over the flat cross-arc table) — the beyond-paper optimized
-    schedule; see EXPERIMENTS.md §Perf (maxflow pair).
+    schedule; see EXPERIMENTS.md §Perf for the measured exchange-mode and
+    engine-backend numbers.
     """
     Kl, V, E = state.cf.shape                     # local regions
     # region offset of this shard (flat index over possibly-multiple axes)
     idx = jnp.zeros((), _I32)
     for a in axes:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        idx = idx * _axis_size(a) + jax.lax.axis_index(a)
     offset = idx * Kl
 
     src, dst = state.cross_src, state.cross_dst
@@ -107,14 +135,15 @@ def _one_sweep_local(meta: GraphMeta, cfg: SweepConfig, axes,
         fn = lambda cf, s, e, g, nl, rs, it, em, vm: ard_discharge_one(
             cf, s, e, g, nbr_local=nl, rev_slot=rs, intra=it, emask=em,
             vmask=vm, d_inf=meta.d_inf_ard, stage_cap=stage_cap,
-            max_iters=cfg.engine_max_iters)
+            max_iters=cfg.engine_max_iters, backend=cfg.engine_backend)
         res = jax.vmap(fn)(state.cf, state.sink_cf, state.excess, ghost_d,
                            state.nbr_local, state.rev_slot, intra,
                            state.emask, state.vmask)
     else:
         fn = lambda cf, s, e, d, g, nl, rs, it, em, vm: prd_discharge_one(
             cf, s, e, d, g, nbr_local=nl, rev_slot=rs, intra=it, emask=em,
-            vmask=vm, d_inf=meta.d_inf_prd, max_iters=cfg.engine_max_iters)
+            vmask=vm, d_inf=meta.d_inf_prd, max_iters=cfg.engine_max_iters,
+            backend=cfg.engine_backend)
         res = jax.vmap(fn)(state.cf, state.sink_cf, state.excess, state.d,
                            ghost_d, state.nbr_local, state.rev_slot, intra,
                            state.emask, state.vmask)
@@ -197,8 +226,7 @@ def make_sharded_sweep(meta: GraphMeta, mesh: Mesh, cfg: SweepConfig,
     in_specs = (FlowState(**spec), P())
     out_specs = (FlowState(**spec), P())
     body = partial(_one_sweep_local, meta, cfg, axes, exchange=exchange)
-    fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                   check_vma=False)
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
     return jax.jit(fn)
 
 

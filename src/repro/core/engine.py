@@ -21,6 +21,24 @@ iteration, like a whole Discharge step of [Goldberg-Tarjan 88] at once.
 
 Used by prd.py (global labels, paper Sec. 3) and by each ARD stage
 (BFS-initialised local labels toward the stage target set, Sec. 4.2).
+
+Backends
+--------
+The per-iteration *compute phase* (admissibility, excess split, relabel
+minimum — everything except the scatter application of the deltas) is a pure
+function from the current state to ``(delta [V, 1+E], new_lab [V])``, and is
+selectable:
+
+  "xla"    — dense-row jnp ops (``_phase_xla``), the original engine code;
+  "pallas" — the fused VMEM-tiled kernel ``repro.kernels.push_relabel``
+             (interpret mode off-TPU), sharing the exact int32 math of the
+             XLA phase, so the two backends are bit-identical.
+
+Each iteration calls the phase twice: once on the pre-push state (the delta
+output drives the push) and once on the post-push state (the new_lab output
+is the relabel — relabels must see the arcs created by this iteration's
+pushes).  Scatter application of the deltas (reverse arcs, receiver excess)
+stays in XLA in both backends, as the kernel docstring prescribes.
 """
 
 from __future__ import annotations
@@ -31,8 +49,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.graph import INF_LABEL
+from repro.kernels import push_relabel as _pr_kernel
 
 _I32 = jnp.int32
+
+ENGINE_BACKENDS = ("xla", "pallas")
 
 
 class EngineState(NamedTuple):
@@ -46,10 +67,78 @@ class EngineState(NamedTuple):
     relabel_sum: jax.Array  # i32[]    total label increase (for complexity accounting)
 
 
-def _neighbor_labels(lab, nbr_local, intra, cross_lab, pushable, emask):
-    """Per-arc destination label; blocked arcs get INF_LABEL."""
+def _phase_xla(lab, cf, sink_cf, excess, *, nbr_local, intra, pushable,
+               cross_lab, d_inf):
+    """One push/relabel compute phase in dense XLA row ops.
+
+    Same contract as the Pallas kernel (``kernels.push_relabel``): inputs are
+    pre-gated (``pushable`` already folds cross/emask; inactive vertices have
+    zero excess; a closed sink is zero ``sink_cf``), output is the push delta
+    split (sink in column 0) plus the relabel target of every active vertex
+    with no admissible arc.  Mirrors ``kernels.ref.push_relabel_iteration_ref``.
+    """
+    act = (excess > 0) & (lab < d_inf)
     nlab = jnp.where(intra, lab[nbr_local], cross_lab)
-    return jnp.where(pushable & emask, nlab, INF_LABEL)
+    nlab = jnp.where(pushable, nlab, INF_LABEL)
+    adm = (cf > 0) & (lab[:, None] == nlab + 1) & act[:, None]
+    sink_adm = (sink_cf > 0) & (lab == 1) & act
+    sink_cap = jnp.where(sink_adm, sink_cf, 0)
+    arc_cap = jnp.where(adm, cf, 0)
+    caps = jnp.concatenate([sink_cap[:, None], arc_cap], axis=1)   # [V,1+E]
+    avail = jnp.where(act, excess, 0)
+    cum_excl = jnp.cumsum(caps, axis=1) - caps
+    delta = jnp.clip(avail[:, None] - cum_excl, 0, caps)           # [V,1+E]
+    no_adm = act & ~adm.any(axis=1) & ~sink_adm
+    cand = jnp.where(cf > 0, nlab + 1, INF_LABEL).min(axis=1)
+    cand = jnp.where(sink_cf > 0, jnp.minimum(cand, 1), cand)
+    new_lab = jnp.where(no_adm,
+                        jnp.maximum(jnp.minimum(cand, d_inf), lab), lab)
+    return delta, new_lab
+
+
+def make_phase(backend: str, *, nbr_local, intra, emask, vmask,
+               cross_pushable, cross_lab, d_inf, sink_open: bool = True,
+               block_v: int | None = None, interpret: bool | None = None):
+    """Build the compute-phase closure for ``backend``.
+
+    The returned ``phase(lab, cf, sink_cf, excess, mode="both") -> (delta,
+    new_lab)`` applies the engine's gating (cross/emask arc gate, vmask
+    excess gate, sink_open) and dispatches to the XLA rows or the Pallas
+    kernel.  Both backends receive identical gated inputs and implement
+    identical int32 math, so their outputs are bit-equal.  ``mode`` ("push" /
+    "relabel") statically prunes the output the caller discards — XLA DCEs
+    that itself, but a pallas_call is opaque to DCE, so the kernel takes the
+    hint explicitly.
+    """
+    if backend not in ENGINE_BACKENDS:
+        raise ValueError(f"unknown engine backend {backend!r}; "
+                         f"expected one of {ENGINE_BACKENDS}")
+    d_inf = jnp.asarray(d_inf, _I32)
+
+    if backend == "pallas":
+        # interpret mode everywhere but real TPUs (CPU containers, tests)
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        if block_v is None:
+            block_v = _pr_kernel.DEFAULT_BLOCK_V
+
+        def phase(lab, cf, sink_cf, excess, mode="both"):
+            return _pr_kernel.engine_phase(
+                lab, cf, sink_cf, excess, nbr_local=nbr_local, intra=intra,
+                emask=emask, vmask=vmask, cross_pushable=cross_pushable,
+                cross_lab=cross_lab, d_inf=d_inf, sink_open=sink_open,
+                block_v=block_v, interpret=interpret, mode=mode)
+        return phase
+
+    pushable = (cross_pushable | intra) & emask
+
+    def phase(lab, cf, sink_cf, excess, mode="both"):
+        excess = jnp.where(vmask, excess, 0)
+        sink = sink_cf if sink_open else jnp.zeros_like(sink_cf)
+        return _phase_xla(lab, cf, sink, excess, nbr_local=nbr_local,
+                          intra=intra, pushable=pushable,
+                          cross_lab=cross_lab, d_inf=d_inf)
+    return phase
 
 
 def push_relabel(
@@ -68,43 +157,37 @@ def push_relabel(
     d_inf,                       # label ceiling (python int or i32 scalar)
     sink_open: bool = True,
     max_iters: int | None = None,
+    backend: str = "xla",
+    block_v: int | None = None,
+    interpret: bool | None = None,
 ) -> EngineState:
     """Run push/relabel until no active vertex remains.
 
     Returns the final engine state; ``out_push`` holds the flow sent over
-    cross-region arcs, to be fused/applied by the sweep driver.
+    cross-region arcs, to be fused/applied by the sweep driver.  ``backend``
+    selects the compute-phase implementation ("xla" dense rows or the fused
+    "pallas" kernel); both produce bit-identical states.
     """
     V, E = cf.shape
     d_inf = jnp.asarray(d_inf, _I32)
     flat_n = V * E
     zero_e = jnp.zeros((V, E), _I32)
+    phase = make_phase(backend, nbr_local=nbr_local, intra=intra, emask=emask,
+                       vmask=vmask, cross_pushable=cross_pushable,
+                       cross_lab=cross_lab, d_inf=d_inf, sink_open=sink_open,
+                       block_v=block_v, interpret=interpret)
 
     def active_mask(s: EngineState):
         return (s.excess > 0) & (s.lab < d_inf) & vmask
 
-    def admissible(s: EngineState):
-        nlab = _neighbor_labels(s.lab, nbr_local, intra, cross_lab,
-                                cross_pushable | intra, emask)
-        adm = (s.cf > 0) & (s.lab[:, None] == nlab + 1)
-        sink_adm = (s.sink_cf > 0) & (s.lab == 1) if sink_open else jnp.zeros((V,), bool)
-        return adm, sink_adm
-
     def body(s: EngineState) -> EngineState:
-        act = active_mask(s)
-        # ---- push phase ----
-        adm, sink_adm = admissible(s)
-        adm = adm & act[:, None]
-        sink_adm = sink_adm & act
-        sink_cap = jnp.where(sink_adm, s.sink_cf, 0)
-        arc_cap = jnp.where(adm, s.cf, 0)
-        caps = jnp.concatenate([sink_cap[:, None], arc_cap], axis=1)   # [V,1+E]
-        avail = jnp.where(act, s.excess, 0)
-        cum_excl = jnp.cumsum(caps, axis=1) - caps
-        delta = jnp.clip(avail[:, None] - cum_excl, 0, caps)           # [V,1+E]
+        # ---- push phase (compute on the pre-push state) ----
+        delta, _ = phase(s.lab, s.cf, s.sink_cf, s.excess, mode="push")
         d_sink = delta[:, 0]
         d_arc = delta[:, 1:]
         pushed = d_sink + d_arc.sum(axis=1)
 
+        # ---- scatter application (always XLA: global, cross-tile) ----
         excess = s.excess - pushed
         sink_cf = s.sink_cf - d_sink
         cf = s.cf - d_arc
@@ -123,19 +206,9 @@ def push_relabel(
         s2 = EngineState(cf, sink_cf, excess, s.lab, out_push,
                          s.sink_pushed + d_sink.sum(), s.iters + 1,
                          s.relabel_sum)
-        # ---- relabel phase (on post-push residual graph) ----
-        act2 = active_mask(s2)
-        adm2, sink_adm2 = admissible(s2)
-        has_adm = adm2.any(axis=1) | sink_adm2
-        need = act2 & ~has_adm
-        nlab = _neighbor_labels(s2.lab, nbr_local, intra, cross_lab,
-                                cross_pushable | intra, emask)
-        cand = jnp.where(s2.cf > 0, nlab + 1, INF_LABEL)
-        cand_min = cand.min(axis=1)
-        if sink_open:
-            cand_min = jnp.where(s2.sink_cf > 0, jnp.minimum(cand_min, 1), cand_min)
-        new_lab = jnp.minimum(cand_min, d_inf)
-        new_lab = jnp.where(need, jnp.maximum(new_lab, s2.lab), s2.lab)
+        # ---- relabel phase (on the post-push residual graph) ----
+        _, new_lab = phase(s2.lab, s2.cf, s2.sink_cf, s2.excess,
+                           mode="relabel")
         relabel_sum = s2.relabel_sum + jnp.sum(
             jnp.where(vmask, new_lab - s2.lab, 0))
         return s2._replace(lab=new_lab, relabel_sum=relabel_sum)

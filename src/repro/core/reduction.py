@@ -91,7 +91,8 @@ def _reach_backward(state: FlowState, target: jax.Array, intra) -> jax.Array:
 
 
 def _augment_all(meta: GraphMeta, state: FlowState, *, target_cross,
-                 sink_open: bool, excess=None) -> FlowState:
+                 sink_open: bool, excess=None,
+                 backend: str = "xla") -> FlowState:
     """Maxflow from excess to {sink?} ∪ cross-arc exits, in every region."""
     intra = intra_mask(state)
     V = meta.region_size
@@ -105,7 +106,7 @@ def _augment_all(meta: GraphMeta, state: FlowState, *, target_cross,
         es = push_relabel(cf, sink_cf, e, lab0, nbr_local=nl, rev_slot=rs,
                           intra=it, emask=em, vmask=vm, cross_pushable=tc,
                           cross_lab=jnp.zeros_like(cf), d_inf=linf,
-                          sink_open=sink_open)
+                          sink_open=sink_open, backend=backend)
         return es.cf, es.sink_cf, es.excess, es.sink_pushed
 
     cf, sink_cf, exc, sink_pushed = jax.vmap(one)(
@@ -115,8 +116,12 @@ def _augment_all(meta: GraphMeta, state: FlowState, *, target_cross,
                          flow_to_t=state.flow_to_t + sink_pushed.sum())
 
 
-def region_reduction(meta: GraphMeta, state: FlowState) -> ReductionResult:
+def region_reduction(meta: GraphMeta, state: FlowState, *,
+                     backend: str = "xla") -> ReductionResult:
     """Kovtun's two auxiliary maxflows (folded form) for all regions.
+
+    ``backend`` selects the discharge engine's compute-phase implementation
+    ("xla" or "pallas"), like ``SweepConfig.engine_backend`` for the sweeps.
 
     Faithfulness note (DESIGN.md): Alg. 5 computes both aux problems with a
     *single* flow per region by exploiting the disjointness of the
@@ -138,8 +143,10 @@ def region_reduction(meta: GraphMeta, state: FlowState) -> ReductionResult:
     # step 1: Augment(s, t); step 2: Augment(s, B^S) — every residual
     # out-arc is an exit of capacity c_f(u, w); maxflow reaches exactly the
     # s-reachable exits = B^S.
-    stA = _augment_all(meta, state, target_cross=no_targets, sink_open=True)
-    stA = _augment_all(meta, stA, target_cross=cross, sink_open=False)
+    stA = _augment_all(meta, state, target_cross=no_targets, sink_open=True,
+                       backend=backend)
+    stA = _augment_all(meta, stA, target_cross=cross, sink_open=False,
+                       backend=backend)
 
     # ---- phase B (aux2: source -> boundary flooded in) ----
     # fresh copy; sources = original excess + original in-arc capacities
@@ -149,7 +156,7 @@ def region_reduction(meta: GraphMeta, state: FlowState) -> ReductionResult:
         jnp.where(state.cross_valid, jnp.maximum(arc_cf0, 0), 0)
     ).reshape(K, V)
     stB = _augment_all(meta, state, target_cross=no_targets, sink_open=True,
-                       excess=state.excess + virt)
+                       excess=state.excess + virt, backend=backend)
 
     # ---- classification ----
     strong_source = _reach_forward(stA, stA.excess > 0, intra)

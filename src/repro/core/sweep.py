@@ -31,6 +31,7 @@ import jax.numpy as jnp
 
 from repro.core import heuristics
 from repro.core.ard import ard_discharge_one
+from repro.core.engine import ENGINE_BACKENDS
 from repro.core.graph import FlowState, GraphMeta, intra_mask
 from repro.core.labels import (gather_ghost_labels, global_gap,
                                region_relabel)
@@ -50,6 +51,9 @@ class SweepConfig:
     use_boundary_relabel— Sec. 6.1 boundary-relabel heuristic each sweep.
     max_sweeps          — hard cap (defaults to the theoretical bound).
     engine_max_iters    — safety cap for the inner engine (None = unbounded).
+    engine_backend      — compute-phase backend of the discharge engine:
+                          "xla" (dense rows) or "pallas" (fused kernel,
+                          interpret mode off-TPU); bit-identical results.
     """
 
     method: str = "ard"
@@ -59,9 +63,11 @@ class SweepConfig:
     use_boundary_relabel: bool = False
     max_sweeps: int | None = None
     engine_max_iters: int | None = None
+    engine_backend: str = "xla"
 
     def __post_init__(self):
         assert self.method in ("ard", "prd")
+        assert self.engine_backend in ENGINE_BACKENDS
 
 
 @dataclass
@@ -87,13 +93,14 @@ def _discharge_all(meta: GraphMeta, state: FlowState, cfg: SweepConfig,
         fn = lambda cf, s, e, g, nl, rs, it, em, vm: ard_discharge_one(
             cf, s, e, g, nbr_local=nl, rev_slot=rs, intra=it, emask=em,
             vmask=vm, d_inf=meta.d_inf_ard, stage_cap=stage_cap,
-            max_iters=cfg.engine_max_iters)
+            max_iters=cfg.engine_max_iters, backend=cfg.engine_backend)
         return jax.vmap(fn)(state.cf, state.sink_cf, state.excess, ghost_d,
                             state.nbr_local, state.rev_slot, intra,
                             state.emask, state.vmask)
     fn = lambda cf, s, e, d, g, nl, rs, it, em, vm: prd_discharge_one(
         cf, s, e, d, g, nbr_local=nl, rev_slot=rs, intra=it, emask=em,
-        vmask=vm, d_inf=meta.d_inf_prd, max_iters=cfg.engine_max_iters)
+        vmask=vm, d_inf=meta.d_inf_prd, max_iters=cfg.engine_max_iters,
+        backend=cfg.engine_backend)
     return jax.vmap(fn)(state.cf, state.sink_cf, state.excess, state.d,
                         ghost_d, state.nbr_local, state.rev_slot, intra,
                         state.emask, state.vmask)
@@ -187,14 +194,16 @@ def sequential_sweep(meta: GraphMeta, state: FlowState, cfg: SweepConfig,
                     rev_slot=sl(state.rev_slot), intra=sl(intra),
                     emask=sl(state.emask), vmask=sl(state.vmask),
                     d_inf=meta.d_inf_ard, stage_cap=stage_cap_all,
-                    max_iters=cfg.engine_max_iters)
+                    max_iters=cfg.engine_max_iters,
+                    backend=cfg.engine_backend)
             else:
                 res = prd_discharge_one(
                     sl(state.cf), sl(state.sink_cf), sl(state.excess),
                     sl(state.d), sl(ghost_d), nbr_local=sl(state.nbr_local),
                     rev_slot=sl(state.rev_slot), intra=sl(intra),
                     emask=sl(state.emask), vmask=sl(state.vmask),
-                    d_inf=meta.d_inf_prd, max_iters=cfg.engine_max_iters)
+                    d_inf=meta.d_inf_prd, max_iters=cfg.engine_max_iters,
+                    backend=cfg.engine_backend)
             upd = lambda a, v: jax.lax.dynamic_update_index_in_dim(a, v, k, 0)
             st = state.replace(
                 cf=upd(state.cf, res.cf),

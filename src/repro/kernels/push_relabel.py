@@ -22,6 +22,12 @@ E is padded to the lane width (128) by the wrapper.
 Validated against kernels/ref.py in interpret mode over a shape/dtype sweep
 (tests/test_kernels.py); on this CPU-only container the kernel always runs
 with interpret=True.
+
+``push_relabel_phase`` is the raw tiled kernel; ``engine_phase`` is the
+engine-facing adapter that accepts core/engine.py's mask semantics
+(``cross_pushable``/``emask``/``vmask``/``sink_open``) and is what the
+``backend="pallas"`` path of ``repro.core.engine.push_relabel`` calls twice
+per iteration (pre-push for the deltas, post-push for the relabels).
 """
 
 from __future__ import annotations
@@ -38,8 +44,16 @@ DEFAULT_BLOCK_V = 256
 
 def _pr_kernel(lab_ref, cf_ref, sink_cf_ref, excess_ref, nbr_ref, intra_ref,
                pushable_ref, cross_lab_ref, d_inf_ref,
-               delta_ref, new_lab_ref):
-    """One vertex-block: push deltas (sink col 0) + relabel candidates."""
+               delta_ref, new_lab_ref, *, mode: str):
+    """One vertex-block: push deltas (sink col 0) and/or relabel candidates.
+
+    ``mode`` ("both" | "push" | "relabel") statically drops the unneeded
+    output's compute — pallas_call is opaque to XLA DCE, and the engine
+    consumes only one output per call (deltas pre-push, relabels post-push).
+    The admissibility mask is shared; only the cumsum excess split resp. the
+    relabel min-reduction is skipped.  A skipped output ref is still written
+    (zero deltas / unchanged labels) so it stays well-defined.
+    """
     lab_full = lab_ref[...]                      # [V] whole-region labels
     cf = cf_ref[...]                             # [BV, E]
     nbr = nbr_ref[...]
@@ -61,31 +75,39 @@ def _pr_kernel(lab_ref, cf_ref, sink_cf_ref, excess_ref, nbr_ref, intra_ref,
 
     adm = (cf > 0) & (my_lab[:, None] == nlab + 1) & act[:, None]
     sink_adm = (sink_cf > 0) & (my_lab == 1) & act
-    sink_cap = jnp.where(sink_adm, sink_cf, 0)
-    arc_cap = jnp.where(adm, cf, 0)
-    caps = jnp.concatenate([sink_cap[:, None], arc_cap], axis=1)
-    avail = jnp.where(act, excess, 0)
-    cum_excl = jnp.cumsum(caps, axis=1) - caps
-    delta = jnp.clip(avail[:, None] - cum_excl, 0, caps)
-    delta_ref[...] = delta
 
-    no_adm = act & ~adm.any(axis=1) & ~sink_adm
-    cand = jnp.where(cf > 0, nlab + 1, INF_LABEL).min(axis=1)
-    cand = jnp.where(sink_cf > 0, jnp.minimum(cand, 1), cand)
-    new_lab = jnp.where(no_adm,
-                        jnp.maximum(jnp.minimum(cand, d_inf), my_lab), my_lab)
-    new_lab_ref[...] = new_lab
+    if mode in ("both", "push"):
+        sink_cap = jnp.where(sink_adm, sink_cf, 0)
+        arc_cap = jnp.where(adm, cf, 0)
+        caps = jnp.concatenate([sink_cap[:, None], arc_cap], axis=1)
+        avail = jnp.where(act, excess, 0)
+        cum_excl = jnp.cumsum(caps, axis=1) - caps
+        delta_ref[...] = jnp.clip(avail[:, None] - cum_excl, 0, caps)
+    else:
+        delta_ref[...] = jnp.zeros(delta_ref.shape, delta_ref.dtype)
+
+    if mode in ("both", "relabel"):
+        no_adm = act & ~adm.any(axis=1) & ~sink_adm
+        cand = jnp.where(cf > 0, nlab + 1, INF_LABEL).min(axis=1)
+        cand = jnp.where(sink_cf > 0, jnp.minimum(cand, 1), cand)
+        new_lab_ref[...] = jnp.where(
+            no_adm, jnp.maximum(jnp.minimum(cand, d_inf), my_lab), my_lab)
+    else:
+        new_lab_ref[...] = my_lab
 
 
-@functools.partial(jax.jit, static_argnames=("block_v", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_v", "interpret", "mode"))
 def push_relabel_phase(lab, cf, sink_cf, excess, nbr, intra, pushable,
                        cross_lab, d_inf, *, block_v: int = DEFAULT_BLOCK_V,
-                       interpret: bool = True):
+                       interpret: bool = True, mode: str = "both"):
     """Pallas-tiled push/relabel compute phase.
 
     Returns (delta [V, 1+E] with the sink in column 0, new_lab [V]).
-    Masks are int32 (0/1) for portable Pallas lowering.
+    Masks are int32 (0/1) for portable Pallas lowering.  ``mode`` statically
+    prunes the unused output's compute ("push": zero new_lab changes,
+    "relabel": zero deltas); "both" computes everything.
     """
+    assert mode in ("both", "push", "relabel"), mode
     V, E = cf.shape
     bv = min(block_v, V)
     if V % bv:                       # pad rows to a whole number of tiles
@@ -95,12 +117,12 @@ def push_relabel_phase(lab, cf, sink_cf, excess, nbr, intra, pushable,
             jnp.pad(lab, (0, pad), constant_values=INF_LABEL), padv(cf),
             padv(sink_cf), padv(excess), padv(nbr), padv(intra),
             padv(pushable), padv(cross_lab), d_inf, block_v=bv,
-            interpret=interpret)
+            interpret=interpret, mode=mode)
         return out_d[:V], out_l[:V]
 
     grid = (V // bv,)
     kernel = pl.pallas_call(
-        _pr_kernel,
+        functools.partial(_pr_kernel, mode=mode),
         grid=grid,
         in_specs=[
             pl.BlockSpec((V,), lambda i: (0,)),            # lab (full)
@@ -123,6 +145,29 @@ def push_relabel_phase(lab, cf, sink_cf, excess, nbr, intra, pushable,
         ],
         interpret=interpret,
     )
-    d_inf_arr = jnp.asarray([d_inf], jnp.int32)
+    d_inf_arr = jnp.reshape(jnp.asarray(d_inf, jnp.int32), (1,))
     return kernel(lab, cf, sink_cf, excess, nbr, intra, pushable, cross_lab,
                   d_inf_arr)
+
+
+def engine_phase(lab, cf, sink_cf, excess, *, nbr_local, intra, emask, vmask,
+                 cross_pushable, cross_lab, d_inf, sink_open: bool = True,
+                 block_v: int = DEFAULT_BLOCK_V, interpret: bool = True,
+                 mode: str = "both"):
+    """Engine-semantics adapter over ``push_relabel_phase``.
+
+    Folds the engine's masks into the kernel's inputs: arcs are pushable iff
+    intra or cross-enabled (and real, per ``emask``); vertices outside
+    ``vmask`` are made inactive by zeroing their excess; a closed sink is a
+    zero sink capacity.  Returns (delta [V, 1+E] with sink column 0, new_lab
+    [V]) — exactly what one compute phase of ``core.engine.push_relabel``
+    consumes.  ``mode`` prunes the output the caller discards ("push" /
+    "relabel" / "both").
+    """
+    pushable = ((cross_pushable | intra) & emask).astype(jnp.int32)
+    excess = jnp.where(vmask, excess, 0)
+    sink = sink_cf if sink_open else jnp.zeros_like(sink_cf)
+    return push_relabel_phase(lab, cf, sink, excess, nbr_local,
+                              intra.astype(jnp.int32), pushable, cross_lab,
+                              d_inf, block_v=block_v, interpret=interpret,
+                              mode=mode)

@@ -18,6 +18,8 @@ import numpy as np
 
 
 def main():
+    from repro.core.engine import ENGINE_BACKENDS
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--height", type=int, default=64)
     ap.add_argument("--width", type=int, default=64)
@@ -27,6 +29,10 @@ def main():
     ap.add_argument("--method", choices=["ard", "prd"], default="ard")
     ap.add_argument("--sequential", action="store_true")
     ap.add_argument("--sharded", action="store_true")
+    ap.add_argument("--engine-backend", choices=list(ENGINE_BACKENDS),
+                    default="xla",
+                    help="discharge-engine compute phase: dense XLA rows or "
+                         "the fused Pallas kernel (interpret mode off-TPU)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -42,7 +48,8 @@ def main():
                           connectivity=args.connectivity,
                           strength=args.strength, seed=args.seed)
     part = grid_partition((args.height, args.width), (ry, rx))
-    cfg = SweepConfig(method=args.method, parallel=not args.sequential)
+    cfg = SweepConfig(method=args.method, parallel=not args.sequential,
+                      engine_backend=args.engine_backend)
 
     t0 = time.time()
     if args.sharded:

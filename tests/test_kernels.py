@@ -7,8 +7,9 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import push_relabel
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.push_relabel import push_relabel_phase
+from repro.kernels.push_relabel import engine_phase, push_relabel_phase
 from repro.kernels.ref import attention_ref, push_relabel_iteration_ref
 
 ATTN_SHAPES = [
@@ -79,6 +80,62 @@ def test_push_relabel_phase_matches_ref(V, E, block_v):
         pushable != 0, d_inf)
     np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d))
     np.testing.assert_array_equal(np.asarray(got_l), np.asarray(want_l))
+
+
+def _random_region(V, E, seed):
+    """Random (not necessarily consistent) region network: enough for
+    bit-parity checks, which only need both backends to see the same bits."""
+    rng = np.random.RandomState(seed)
+    return dict(
+        cf=jnp.asarray(rng.randint(0, 50, (V, E)), jnp.int32),
+        sink_cf=jnp.asarray(rng.randint(0, 20, (V,)), jnp.int32),
+        excess=jnp.asarray(rng.randint(0, 40, (V,)), jnp.int32),
+        lab=jnp.asarray(rng.randint(0, 8, (V,)), jnp.int32),
+        nbr_local=jnp.asarray(rng.randint(0, V, (V, E)), jnp.int32),
+        rev_slot=jnp.asarray(rng.randint(0, E, (V, E)), jnp.int32),
+        intra=jnp.asarray(rng.rand(V, E) < 0.8),
+        emask=jnp.asarray(rng.rand(V, E) < 0.9),
+        vmask=jnp.asarray(rng.rand(V) < 0.95),
+        cross_pushable=jnp.asarray(rng.rand(V, E) < 0.5),
+        cross_lab=jnp.asarray(rng.randint(0, 6, (V, E)), jnp.int32),
+    )
+
+
+@pytest.mark.parametrize("V,E", PR_SHAPES, ids=[str(s) for s in PR_SHAPES])
+@pytest.mark.parametrize("sink_open", [True, False])
+def test_engine_phase_matches_xla_phase(V, E, sink_open):
+    """kernels.engine_phase (pallas adapter) == engine._phase_xla, bit-exact,
+    under the engine's cross_pushable/emask/vmask/sink_open gating."""
+    from repro.core.engine import make_phase
+
+    r = _random_region(V, E, seed=3 * V + E)
+    kw = dict(nbr_local=r["nbr_local"], intra=r["intra"], emask=r["emask"],
+              vmask=r["vmask"], cross_pushable=r["cross_pushable"],
+              cross_lab=r["cross_lab"], d_inf=V + 2, sink_open=sink_open)
+    want = make_phase("xla", **kw)(r["lab"], r["cf"], r["sink_cf"],
+                                   r["excess"])
+    got = engine_phase(r["lab"], r["cf"], r["sink_cf"], r["excess"],
+                       block_v=8, interpret=True, **kw)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+
+
+@pytest.mark.parametrize("V,E", PR_SHAPES, ids=[str(s) for s in PR_SHAPES])
+def test_engine_backend_parity(V, E):
+    """Full engine runs (while_loop of push+apply+relabel) are bit-identical
+    between the XLA and Pallas compute-phase backends."""
+    r = _random_region(V, E, seed=7 * V + E)
+    kw = dict(nbr_local=r["nbr_local"], rev_slot=r["rev_slot"],
+              intra=r["intra"], emask=r["emask"], vmask=r["vmask"],
+              cross_pushable=r["cross_pushable"], cross_lab=r["cross_lab"],
+              d_inf=V + 2, sink_open=True, max_iters=40)
+    a = push_relabel(r["cf"], r["sink_cf"], r["excess"], r["lab"],
+                     backend="xla", **kw)
+    b = push_relabel(r["cf"], r["sink_cf"], r["excess"], r["lab"],
+                     backend="pallas", block_v=8, **kw)
+    for name, x, y in zip(a._fields, a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"field {name}")
 
 
 def test_push_relabel_phase_respects_blocking():

@@ -1,0 +1,60 @@
+#!/usr/bin/env python
+"""Docs link check: every relative path referenced from README.md and
+docs/*.md must exist in the tree.
+
+Checked reference forms:
+  * markdown links  [text](path)  — external URLs and #anchors are skipped;
+  * fenced/inline code mentions of repo paths are NOT parsed (too noisy) —
+    keep load-bearing file references as markdown links.
+
+Exit code 1 and a listing on any dangling reference.  Run from anywhere:
+
+    python tools/check_doc_links.py
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def doc_files() -> list[Path]:
+    docs = [ROOT / "README.md"]
+    docs += sorted((ROOT / "docs").glob("*.md"))
+    docs += [p for p in (ROOT / "EXPERIMENTS.md",) if p.exists()]
+    return [p for p in docs if p.exists()]
+
+
+def check(doc: Path) -> list[str]:
+    bad = []
+    for target in LINK_RE.findall(doc.read_text()):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        target = target.split("#")[0]
+        if not target:
+            continue
+        resolved = (doc.parent / target).resolve()
+        if not resolved.exists():
+            bad.append(f"{doc.relative_to(ROOT)}: dangling link -> {target}")
+    return bad
+
+
+def main() -> int:
+    docs = doc_files()
+    if not docs:
+        print("no docs found", file=sys.stderr)
+        return 1
+    problems = [p for doc in docs for p in check(doc)]
+    for p in problems:
+        print(p, file=sys.stderr)
+    print(f"checked {len(docs)} docs: "
+          f"{'FAIL' if problems else 'all links resolve'}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
