@@ -1,14 +1,29 @@
-"""Engine-backend benchmark: XLA dense rows vs the fused Pallas kernel.
+"""Engine-backend benchmark: XLA rows vs Pallas kernel, unfused vs fused.
 
 Times one jitted parallel ARD sweep and the full solve on the synthetic
-grids of Sec. 7.1, once per engine backend, and writes ``BENCH_engine.json``
-so the perf trajectory of the hot path is recorded per PR.  On this
-CPU-only container the Pallas kernel runs in interpret mode, so its
-absolute numbers measure correctness-path overhead, not TPU speed — the
-JSON records platform and interpret mode so TPU runs are comparable.
+grids of Sec. 7.1, for every (backend, engine mode) pair:
+
+  * backend   — "xla" dense rows vs the "pallas" kernel (interpret off-TPU);
+  * mode      — unfused two-phase engine (2 compute launches + XLA scatter
+                per iteration) vs the region-resident fused chunked engine
+                (one launch per ``chunk_iters`` complete iterations, state
+                resident, in-kernel early exit).
+
+Writes ``BENCH_engine.json`` so the perf trajectory of the hot path is
+recorded per PR, including ``kernel_launches`` (compute-program dispatches
+per solve, from ``SweepStats.engine_launches``) and the per-backend
+``launch_reduction`` of fused vs unfused — the HBM-round-trip win the fused
+mode exists for.  On this CPU-only container the Pallas kernel runs in
+interpret mode, so absolute times measure correctness-path overhead, not
+TPU speed — the JSON records platform and interpret mode so TPU runs are
+comparable.
 
     PYTHONPATH=src python benchmarks/bench_engine_backend.py [--quick]
-        [--out BENCH_engine.json]
+        [--smoke] [--out BENCH_engine.json]
+
+``--smoke`` runs one tiny instance through all four configurations and
+asserts the flow matches the Edmonds-Karp oracle — the CI guard that the
+perf plumbing cannot silently break the solver.
 
 Also exposes the ``run(emit, quick)`` contract of benchmarks/run.py.
 """
@@ -27,20 +42,28 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 from benchmarks.common import emit_csv, time_call  # noqa: E402
 
 BACKENDS = ("xla", "pallas")
+FUSED_CHUNK_ITERS = 8
 
 
-def _bench_instance(size, regions, backend, quick):
-    import jax
+def _configs():
+    from repro.core import SweepConfig
+
+    for backend in BACKENDS:
+        for chunk in (None, FUSED_CHUNK_ITERS):
+            yield SweepConfig(method="ard", engine_backend=backend,
+                              engine_chunk_iters=chunk)
+
+
+def _bench_instance(size, regions, cfg, quick):
     import jax.numpy as jnp
 
-    from repro.core import SweepConfig, grid_partition, solve_mincut
+    from repro.core import grid_partition, solve_mincut
     from repro.core.graph import build, init_labels
     from repro.core.sweep import parallel_sweep
     from repro.data.grids import synthetic_grid
 
     p = synthetic_grid(size, size, connectivity=8, strength=150, seed=0)
     part = grid_partition((size, size), regions)
-    cfg = SweepConfig(method="ard", engine_backend=backend)
 
     # one-sweep latency (jitted program, post-warmup median)
     meta, state, _ = build(p, part)
@@ -57,11 +80,14 @@ def _bench_instance(size, regions, backend, quick):
     solve_s = time.perf_counter() - t0
     return dict(
         instance=f"grid{size}x{size}_r{regions[0]}x{regions[1]}",
-        backend=backend,
+        backend=cfg.engine_backend,
+        fused=cfg.engine_chunk_iters is not None,
+        chunk_iters=cfg.engine_chunk_iters,
         sweep_us=round(sweep_us, 1),
         solve_s=round(solve_s, 3),
         sweeps=res.stats.sweeps,
         engine_iters=res.stats.engine_iters,
+        kernel_launches=res.stats.engine_launches,
         flow=res.flow_value,
     )
 
@@ -69,40 +95,75 @@ def _bench_instance(size, regions, backend, quick):
 def collect(quick: bool = False) -> dict:
     import jax
 
-    sizes = [(12, (2, 2))] if quick else [(16, (2, 2)), (24, (2, 2))]
+    sizes = ([(12, (2, 2))] if quick
+             else [(16, (2, 2)), (24, (2, 2)), (32, (2, 2))])
     rows = []
     for size, regions in sizes:
-        per_backend = {}
-        for backend in BACKENDS:
-            row = _bench_instance(size, regions, backend, quick)
-            per_backend[backend] = row
+        per_cfg = {}
+        for cfg in _configs():
+            row = _bench_instance(size, regions, cfg, quick)
+            per_cfg[(cfg.engine_backend, row["fused"])] = row
             rows.append(row)
-        a, b = per_backend["xla"], per_backend["pallas"]
-        assert a["flow"] == b["flow"], "backend parity violated in bench"
-        a["speedup_vs_pallas"] = round(b["sweep_us"] / a["sweep_us"], 2)
+        flows = {r["flow"] for r in per_cfg.values()}
+        assert len(flows) == 1, "backend/mode parity violated in bench"
+        for backend in BACKENDS:
+            unf, fus = per_cfg[(backend, False)], per_cfg[(backend, True)]
+            assert unf["engine_iters"] == fus["engine_iters"]
+            fus["launch_reduction"] = round(
+                unf["kernel_launches"] / max(1, fus["kernel_launches"]), 2)
+            fus["speedup_vs_unfused"] = round(
+                unf["sweep_us"] / fus["sweep_us"], 2)
     return dict(
         bench="engine_backend",
         platform=jax.default_backend(),
         jax_version=jax.__version__,
         pallas_interpret=jax.default_backend() != "tpu",
+        fused_chunk_iters=FUSED_CHUNK_ITERS,
         results=rows,
     )
+
+
+def smoke() -> None:
+    """CI guard: tiny instance, every engine configuration, oracle flow."""
+    from repro.core import SweepConfig, grid_partition, solve_mincut
+    from repro.data.grids import synthetic_grid
+    from repro.kernels.ref import maxflow_oracle
+
+    p = synthetic_grid(8, 8, connectivity=8, strength=150, seed=0)
+    part = grid_partition((8, 8), (2, 2))
+    want, _ = maxflow_oracle(p)
+    for cfg in _configs():
+        res = solve_mincut(p, part=part, config=cfg)
+        assert res.flow_value == want, (
+            f"{cfg.engine_backend} chunk={cfg.engine_chunk_iters}: "
+            f"flow {res.flow_value} != oracle {want}")
+        print(f"smoke ok: backend={cfg.engine_backend} "
+              f"chunk={cfg.engine_chunk_iters} flow={res.flow_value} "
+              f"launches={res.stats.engine_launches}")
+    print(f"smoke passed: oracle flow {want} on all engine configurations")
 
 
 def run(emit=emit_csv, quick: bool = False) -> None:
     data = collect(quick=quick)
     for row in data["results"]:
-        emit(f"engine/{row['backend']}/{row['instance']}", row["sweep_us"],
+        mode = "fused" if row["fused"] else "unfused"
+        emit(f"engine/{row['backend']}/{mode}/{row['instance']}",
+             row["sweep_us"],
              f"solve_s={row['solve_s']};sweeps={row['sweeps']};"
-             f"flow={row['flow']}")
+             f"launches={row['kernel_launches']};flow={row['flow']}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-instance oracle check (CI), no JSON output")
     ap.add_argument("--out", default=str(Path(__file__).resolve().parents[1]
                                          / "BENCH_engine.json"))
     args = ap.parse_args()
+    if args.smoke:
+        smoke()
+        return
     data = collect(quick=args.quick)
     Path(args.out).write_text(json.dumps(data, indent=2) + "\n")
     print(f"wrote {args.out}")

@@ -46,6 +46,7 @@ class DischargeResult(NamedTuple):
     sink_pushed: jax.Array  # i32[]
     engine_iters: jax.Array  # i32[]
     stages: jax.Array      # i32[]
+    engine_launches: jax.Array  # i32[] compute-program dispatches (see engine)
 
 
 def _distinct_sorted_ghost_labels(ghost_d, cross, emask, d_inf):
@@ -63,7 +64,8 @@ def _distinct_sorted_ghost_labels(ghost_d, cross, emask, d_inf):
 def ard_discharge_one(cf, sink_cf, excess, ghost_d, *, nbr_local, rev_slot,
                       intra, emask, vmask, d_inf: int, stage_cap,
                       max_iters: int | None = None,
-                      backend: str = "xla") -> DischargeResult:
+                      backend: str = "xla",
+                      chunk_iters: int | None = None) -> DischargeResult:
     """ARD on a single region network (vmapped over regions by sweep.py).
 
     ``ghost_d``  — frozen labels of cross-arc destinations (paper: d|B^R).
@@ -71,6 +73,8 @@ def ard_discharge_one(cf, sink_cf, excess, ghost_d, *, nbr_local, rev_slot,
                     this sweep (partial discharges, Sec. 6.2); pass d_inf for
                     a full discharge.
     ``backend``  — engine compute-phase backend ("xla" or "pallas").
+    ``chunk_iters`` — fused chunked engine (k iterations per launch); None
+                    keeps the unfused two-phase engine.
     """
     V, E = cf.shape
     cross = emask & ~intra
@@ -80,7 +84,7 @@ def ard_discharge_one(cf, sink_cf, excess, ghost_d, *, nbr_local, rev_slot,
     stage_cap = jnp.asarray(stage_cap, _I32)
 
     def stage_body(carry):
-        i, cf, sink_cf, excess, out_push, sink_pushed, iters = carry
+        i, cf, sink_cf, excess, out_push, sink_pushed, iters, launches = carry
         lvl = stage_vals[i]
         target_cross = cross & (ghost_d <= lvl) & (ghost_d < d_inf)
         lab0 = bfs_to_targets(
@@ -91,10 +95,11 @@ def ard_discharge_one(cf, sink_cf, excess, ghost_d, *, nbr_local, rev_slot,
             nbr_local=nbr_local, rev_slot=rev_slot, intra=intra, emask=emask,
             vmask=vmask, cross_pushable=target_cross,
             cross_lab=jnp.zeros_like(ghost_d), d_inf=linf_local,
-            sink_open=True, max_iters=max_iters, backend=backend)
+            sink_open=True, max_iters=max_iters, backend=backend,
+            chunk_iters=chunk_iters)
         return (i + 1, es.cf, es.sink_cf, es.excess,
                 out_push + es.out_push, sink_pushed + es.sink_pushed,
-                iters + es.iters)
+                iters + es.iters, launches + es.launches)
 
     def stage_cond(carry):
         i = carry[0]
@@ -103,13 +108,14 @@ def ard_discharge_one(cf, sink_cf, excess, ghost_d, *, nbr_local, rev_slot,
         return more & (lvl < INF_LABEL) & (lvl <= stage_cap)
 
     init = (jnp.zeros((), _I32), cf, sink_cf, excess,
-            jnp.zeros((V, E), _I32), jnp.zeros((), _I32), jnp.zeros((), _I32))
-    i, cf, sink_cf, excess, out_push, sink_pushed, iters = jax.lax.while_loop(
-        stage_cond, stage_body, init)
+            jnp.zeros((V, E), _I32), jnp.zeros((), _I32), jnp.zeros((), _I32),
+            jnp.zeros((), _I32))
+    (i, cf, sink_cf, excess, out_push, sink_pushed, iters,
+     launches) = jax.lax.while_loop(stage_cond, stage_body, init)
 
     # final region-relabel (Alg. 3, ARD variant) on the post-discharge network
     d_new = _region_relabel_one(
         cf, sink_cf, ghost_d, nbr_local=nbr_local, intra=intra, emask=emask,
         vmask=vmask, d_inf=d_inf, hop_cost=0)
     return DischargeResult(cf, sink_cf, excess, d_new, out_push,
-                           sink_pushed, iters, i)
+                           sink_pushed, iters, i, launches)

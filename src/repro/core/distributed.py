@@ -135,7 +135,8 @@ def _one_sweep_local(meta: GraphMeta, cfg: SweepConfig, axes,
         fn = lambda cf, s, e, g, nl, rs, it, em, vm: ard_discharge_one(
             cf, s, e, g, nbr_local=nl, rev_slot=rs, intra=it, emask=em,
             vmask=vm, d_inf=meta.d_inf_ard, stage_cap=stage_cap,
-            max_iters=cfg.engine_max_iters, backend=cfg.engine_backend)
+            max_iters=cfg.engine_max_iters, backend=cfg.engine_backend,
+            chunk_iters=cfg.engine_chunk_iters)
         res = jax.vmap(fn)(state.cf, state.sink_cf, state.excess, ghost_d,
                            state.nbr_local, state.rev_slot, intra,
                            state.emask, state.vmask)
@@ -143,7 +144,7 @@ def _one_sweep_local(meta: GraphMeta, cfg: SweepConfig, axes,
         fn = lambda cf, s, e, d, g, nl, rs, it, em, vm: prd_discharge_one(
             cf, s, e, d, g, nbr_local=nl, rev_slot=rs, intra=it, emask=em,
             vmask=vm, d_inf=meta.d_inf_prd, max_iters=cfg.engine_max_iters,
-            backend=cfg.engine_backend)
+            backend=cfg.engine_backend, chunk_iters=cfg.engine_chunk_iters)
         res = jax.vmap(fn)(state.cf, state.sink_cf, state.excess, state.d,
                            ghost_d, state.nbr_local, state.rev_slot, intra,
                            state.emask, state.vmask)

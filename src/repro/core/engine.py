@@ -39,6 +39,26 @@ output drives the push) and once on the post-push state (the new_lab output
 is the relabel — relabels must see the arcs created by this iteration's
 pushes).  Scatter application of the deltas (reverse arcs, receiver excess)
 stays in XLA in both backends, as the kernel docstring prescribes.
+
+Fused chunked mode (``chunk_iters``)
+------------------------------------
+With ``chunk_iters=k`` the engine switches to the *region-resident fused*
+driver: the outer ``lax.while_loop`` body advances up to ``k`` complete
+iterations per trip instead of one.  For ``backend="pallas"`` one trip is a
+single ``fused_engine_run`` kernel launch with the whole region state in
+VMEM (push split, intra-region scatter and post-push relabel all in-kernel,
+early exit when no vertex is active); when the region exceeds the VMEM
+budget (``kernels.push_relabel.fused_region_fits_vmem``) the engine falls
+back to the blocked two-phase path.  For ``backend="xla"`` one trip is the
+symmetric single traced body (the shared
+``kernels.push_relabel.make_fused_iteration`` inside an inner bounded
+loop) — one compute+apply+relabel program per iteration instead of two
+phase calls.  All four paths (fused/unfused × xla/pallas) are bit-exact;
+``EngineState.launches`` counts compute-program dispatches per engine run
+(2 per iteration unfused; fused: 1 per chunk on pallas — a real kernel
+launch — and 1 per iteration on xla, which fuses the two phase calls but
+keeps per-iteration program structure) for the benchmark's
+launch-reduction accounting.
 """
 
 from __future__ import annotations
@@ -65,6 +85,8 @@ class EngineState(NamedTuple):
     sink_pushed: jax.Array  # i32[]    flow absorbed by the sink this run
     iters: jax.Array       # i32[]
     relabel_sum: jax.Array  # i32[]    total label increase (for complexity accounting)
+    launches: jax.Array    # i32[]    compute-program dispatches: 2/iter unfused,
+    #                                 1/chunk fused-pallas, 1/iter fused-xla
 
 
 def _phase_xla(lab, cf, sink_cf, excess, *, nbr_local, intra, pushable,
@@ -141,6 +163,89 @@ def make_phase(backend: str, *, nbr_local, intra, emask, vmask,
     return phase
 
 
+def _push_relabel_fused(cf, sink_cf, excess, lab, *, nbr_local, rev_slot,
+                        intra, emask, vmask, cross_pushable, cross_lab, d_inf,
+                        sink_open, max_iters, backend, chunk_iters,
+                        interpret) -> EngineState:
+    """Chunked fused driver: one launch advances up to ``chunk_iters`` iters.
+
+    The outer while_loop trips once per chunk; the chunk itself early-exits
+    as soon as no vertex is active (in-kernel for the Pallas backend, in the
+    inner bounded loop for XLA), so the final state and iteration count are
+    bit-identical to the unfused engine's.
+    """
+    V, E = cf.shape
+    chunk = int(chunk_iters)
+    assert chunk >= 1
+    pushable = (cross_pushable | intra) & emask
+    zero_e = jnp.zeros((V, E), _I32)
+
+    if backend == "pallas":
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        intra_i = intra.astype(_I32)
+        pushable_i = pushable.astype(_I32)
+        vmask_i = vmask.astype(_I32)
+
+        def launch(lab, cf, sink_cf, excess, limit):
+            return _pr_kernel.fused_engine_run(
+                lab, cf, sink_cf, excess, nbr_local, rev_slot, intra_i,
+                pushable_i, cross_lab, vmask_i, d_inf, limit,
+                sink_open=sink_open, interpret=interpret)
+    else:
+        # same pure iteration the kernel advances per in-kernel step —
+        # sharing it is what makes the fused backends bit-exact by
+        # construction (kernels/ref.py stays the independent oracle)
+        iteration = _pr_kernel.make_fused_iteration(
+            nbr=nbr_local, rev_slot=rev_slot, intra=intra,
+            pushable=pushable, cross_lab=cross_lab, vmask=vmask, d_inf=d_inf,
+            sink_open=sink_open)
+
+        def launch(lab, cf, sink_cf, excess, limit):
+            def icond(c):
+                cf, sink_cf, excess, lab, op, sp, rs, it = c
+                return (it < limit) & (
+                    (excess > 0) & (lab < d_inf) & vmask).any()
+
+            def ibody(c):
+                cf, sink_cf, excess, lab, op, sp, rs, it = c
+                cf, sink_cf, excess, lab, d_cross, d_sink, rinc = iteration(
+                    cf, sink_cf, excess, lab)
+                return (cf, sink_cf, excess, lab, op + d_cross, sp + d_sink,
+                        rs + rinc, it + 1)
+
+            z = jnp.zeros((), _I32)
+            init = (cf, sink_cf, excess, lab, zero_e, z, z, z)
+            out = jax.lax.while_loop(icond, ibody, init)
+            cf, sink_cf, excess, lab, op, sp, rs, it = out
+            return cf, sink_cf, excess, lab, op, sp, rs, it
+
+    def cond(s: EngineState):
+        ok = ((s.excess > 0) & (s.lab < d_inf) & vmask).any()
+        if max_iters is not None:
+            ok = ok & (s.iters < max_iters)
+        return ok
+
+    def body(s: EngineState) -> EngineState:
+        limit = jnp.asarray(chunk, _I32)
+        if max_iters is not None:
+            limit = jnp.minimum(limit, jnp.asarray(max_iters, _I32) - s.iters)
+        cf, sink_cf, excess, lab, dpush, dsink, drls, dit = launch(
+            s.lab, s.cf, s.sink_cf, s.excess, limit)
+        # launch accounting: one real kernel launch per chunk on pallas;
+        # the fused XLA body is still one compute program per iteration
+        # (vs two phase calls unfused), so it counts per iteration
+        dln = jnp.ones((), _I32) if backend == "pallas" else dit
+        return EngineState(cf, sink_cf, excess, lab, s.out_push + dpush,
+                           s.sink_pushed + dsink, s.iters + dit,
+                           s.relabel_sum + drls, s.launches + dln)
+
+    init = EngineState(cf, sink_cf, excess, lab, zero_e,
+                       jnp.zeros((), _I32), jnp.zeros((), _I32),
+                       jnp.zeros((), _I32), jnp.zeros((), _I32))
+    return jax.lax.while_loop(cond, body, init)
+
+
 def push_relabel(
     cf: jax.Array,
     sink_cf: jax.Array,
@@ -160,16 +265,31 @@ def push_relabel(
     backend: str = "xla",
     block_v: int | None = None,
     interpret: bool | None = None,
+    chunk_iters: int | None = None,
+    vmem_budget_bytes: int | None = None,
 ) -> EngineState:
     """Run push/relabel until no active vertex remains.
 
     Returns the final engine state; ``out_push`` holds the flow sent over
     cross-region arcs, to be fused/applied by the sweep driver.  ``backend``
     selects the compute-phase implementation ("xla" dense rows or the fused
-    "pallas" kernel); both produce bit-identical states.
+    "pallas" kernel); ``chunk_iters=k`` selects the fused chunked driver
+    (one launch per k iterations, region state resident); all combinations
+    produce bit-identical states.  A Pallas region that exceeds the VMEM
+    budget falls back to the blocked two-phase path.
     """
     V, E = cf.shape
     d_inf = jnp.asarray(d_inf, _I32)
+    if chunk_iters is not None and backend == "pallas" \
+            and not _pr_kernel.fused_region_fits_vmem(V, E, vmem_budget_bytes):
+        chunk_iters = None       # region too big to sit in VMEM: blocked path
+    if chunk_iters is not None:
+        return _push_relabel_fused(
+            cf, sink_cf, excess, lab, nbr_local=nbr_local, rev_slot=rev_slot,
+            intra=intra, emask=emask, vmask=vmask,
+            cross_pushable=cross_pushable, cross_lab=cross_lab, d_inf=d_inf,
+            sink_open=sink_open, max_iters=max_iters, backend=backend,
+            chunk_iters=chunk_iters, interpret=interpret)
     flat_n = V * E
     zero_e = jnp.zeros((V, E), _I32)
     phase = make_phase(backend, nbr_local=nbr_local, intra=intra, emask=emask,
@@ -205,7 +325,7 @@ def push_relabel(
 
         s2 = EngineState(cf, sink_cf, excess, s.lab, out_push,
                          s.sink_pushed + d_sink.sum(), s.iters + 1,
-                         s.relabel_sum)
+                         s.relabel_sum, s.launches + 2)
         # ---- relabel phase (on the post-push residual graph) ----
         _, new_lab = phase(s2.lab, s2.cf, s2.sink_cf, s2.excess,
                            mode="relabel")
@@ -221,7 +341,7 @@ def push_relabel(
 
     init = EngineState(cf, sink_cf, excess, lab, zero_e,
                        jnp.zeros((), _I32), jnp.zeros((), _I32),
-                       jnp.zeros((), _I32))
+                       jnp.zeros((), _I32), jnp.zeros((), _I32))
     return jax.lax.while_loop(cond, body, init)
 
 

@@ -27,7 +27,8 @@ _I32 = jnp.int32
 def prd_discharge_one(cf, sink_cf, excess, d, ghost_d, *, nbr_local, rev_slot,
                       intra, emask, vmask, d_inf: int,
                       max_iters: int | None = None,
-                      backend: str = "xla") -> DischargeResult:
+                      backend: str = "xla",
+                      chunk_iters: int | None = None) -> DischargeResult:
     """PRD on a single region network (vmapped over regions by sweep.py)."""
     V, E = cf.shape
     cross = emask & ~intra
@@ -35,7 +36,8 @@ def prd_discharge_one(cf, sink_cf, excess, d, ghost_d, *, nbr_local, rev_slot,
         cf, sink_cf, excess, d,
         nbr_local=nbr_local, rev_slot=rev_slot, intra=intra, emask=emask,
         vmask=vmask, cross_pushable=cross, cross_lab=ghost_d, d_inf=d_inf,
-        sink_open=True, max_iters=max_iters, backend=backend)
+        sink_open=True, max_iters=max_iters, backend=backend,
+        chunk_iters=chunk_iters)
     return DischargeResult(es.cf, es.sink_cf, es.excess, es.lab, es.out_push,
                            es.sink_pushed, es.iters,
-                           jnp.ones((), _I32))
+                           jnp.ones((), _I32), es.launches)

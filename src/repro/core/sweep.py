@@ -54,6 +54,12 @@ class SweepConfig:
     engine_backend      — compute-phase backend of the discharge engine:
                           "xla" (dense rows) or "pallas" (fused kernel,
                           interpret mode off-TPU); bit-identical results.
+    engine_chunk_iters  — fused chunked engine: k complete iterations per
+                          compute-program launch with region state resident
+                          (one pallas_call per chunk on the "pallas"
+                          backend, one traced body per iteration on "xla");
+                          None keeps the unfused two-phase engine.  All
+                          combinations are bit-identical.
     """
 
     method: str = "ard"
@@ -64,16 +70,20 @@ class SweepConfig:
     max_sweeps: int | None = None
     engine_max_iters: int | None = None
     engine_backend: str = "xla"
+    engine_chunk_iters: int | None = None
 
     def __post_init__(self):
         assert self.method in ("ard", "prd")
         assert self.engine_backend in ENGINE_BACKENDS
+        assert self.engine_chunk_iters is None or self.engine_chunk_iters >= 1
 
 
 @dataclass
 class SweepStats:
     sweeps: int = 0
     engine_iters: int = 0
+    engine_launches: int = 0     # compute-program dispatches (2/iter unfused;
+    #                              fused: 1/chunk pallas, 1/iter xla)
     boundary_bytes: int = 0      # flow+label messages over the cut (paper: I/O)
     page_bytes: int = 0          # streaming-mode region load/store bytes
     regions_discharged: int = 0
@@ -93,14 +103,15 @@ def _discharge_all(meta: GraphMeta, state: FlowState, cfg: SweepConfig,
         fn = lambda cf, s, e, g, nl, rs, it, em, vm: ard_discharge_one(
             cf, s, e, g, nbr_local=nl, rev_slot=rs, intra=it, emask=em,
             vmask=vm, d_inf=meta.d_inf_ard, stage_cap=stage_cap,
-            max_iters=cfg.engine_max_iters, backend=cfg.engine_backend)
+            max_iters=cfg.engine_max_iters, backend=cfg.engine_backend,
+            chunk_iters=cfg.engine_chunk_iters)
         return jax.vmap(fn)(state.cf, state.sink_cf, state.excess, ghost_d,
                             state.nbr_local, state.rev_slot, intra,
                             state.emask, state.vmask)
     fn = lambda cf, s, e, d, g, nl, rs, it, em, vm: prd_discharge_one(
         cf, s, e, d, g, nbr_local=nl, rev_slot=rs, intra=it, emask=em,
         vmask=vm, d_inf=meta.d_inf_prd, max_iters=cfg.engine_max_iters,
-        backend=cfg.engine_backend)
+        backend=cfg.engine_backend, chunk_iters=cfg.engine_chunk_iters)
     return jax.vmap(fn)(state.cf, state.sink_cf, state.excess, state.d,
                         ghost_d, state.nbr_local, state.rev_slot, intra,
                         state.emask, state.vmask)
@@ -158,8 +169,7 @@ def parallel_sweep(meta: GraphMeta, state: FlowState, cfg: SweepConfig,
         new = heuristics.boundary_relabel(meta, new)
     if cfg.use_global_gap:
         new = global_gap(meta, new, ard=cfg.method == "ard")
-    iters = res.engine_iters.sum()
-    return new, iters
+    return new, res.engine_iters.sum(), res.engine_launches.sum()
 
 
 @partial(jax.jit, static_argnums=(0, 2))
@@ -177,10 +187,12 @@ def sequential_sweep(meta: GraphMeta, state: FlowState, cfg: SweepConfig,
         jnp.asarray(cfg.partial_discharge),
         jnp.maximum(sweep_idx - 1, -1).astype(_I32),
         _I32(meta.d_inf_ard))
+    # sweep-invariant: depends only on static topology, so hoist it out of
+    # the per-region loop (ghost labels change per discharge and stay inside)
+    intra = intra_mask(state)
 
     def body(k, carry):
-        state, iters, discharged = carry
-        intra = intra_mask(state)
+        state, iters, launches, discharged = carry
         ghost_d = gather_ghost_labels(state)
         sl = lambda a: jax.lax.dynamic_index_in_dim(a, k, 0, keepdims=False)
         active = ((sl(state.excess) > 0) & (sl(state.d) < d_inf)
@@ -195,7 +207,8 @@ def sequential_sweep(meta: GraphMeta, state: FlowState, cfg: SweepConfig,
                     emask=sl(state.emask), vmask=sl(state.vmask),
                     d_inf=meta.d_inf_ard, stage_cap=stage_cap_all,
                     max_iters=cfg.engine_max_iters,
-                    backend=cfg.engine_backend)
+                    backend=cfg.engine_backend,
+                    chunk_iters=cfg.engine_chunk_iters)
             else:
                 res = prd_discharge_one(
                     sl(state.cf), sl(state.sink_cf), sl(state.excess),
@@ -203,7 +216,8 @@ def sequential_sweep(meta: GraphMeta, state: FlowState, cfg: SweepConfig,
                     rev_slot=sl(state.rev_slot), intra=sl(intra),
                     emask=sl(state.emask), vmask=sl(state.vmask),
                     d_inf=meta.d_inf_prd, max_iters=cfg.engine_max_iters,
-                    backend=cfg.engine_backend)
+                    backend=cfg.engine_backend,
+                    chunk_iters=cfg.engine_chunk_iters)
             upd = lambda a, v: jax.lax.dynamic_update_index_in_dim(a, v, k, 0)
             st = state.replace(
                 cf=upd(state.cf, res.cf),
@@ -218,19 +232,22 @@ def sequential_sweep(meta: GraphMeta, state: FlowState, cfg: SweepConfig,
             st = _apply_cross_flow(st, out_push, accept=mine)
             if cfg.use_global_gap:
                 st = global_gap(meta, st, ard=cfg.method == "ard")
-            return st, res.engine_iters
+            return st, res.engine_iters, res.engine_launches
 
         def skip(state):
-            return state, jnp.zeros((), _I32)
+            return state, jnp.zeros((), _I32), jnp.zeros((), _I32)
 
-        state, it = jax.lax.cond(active, run, skip, state)
-        return state, iters + it, discharged + active.astype(_I32)
+        state, it, ln = jax.lax.cond(active, run, skip, state)
+        return (state, iters + it, launches + ln,
+                discharged + active.astype(_I32))
 
-    state, iters, discharged = jax.lax.fori_loop(
-        0, K, body, (state, jnp.zeros((), _I32), jnp.zeros((), _I32)))
+    state, iters, launches, discharged = jax.lax.fori_loop(
+        0, K, body,
+        (state, jnp.zeros((), _I32), jnp.zeros((), _I32),
+         jnp.zeros((), _I32)))
     if cfg.use_boundary_relabel and cfg.method == "ard":
         state = heuristics.boundary_relabel(meta, state)
-    return state, iters, discharged
+    return state, iters, launches, discharged
 
 
 def num_active(meta: GraphMeta, state: FlowState, cfg: SweepConfig) -> jax.Array:
@@ -263,25 +280,30 @@ def solve(meta: GraphMeta, state: FlowState, cfg: SweepConfig | None = None):
     msg_bytes = 8 * meta.num_cross_arcs
 
     sweep_idx = 0
+    n_act = int(num_active(meta, state, cfg))
     while sweep_idx < max_sweeps:
-        n_act = int(num_active(meta, state, cfg))
         stats.active_curve.append(n_act)
         if n_act == 0:
             break
         if cfg.parallel:
-            state, iters = parallel_sweep(meta, state, cfg,
-                                          jnp.asarray(sweep_idx, _I32))
-            discharged = meta.num_regions
+            state, iters, launches = parallel_sweep(
+                meta, state, cfg, jnp.asarray(sweep_idx, _I32))
+            disc = _I32(meta.num_regions)
         else:
-            state, iters, disc = sequential_sweep(meta, state, cfg,
-                                                  jnp.asarray(sweep_idx, _I32))
-            discharged = int(disc)
+            state, iters, launches, disc = sequential_sweep(
+                meta, state, cfg, jnp.asarray(sweep_idx, _I32))
+        # all per-sweep device stats in one device->host transfer (a single
+        # sync point per sweep instead of one int(...) per statistic)
+        n_act, flow, it, ln, dc = (int(x) for x in jax.device_get(
+            (num_active(meta, state, cfg), state.flow_to_t, iters, launches,
+             disc)))
         stats.sweeps += 1
-        stats.engine_iters += int(iters)
-        stats.regions_discharged += discharged
-        stats.page_bytes += discharged * page_bytes
+        stats.engine_iters += it
+        stats.engine_launches += ln
+        stats.regions_discharged += dc
+        stats.page_bytes += dc * page_bytes
         stats.boundary_bytes += msg_bytes
-        stats.flow_curve.append(int(state.flow_to_t))
+        stats.flow_curve.append(flow)
         sweep_idx += 1
     return state, stats
 

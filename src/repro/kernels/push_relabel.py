@@ -28,6 +28,22 @@ engine-facing adapter that accepts core/engine.py's mask semantics
 (``cross_pushable``/``emask``/``vmask``/``sink_open``) and is what the
 ``backend="pallas"`` path of ``repro.core.engine.push_relabel`` calls twice
 per iteration (pre-push for the deltas, post-push for the relabels).
+
+Region-resident fused mode
+--------------------------
+``fused_engine_run`` is the single-launch alternative: one ``pallas_call``
+whose block is the *whole region* (``block_v = V`` — regions are sized to
+fit memory, paper Sec. 5.3) advances up to ``iter_limit`` complete engine
+iterations with all state resident in VMEM.  Each in-kernel iteration does
+the push split, the intra-region scatter (reverse arcs via ``rev_slot``,
+receiver excess via ``nbr_local``) and the post-push relabel, accumulating
+``out_push``/``sink_pushed``/``relabel_sum`` in-kernel, with an early exit
+as soon as no vertex is active.  HBM traffic drops from four round trips of
+the ``[V, E]`` state per iteration (two phase launches + two scatters) to
+one per *k* iterations — the paper's "intra-region work is cheap because it
+stays local" premise, honored on the accelerator.  ``core.engine`` falls
+back to the blocked two-phase path when the region exceeds the VMEM budget
+(``fused_region_fits_vmem``).
 """
 
 from __future__ import annotations
@@ -148,6 +164,181 @@ def push_relabel_phase(lab, cf, sink_cf, excess, nbr, intra, pushable,
     d_inf_arr = jnp.reshape(jnp.asarray(d_inf, jnp.int32), (1,))
     return kernel(lab, cf, sink_cf, excess, nbr, intra, pushable, cross_lab,
                   d_inf_arr)
+
+
+# --------------------------------------------------------------------------
+# Region-resident fused discharge: k full iterations per kernel launch.
+# --------------------------------------------------------------------------
+
+# VMEM working set of one fused iteration, in int32 words per vertex row:
+# cf, nbr, rev_slot, intra, pushable, cross_lab, out_push, d_arc/d_intra are
+# [V, E]; caps/delta are [V, 1+E]; plus a handful of [V] vectors.  The
+# budget leaves headroom under the ~16 MiB/core of TPU VMEM for double
+# buffering and the scalar plumbing.
+FUSED_VMEM_BUDGET_BYTES = 12 * 2**20
+
+
+def fused_region_vmem_bytes(V: int, E: int) -> int:
+    """Estimated VMEM bytes of the region-resident fused kernel's state."""
+    return 4 * (9 * V * E + 2 * V * (E + 1) + 8 * V)
+
+
+def fused_region_fits_vmem(V: int, E: int,
+                           budget_bytes: int | None = None) -> bool:
+    budget = FUSED_VMEM_BUDGET_BYTES if budget_bytes is None else budget_bytes
+    return fused_region_vmem_bytes(V, E) <= budget
+
+
+def make_fused_iteration(*, nbr, rev_slot, intra, pushable, cross_lab, vmask,
+                         d_inf, sink_open: bool):
+    """Build the pure fused-iteration function shared by both backends.
+
+    ``iteration(cf, sink_cf, excess, lab) -> (cf, sink_cf, excess, new_lab,
+    d_cross, d_sink_total, relabel_inc)`` performs push compute (labels
+    frozen), intra-region scatter application (reverse arcs via
+    ``rev_slot``, receiver excess via ``nbr``) and the post-push relabel in
+    one function — the per-step unit of the region-resident kernel and of
+    the fused XLA engine body.  Defining it once is what makes the two
+    fused backends bit-exact by construction; ``kernels.ref.
+    fused_iteration_ref`` stays the independent oracle.  ``intra``/
+    ``pushable``/``vmask`` are bool, ``d_inf`` an i32 scalar.
+    """
+    V, E = nbr.shape
+    flat_n = V * E
+    flat_idx = (nbr * E + rev_slot).reshape(flat_n)
+    recv_idx = nbr.reshape(flat_n)
+
+    def iteration(cf, sink_cf, excess, lab):
+        # ---- push compute (labels frozen) ----
+        act = (excess > 0) & (lab < d_inf) & vmask
+        nlab = jnp.where(intra, lab[nbr], cross_lab)
+        nlab = jnp.where(pushable, nlab, INF_LABEL)
+        adm = (cf > 0) & (lab[:, None] == nlab + 1) & act[:, None]
+        sink = sink_cf if sink_open else jnp.zeros_like(sink_cf)
+        sink_adm = (sink > 0) & (lab == 1) & act
+        sink_cap = jnp.where(sink_adm, sink, 0)
+        arc_cap = jnp.where(adm, cf, 0)
+        caps = jnp.concatenate([sink_cap[:, None], arc_cap], axis=1)
+        avail = jnp.where(act, excess, 0)
+        cum_excl = jnp.cumsum(caps, axis=1) - caps
+        delta = jnp.clip(avail[:, None] - cum_excl, 0, caps)
+        d_sink = delta[:, 0]
+        d_arc = delta[:, 1:]
+        # ---- scatter application (intra reverse arcs + receiver excess) ----
+        excess = excess - d_sink - d_arc.sum(axis=1)
+        sink_cf = sink_cf - d_sink
+        cf = cf - d_arc
+        d_intra = jnp.where(intra, d_arc, 0)
+        cf = (cf.reshape(flat_n).at[flat_idx]
+              .add(d_intra.reshape(flat_n), mode="drop").reshape(V, E))
+        excess = excess + jnp.zeros((V,), jnp.int32).at[recv_idx].add(
+            d_intra.reshape(flat_n), mode="drop")
+        d_cross = d_arc - d_intra
+        # ---- relabel (on the post-push residual graph) ----
+        act2 = (excess > 0) & (lab < d_inf) & vmask
+        adm2 = (cf > 0) & (lab[:, None] == nlab + 1) & act2[:, None]
+        sink2 = sink_cf if sink_open else jnp.zeros_like(sink_cf)
+        sink_adm2 = (sink2 > 0) & (lab == 1) & act2
+        no_adm = act2 & ~adm2.any(axis=1) & ~sink_adm2
+        cand = jnp.where(cf > 0, nlab + 1, INF_LABEL).min(axis=1)
+        cand = jnp.where(sink2 > 0, jnp.minimum(cand, 1), cand)
+        new_lab = jnp.where(
+            no_adm, jnp.maximum(jnp.minimum(cand, d_inf), lab), lab)
+        relabel_inc = jnp.sum(jnp.where(vmask, new_lab - lab, 0))
+        return cf, sink_cf, excess, new_lab, d_cross, d_sink.sum(), relabel_inc
+
+    return iteration
+
+
+def _fused_kernel(lab_ref, cf_ref, sink_cf_ref, excess_ref, nbr_ref, rev_ref,
+                  intra_ref, pushable_ref, cross_lab_ref, vmask_ref, scal_ref,
+                  cf_out, sink_out, exc_out, lab_out, push_out, sinkp_out,
+                  rls_out, it_out, *, sink_open: bool):
+    """Whole-region block: up to ``scal[1]`` fused engine iterations.
+
+    One in-kernel iteration is bit-identical to one trip of the unfused
+    engine loop (push compute -> intra scatter -> post-push relabel); the
+    while_loop exits early once no vertex is active, so idle regions cost
+    O(1).  All carries live in VMEM; the only HBM traffic is the initial
+    load and the final store of the region state.
+    """
+    V, E = cf_ref.shape
+    vmask = vmask_ref[...] != 0
+    d_inf = scal_ref[0]
+    limit = scal_ref[1]
+    iteration = make_fused_iteration(
+        nbr=nbr_ref[...], rev_slot=rev_ref[...], intra=intra_ref[...] != 0,
+        pushable=pushable_ref[...] != 0, cross_lab=cross_lab_ref[...],
+        vmask=vmask, d_inf=d_inf, sink_open=sink_open)
+
+    def body(carry):
+        cf, sink_cf, excess, lab, out_push, sinkp, rls, it = carry
+        cf, sink_cf, excess, lab, d_cross, d_sink, rinc = iteration(
+            cf, sink_cf, excess, lab)
+        return (cf, sink_cf, excess, lab, out_push + d_cross,
+                sinkp + d_sink, rls + rinc, it + 1)
+
+    def cond(carry):
+        cf, sink_cf, excess, lab, out_push, sinkp, rls, it = carry
+        return (it < limit) & ((excess > 0) & (lab < d_inf) & vmask).any()
+
+    z = jnp.zeros((), jnp.int32)
+    init = (cf_ref[...], sink_cf_ref[...], excess_ref[...], lab_ref[...],
+            jnp.zeros((V, E), jnp.int32), z, z, z)
+    cf, sink_cf, excess, lab, out_push, sinkp, rls, it = jax.lax.while_loop(
+        cond, body, init)
+    cf_out[...] = cf
+    sink_out[...] = sink_cf
+    exc_out[...] = excess
+    lab_out[...] = lab
+    push_out[...] = out_push
+    sinkp_out[0] = sinkp
+    rls_out[0] = rls
+    it_out[0] = it
+
+
+@functools.partial(jax.jit, static_argnames=("sink_open", "interpret"))
+def fused_engine_run(lab, cf, sink_cf, excess, nbr, rev_slot, intra, pushable,
+                     cross_lab, vmask, d_inf, iter_limit, *,
+                     sink_open: bool = True, interpret: bool = True):
+    """Run up to ``iter_limit`` fused engine iterations in one kernel launch.
+
+    Region-resident mode: ``block_v = V`` (the caller guarantees
+    ``fused_region_fits_vmem``).  Masks are int32 (0/1) for portable Pallas
+    lowering; ``iter_limit`` is dynamic so the driver can clamp the last
+    chunk to a ``max_iters`` cap.  Returns the post-chunk region state plus
+    this launch's accumulators:
+    ``(cf, sink_cf, excess, lab, out_push, sink_pushed, relabel_sum, iters)``.
+    """
+    V, E = cf.shape
+    scal = jnp.stack([jnp.asarray(d_inf, jnp.int32),
+                      jnp.asarray(iter_limit, jnp.int32)])
+    vec = lambda: pl.BlockSpec((V,), lambda: (0,))
+    mat = lambda w: pl.BlockSpec((V, w), lambda: (0, 0))
+    outs = pl.pallas_call(
+        functools.partial(_fused_kernel, sink_open=sink_open),
+        grid=(),
+        in_specs=[vec(), mat(E), vec(), vec(), mat(E), mat(E), mat(E),
+                  mat(E), mat(E), vec(), pl.BlockSpec((2,), lambda: (0,))],
+        out_specs=[mat(E), vec(), vec(), vec(), mat(E),
+                   pl.BlockSpec((1,), lambda: (0,)),
+                   pl.BlockSpec((1,), lambda: (0,)),
+                   pl.BlockSpec((1,), lambda: (0,))],
+        out_shape=[
+            jax.ShapeDtypeStruct((V, E), jnp.int32),   # cf
+            jax.ShapeDtypeStruct((V,), jnp.int32),     # sink_cf
+            jax.ShapeDtypeStruct((V,), jnp.int32),     # excess
+            jax.ShapeDtypeStruct((V,), jnp.int32),     # lab
+            jax.ShapeDtypeStruct((V, E), jnp.int32),   # out_push
+            jax.ShapeDtypeStruct((1,), jnp.int32),     # sink_pushed
+            jax.ShapeDtypeStruct((1,), jnp.int32),     # relabel_sum
+            jax.ShapeDtypeStruct((1,), jnp.int32),     # iters
+        ],
+        interpret=interpret,
+    )(lab, cf, sink_cf, excess, nbr, rev_slot, intra, pushable, cross_lab,
+      vmask, scal)
+    cf2, sink2, exc2, lab2, out_push, sinkp, rls, it = outs
+    return cf2, sink2, exc2, lab2, out_push, sinkp[0], rls[0], it[0]
 
 
 def engine_phase(lab, cf, sink_cf, excess, *, nbr_local, intra, emask, vmask,

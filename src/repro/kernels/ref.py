@@ -5,6 +5,9 @@
   every solver and kernel test.
 * ``push_relabel_iteration_ref`` — pure-jnp oracle for the Pallas
   push-relabel kernel (kernels/push_relabel.py).
+* ``fused_iteration_ref`` — pure-jnp oracle for one *complete* fused engine
+  iteration (push compute + intra-region scatter + post-push relabel), the
+  unit the region-resident fused kernel advances per in-kernel step.
 * ``attention_ref`` — pure-jnp oracle for the Pallas flash-attention kernel.
 """
 
@@ -115,6 +118,47 @@ def push_relabel_iteration_ref(cf, sink_cf, excess, lab, nbr, rev_slot,
     new_lab = jnp.where(no_adm, jnp.maximum(jnp.minimum(cand, d_inf), lab),
                         lab)
     return delta, new_lab
+
+
+def fused_iteration_ref(cf, sink_cf, excess, lab, nbr, rev_slot, intra,
+                        emask, vmask, cross_lab, cross_pushable, d_inf,
+                        sink_open: bool = True):
+    """One complete fused engine iteration — pure jnp oracle.
+
+    push compute (labels frozen) -> scatter application of the deltas
+    (reverse arcs + receiver excess for intra arcs; cross flow accumulated
+    into ``out_push``) -> relabel on the post-push residual graph.  This is
+    the per-step unit of the region-resident fused kernel and of the fused
+    XLA engine body; both are tested bit-equal against it.
+
+    Returns ``(cf, sink_cf, excess, new_lab, out_push, sink_pushed,
+    relabel_sum)``.
+    """
+    V, E = cf.shape
+    sink = sink_cf if sink_open else jnp.zeros_like(sink_cf)
+    delta, _ = push_relabel_iteration_ref(
+        cf, sink, excess, lab, nbr, rev_slot, intra, emask, vmask, cross_lab,
+        cross_pushable, d_inf)
+    d_sink = delta[:, 0]
+    d_arc = delta[:, 1:]
+    excess = excess - d_sink - d_arc.sum(axis=1)
+    sink_cf = sink_cf - d_sink
+    cf = cf - d_arc
+    d_intra = jnp.where(intra, d_arc, 0)
+    flat_n = V * E
+    flat_idx = (nbr * E + rev_slot).reshape(flat_n)
+    cf = (cf.reshape(flat_n).at[flat_idx]
+          .add(d_intra.reshape(flat_n), mode="drop").reshape(V, E))
+    excess = excess + jnp.zeros((V,), jnp.int32).at[nbr.reshape(flat_n)].add(
+        d_intra.reshape(flat_n), mode="drop")
+    out_push = d_arc - d_intra
+    sink2 = sink_cf if sink_open else jnp.zeros_like(sink_cf)
+    _, new_lab = push_relabel_iteration_ref(
+        cf, sink2, excess, lab, nbr, rev_slot, intra, emask, vmask, cross_lab,
+        cross_pushable, d_inf)
+    relabel_sum = jnp.sum(jnp.where(vmask, new_lab - lab, 0))
+    return (cf, sink_cf, excess, new_lab, out_push, d_sink.sum(),
+            relabel_sum)
 
 
 def attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):

@@ -33,6 +33,13 @@ def main():
                     default="xla",
                     help="discharge-engine compute phase: dense XLA rows or "
                          "the fused Pallas kernel (interpret mode off-TPU)")
+    ap.add_argument("--engine-chunk-iters", type=int, default=None,
+                    metavar="K",
+                    help="region-resident fused engine: K complete "
+                         "iterations per compute-program launch (in-kernel "
+                         "early exit; falls back to the blocked path when "
+                         "the region exceeds the VMEM budget); default: "
+                         "unfused two-phase engine")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -49,7 +56,8 @@ def main():
                           strength=args.strength, seed=args.seed)
     part = grid_partition((args.height, args.width), (ry, rx))
     cfg = SweepConfig(method=args.method, parallel=not args.sequential,
-                      engine_backend=args.engine_backend)
+                      engine_backend=args.engine_backend,
+                      engine_chunk_iters=args.engine_chunk_iters)
 
     t0 = time.time()
     if args.sharded:

@@ -10,7 +10,8 @@ import jax.numpy as jnp
 from repro.core.engine import push_relabel
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.push_relabel import engine_phase, push_relabel_phase
-from repro.kernels.ref import attention_ref, push_relabel_iteration_ref
+from repro.kernels.ref import (attention_ref, fused_iteration_ref,
+                               push_relabel_iteration_ref)
 
 ATTN_SHAPES = [
     # B, H, Hkv, Sq, Sk, D
@@ -136,6 +137,137 @@ def test_engine_backend_parity(V, E):
     for name, x, y in zip(a._fields, a, b):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
                                       err_msg=f"field {name}")
+
+
+def _engine_kwargs(r, V, **over):
+    kw = dict(nbr_local=r["nbr_local"], rev_slot=r["rev_slot"],
+              intra=r["intra"], emask=r["emask"], vmask=r["vmask"],
+              cross_pushable=r["cross_pushable"], cross_lab=r["cross_lab"],
+              d_inf=V + 2, sink_open=True)
+    kw.update(over)
+    return kw
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("V,E", [(16, 4), (33, 5)],
+                         ids=["(16,4)", "(33,5)"])
+def test_fused_iteration_matches_ref_oracle(V, E, backend):
+    """One fused engine iteration (push + intra scatter + post-push relabel)
+    is bit-equal to the kernels/ref.py fused-iteration oracle."""
+    r = _random_region(V, E, seed=11 * V + E)
+    es = push_relabel(r["cf"], r["sink_cf"], r["excess"], r["lab"],
+                      backend=backend, chunk_iters=1, max_iters=1,
+                      **_engine_kwargs(r, V))
+    want = fused_iteration_ref(
+        r["cf"], r["sink_cf"], r["excess"], r["lab"], r["nbr_local"],
+        r["rev_slot"], r["intra"], r["emask"], r["vmask"], r["cross_lab"],
+        r["cross_pushable"], V + 2)
+    got = (es.cf, es.sink_cf, es.excess, es.lab, es.out_push,
+           es.sink_pushed, es.relabel_sum)
+    names = ("cf", "sink_cf", "excess", "lab", "out_push", "sink_pushed",
+             "relabel_sum")
+    for name, x, y in zip(names, got, want):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"field {name}")
+    assert int(es.iters) == 1
+
+
+@pytest.mark.parametrize("chunk", [1, 8])
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("V,E", PR_SHAPES, ids=[str(s) for s in PR_SHAPES])
+def test_fused_engine_matches_unfused(V, E, backend, chunk):
+    """The chunked fused driver (k iterations per launch) is bit-identical
+    to the unfused two-phase engine — every state field including iteration
+    counts — on both backends.  max_iters=16 is a whole number of chunks
+    at chunk=8 (the mid-chunk early exit is covered on a consistent network
+    by test_fused_early_exit_convergence; random regions need an iteration
+    cap because their labeling can be permanently invalid)."""
+    r = _random_region(V, E, seed=7 * V + E)
+    kw = _engine_kwargs(r, V, max_iters=16)
+    a = push_relabel(r["cf"], r["sink_cf"], r["excess"], r["lab"],
+                     backend="xla", **kw)
+    b = push_relabel(r["cf"], r["sink_cf"], r["excess"], r["lab"],
+                     backend=backend, chunk_iters=chunk, **kw)
+    for name, x, y in zip(a._fields, a, b):
+        if name == "launches":
+            continue
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"field {name}")
+    # launch accounting: unfused = 2 phase programs per iteration; fused
+    # pallas = exactly ceil(iters / chunk) kernel launches (the early exit
+    # never pays for an extra empty launch); fused xla = one traced
+    # compute body per iteration (2x fewer programs, not chunked)
+    iters = int(a.iters)
+    assert int(a.launches) == 2 * iters
+    want = -(-iters // chunk) if backend == "pallas" else iters
+    assert int(b.launches) == want
+
+
+def _consistent_region(n, m, seed):
+    """A *valid* single-region network (true reverse slots, zero labels) —
+    the engine provably terminates on it, unlike on _random_region's
+    arbitrary topology, so it can run to convergence."""
+    from repro.core.graph import build, intra_mask
+    from repro.data.grids import random_sparse
+
+    p = random_sparse(n, m, seed=seed)
+    meta, state, _ = build(p, np.zeros(n, np.int64))
+    sq = lambda a: a[0]
+    return dict(
+        cf=sq(state.cf), sink_cf=sq(state.sink_cf), excess=sq(state.excess),
+        lab=jnp.zeros_like(sq(state.sink_cf)),
+        nbr_local=sq(state.nbr_local), rev_slot=sq(state.rev_slot),
+        intra=sq(intra_mask(state)), emask=sq(state.emask),
+        vmask=sq(state.vmask),
+        cross_pushable=jnp.zeros_like(sq(state.emask)),
+        cross_lab=jnp.zeros_like(sq(state.nbr_local)),
+    ), meta.num_vertices
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_fused_early_exit_convergence(backend):
+    """On a consistent network the fused driver runs to convergence with an
+    in-kernel early exit: identical final state and iteration count as the
+    unfused engine, and exactly ceil(iters/chunk) launches — the early exit
+    stops mid-chunk instead of padding to a chunk multiple."""
+    r, n = _consistent_region(12, 24, seed=4)
+    kw = dict(nbr_local=r["nbr_local"], rev_slot=r["rev_slot"],
+              intra=r["intra"], emask=r["emask"], vmask=r["vmask"],
+              cross_pushable=r["cross_pushable"], cross_lab=r["cross_lab"],
+              d_inf=n, sink_open=True, max_iters=None)
+    a = push_relabel(r["cf"], r["sink_cf"], r["excess"], r["lab"],
+                     backend="xla", **kw)
+    iters = int(a.iters)
+    assert iters > 0
+    # no active vertex left: the run converged rather than hitting a cap
+    assert not bool(((a.excess > 0) & (a.lab < n) & r["vmask"]).any())
+    for chunk in (8, iters + 5):     # mid-chunk exit / single-launch exit
+        b = push_relabel(r["cf"], r["sink_cf"], r["excess"], r["lab"],
+                         backend=backend, chunk_iters=chunk, **kw)
+        for name, x, y in zip(a._fields, a, b):
+            if name == "launches":
+                continue
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                          err_msg=f"field {name}")
+        want = -(-iters // chunk) if backend == "pallas" else iters
+        assert int(b.launches) == want
+
+
+def test_fused_pallas_vmem_fallback():
+    """A region over the VMEM budget must fall back to the blocked two-phase
+    path (launch accounting shows 2/iteration) and stay bit-exact."""
+    V, E = 33, 5
+    r = _random_region(V, E, seed=7 * V + E)
+    kw = _engine_kwargs(r, V, max_iters=16)
+    a = push_relabel(r["cf"], r["sink_cf"], r["excess"], r["lab"],
+                     backend="pallas", block_v=8, **kw)
+    b = push_relabel(r["cf"], r["sink_cf"], r["excess"], r["lab"],
+                     backend="pallas", block_v=8, chunk_iters=8,
+                     vmem_budget_bytes=1, **kw)
+    for name, x, y in zip(a._fields, a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"field {name}")
+    assert int(b.launches) == 2 * int(b.iters)
 
 
 def test_push_relabel_phase_respects_blocking():
