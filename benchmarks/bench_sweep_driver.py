@@ -1,0 +1,201 @@
+"""Sweep-driver benchmark: host-loop vs device-resident multi-sweep solve.
+
+PR 2 collapsed the intra-region engine to one kernel launch per k
+iterations; this benchmark measures the next level up — one grid-over-
+regions kernel launch per engine chunk of a *whole parallel sweep*
+(``grid=(K,)`` instead of K per-region launch chains), and one host sync
+per *solve* instead of one per sweep (``SweepConfig(device_resident=True)``,
+``host_sync_every``).  Per instance, driver and backend it records:
+
+  * ``solve_s``           — full-solve wall time (post-warmup);
+  * ``kernel_launches``   — compute-program dispatches per solve
+                            (``SweepStats.engine_launches``);
+  * ``launches_per_sweep``— the headline: K-free on the batched pallas
+                            path, and exactly 1.0 for the PRD
+                            single-engine-run row with a chunk larger than
+                            any discharge;
+  * ``host_syncs``        — device->host transfers per solve
+                            (``SweepStats.host_syncs``): host loop pays
+                            1 + 1/sweep, device-resident pays 1.
+
+All drivers/backends must agree bit-exactly on flow, sweeps and engine
+iterations (asserted here), so every column is a pure performance knob.
+Results go to ``BENCH_sweep.json``; on this CPU-only container the Pallas
+kernel runs in interpret mode, so absolute times measure correctness-path
+overhead, not TPU speed (the JSON records platform + interpret mode).
+
+    PYTHONPATH=src python benchmarks/bench_sweep_driver.py [--quick]
+        [--smoke] [--out BENCH_sweep.json]
+
+``--smoke`` runs one tiny instance through every driver × backend pair
+plus the PRD 1-launch-per-sweep configuration and asserts the flow against
+the Edmonds-Karp oracle — the CI guard for the sweep-driver plumbing.
+
+Also exposes the ``run(emit, quick)`` contract of benchmarks/run.py.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.common import emit_csv  # noqa: E402
+
+BACKENDS = ("xla", "pallas")
+FUSED_CHUNK_ITERS = 8
+PRD_BIG_CHUNK = 1 << 20      # larger than any discharge: the in-kernel
+#                              early exit makes an oversized chunk free, so
+#                              every engine run is exactly one launch
+
+
+def _configs():
+    """(label, SweepConfig) pairs: host vs device × backend, + the PRD
+    single-launch-per-sweep demonstration row."""
+    from repro.core import SweepConfig
+
+    for backend in BACKENDS:
+        base = SweepConfig(method="ard", engine_backend=backend,
+                           engine_chunk_iters=FUSED_CHUNK_ITERS)
+        yield f"host/{backend}", base
+        yield f"device/{backend}", dataclasses.replace(
+            base, device_resident=True)
+    yield "device/pallas-prd-1launch", SweepConfig(
+        method="prd", engine_backend="pallas",
+        engine_chunk_iters=PRD_BIG_CHUNK, device_resident=True)
+
+
+def _bench_instance(size, regions, label, cfg, quick):
+    from repro.core import grid_partition, solve_mincut
+    from repro.data.grids import synthetic_grid
+
+    p = synthetic_grid(size, size, connectivity=8, strength=150, seed=0)
+    part = grid_partition((size, size), regions)
+
+    # warm-up run first so solve_s measures execution, not trace/compile
+    solve_mincut(p, part=part, config=cfg)
+    t0 = time.perf_counter()
+    res = solve_mincut(p, part=part, config=cfg)
+    solve_s = time.perf_counter() - t0
+    s = res.stats
+    return dict(
+        instance=f"grid{size}x{size}_r{regions[0]}x{regions[1]}",
+        driver=label.split("/")[0],
+        config=label,
+        backend=cfg.engine_backend,
+        method=cfg.method,
+        device_resident=cfg.device_resident,
+        chunk_iters=cfg.engine_chunk_iters,
+        solve_s=round(solve_s, 3),
+        sweeps=s.sweeps,
+        engine_iters=s.engine_iters,
+        kernel_launches=s.engine_launches,
+        launches_per_sweep=round(s.engine_launches / max(1, s.sweeps), 2),
+        host_syncs=s.host_syncs,
+        flow=res.flow_value,
+    )
+
+
+def collect(quick: bool = False) -> dict:
+    import jax
+
+    sizes = ([(12, (2, 2))] if quick
+             else [(16, (2, 2)), (24, (2, 2)), (32, (2, 2)),
+                   (48, (2, 2))])
+    rows = []
+    for size, regions in sizes:
+        per = {}
+        for label, cfg in _configs():
+            row = _bench_instance(size, regions, label, cfg, quick)
+            per[label] = row
+            rows.append(row)
+        flows = {r["flow"] for r in per.values()}
+        assert len(flows) == 1, "driver/backend parity violated in bench"
+        for backend in BACKENDS:
+            h, d = per[f"host/{backend}"], per[f"device/{backend}"]
+            # device-resident must be bit-exact with the host loop
+            assert (h["sweeps"], h["engine_iters"], h["kernel_launches"]) \
+                == (d["sweeps"], d["engine_iters"], d["kernel_launches"])
+            d["sync_reduction"] = round(
+                h["host_syncs"] / max(1, d["host_syncs"]), 2)
+        one = per["device/pallas-prd-1launch"]
+        assert one["kernel_launches"] == one["sweeps"], \
+            "PRD big-chunk pallas must launch exactly once per sweep"
+    return dict(
+        bench="sweep_driver",
+        platform=jax.default_backend(),
+        jax_version=jax.__version__,
+        pallas_interpret=jax.default_backend() != "tpu",
+        fused_chunk_iters=FUSED_CHUNK_ITERS,
+        prd_big_chunk=PRD_BIG_CHUNK,
+        results=rows,
+    )
+
+
+def smoke() -> None:
+    """CI guard: tiny instance, every driver configuration, oracle flow."""
+    from repro.core import grid_partition, solve_mincut
+    from repro.data.grids import synthetic_grid
+    from repro.kernels.ref import maxflow_oracle
+
+    p = synthetic_grid(8, 8, connectivity=8, strength=150, seed=0)
+    part = grid_partition((8, 8), (2, 2))
+    want, _ = maxflow_oracle(p)
+    stats = {}
+    for label, cfg in _configs():
+        res = solve_mincut(p, part=part, config=cfg)
+        assert res.flow_value == want, (
+            f"{label}: flow {res.flow_value} != oracle {want}")
+        stats[label] = res.stats
+        print(f"smoke ok: {label} flow={res.flow_value} "
+              f"sweeps={res.stats.sweeps} "
+              f"launches={res.stats.engine_launches} "
+              f"host_syncs={res.stats.host_syncs}")
+    for backend in BACKENDS:
+        h, d = stats[f"host/{backend}"], stats[f"device/{backend}"]
+        assert (h.sweeps, h.engine_iters, h.engine_launches) == \
+            (d.sweeps, d.engine_iters, d.engine_launches), backend
+        assert d.host_syncs == 1, backend
+        assert h.host_syncs == h.sweeps + 1, backend
+    one = stats["device/pallas-prd-1launch"]
+    assert one.engine_launches == one.sweeps and one.host_syncs == 1
+    print(f"smoke passed: oracle flow {want}; device-resident bit-exact "
+          f"with host loop; 1 launch/sweep on the PRD big-chunk row")
+
+
+def run(emit=emit_csv, quick: bool = False) -> None:
+    data = collect(quick=quick)
+    for row in data["results"]:
+        emit(f"sweep/{row['config']}/{row['instance']}",
+             row["solve_s"] * 1e6,
+             f"sweeps={row['sweeps']};launches={row['kernel_launches']};"
+             f"launches_per_sweep={row['launches_per_sweep']};"
+             f"host_syncs={row['host_syncs']};flow={row['flow']}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-instance oracle check (CI), no JSON output")
+    ap.add_argument("--out", default=str(Path(__file__).resolve().parents[1]
+                                         / "BENCH_sweep.json"))
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+        return
+    data = collect(quick=args.quick)
+    Path(args.out).write_text(json.dumps(data, indent=2) + "\n")
+    print(f"wrote {args.out}")
+    for row in data["results"]:
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -26,10 +26,11 @@ def main() -> None:
     args, _ = ap.parse_known_args()
 
     from benchmarks import (bench_competitions, bench_engine_backend,
-                            bench_lm, bench_synthetic)
+                            bench_lm, bench_sweep_driver, bench_synthetic)
 
     mods = [("synthetic", bench_synthetic),
             ("engine_backend", bench_engine_backend),
+            ("sweep_driver", bench_sweep_driver),
             ("competitions", bench_competitions),
             ("lm", bench_lm)]
     print("name,us_per_call,derived")

@@ -58,10 +58,10 @@ def _axis_size(a):
         return jax.lax.psum(1, a)
 
 from repro.core import heuristics
-from repro.core.ard import ard_discharge_one
+from repro.core.ard import ard_discharge_batched
 from repro.core.graph import FlowState, GraphMeta, INF_LABEL
 from repro.core.labels import GAP_HIST_CAP
-from repro.core.prd import prd_discharge_one
+from repro.core.prd import prd_discharge_batched
 from repro.core.sweep import SweepConfig
 
 _I32 = jnp.int32
@@ -75,7 +75,9 @@ def region_axis_sharding(mesh: Mesh, axes) -> dict:
     return dict(
         nbr_region=kve, nbr_local=kve, rev_slot=kve, emask=kve, vmask=kv,
         is_boundary=kv, cross_src=rep, cross_dst=rep, cross_group=rep,
-        cross_valid=rep, cf=kve, sink_cf=kv, excess=kv, d=kv, flow_to_t=rep,
+        cross_valid=rep, cross_src_arc=rep, cross_dst_arc=rep,
+        cross_src_vtx=rep, cross_dst_vtx=rep,
+        cf=kve, sink_cf=kv, excess=kv, d=kv, flow_to_t=rep,
     )
 
 
@@ -131,23 +133,22 @@ def _one_sweep_local(meta: GraphMeta, cfg: SweepConfig, axes,
         jnp.maximum(sweep_idx - 1, -1).astype(_I32),
         _I32(meta.d_inf_ard))
 
+    # batched discharge over this shard's local regions: same per-region
+    # results as vmapping the scalar operators, but the fused pallas path
+    # is one grid-over-regions kernel launch per chunk per shard
+    disc_kw = dict(nbr_local=state.nbr_local, rev_slot=state.rev_slot,
+                   intra=intra, emask=state.emask, vmask=state.vmask,
+                   max_iters=cfg.engine_max_iters,
+                   backend=cfg.engine_backend,
+                   chunk_iters=cfg.engine_chunk_iters)
     if cfg.method == "ard":
-        fn = lambda cf, s, e, g, nl, rs, it, em, vm: ard_discharge_one(
-            cf, s, e, g, nbr_local=nl, rev_slot=rs, intra=it, emask=em,
-            vmask=vm, d_inf=meta.d_inf_ard, stage_cap=stage_cap,
-            max_iters=cfg.engine_max_iters, backend=cfg.engine_backend,
-            chunk_iters=cfg.engine_chunk_iters)
-        res = jax.vmap(fn)(state.cf, state.sink_cf, state.excess, ghost_d,
-                           state.nbr_local, state.rev_slot, intra,
-                           state.emask, state.vmask)
+        res = ard_discharge_batched(
+            state.cf, state.sink_cf, state.excess, ghost_d,
+            d_inf=meta.d_inf_ard, stage_cap=stage_cap, **disc_kw)
     else:
-        fn = lambda cf, s, e, d, g, nl, rs, it, em, vm: prd_discharge_one(
-            cf, s, e, d, g, nbr_local=nl, rev_slot=rs, intra=it, emask=em,
-            vmask=vm, d_inf=meta.d_inf_prd, max_iters=cfg.engine_max_iters,
-            backend=cfg.engine_backend, chunk_iters=cfg.engine_chunk_iters)
-        res = jax.vmap(fn)(state.cf, state.sink_cf, state.excess, state.d,
-                           ghost_d, state.nbr_local, state.rev_slot, intra,
-                           state.emask, state.vmask)
+        res = prd_discharge_batched(
+            state.cf, state.sink_cf, state.excess, state.d, ghost_d,
+            d_inf=meta.d_inf_prd, **disc_kw)
 
     new_d_local = jnp.maximum(state.d, res.d)
     cf, sink_cf, excess = res.cf, res.sink_cf, res.excess
@@ -231,6 +232,48 @@ def make_sharded_sweep(meta: GraphMeta, mesh: Mesh, cfg: SweepConfig,
     return jax.jit(fn)
 
 
+def make_sharded_solve(meta: GraphMeta, mesh: Mesh, cfg: SweepConfig,
+                       axes=("regions",), exchange: str = "full"):
+    """Build the jitted device-resident multi-sweep SPMD program.
+
+    ``run(state, start_idx, limit) -> (state, sweep_idx, n_active)``
+    advances the solve from sweep ``start_idx`` until convergence or
+    ``limit`` total sweeps inside one ``lax.while_loop`` under shard_map —
+    no host round trip between sweeps.  The loop predicate consumes the
+    psum'd global active count, which is replicated across shards, so
+    control flow stays uniform.
+    """
+    spec = region_axis_sharding(mesh, axes)
+    in_specs = (FlowState(**spec), P(), P())
+    out_specs = (FlowState(**spec), P(), P())
+    d_inf = meta.d_inf_ard if cfg.method == "ard" else meta.d_inf_prd
+
+    def chunk(state: FlowState, start_idx, limit):
+        def count_active(state):
+            act = ((state.excess > 0) & (state.d < d_inf)
+                   & state.vmask).sum()
+            return jax.lax.psum(act, axes).astype(_I32)
+
+        def cond(c):
+            _state, idx, n_act = c
+            # (idx == start_idx) keeps the legacy host-loop semantics on an
+            # already-converged input: one (no-op) sweep still runs, so both
+            # drivers report identical sweep counts in every case
+            return (idx < limit) & ((n_act > 0) | (idx == start_idx))
+
+        def body(c):
+            state, idx, _ = c
+            state, n_act = _one_sweep_local(meta, cfg, axes, state, idx,
+                                            exchange)
+            return state, idx + 1, n_act
+
+        init = (state, start_idx, count_active(state))
+        return jax.lax.while_loop(cond, body, init)
+
+    fn = shard_map(chunk, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    return jax.jit(fn)
+
+
 def maxflow_input_specs(meta: GraphMeta) -> FlowState:
     """ShapeDtypeStructs of a FlowState for AOT lowering (dry-run)."""
     K, V, E = meta.num_regions, meta.region_size, meta.max_degree
@@ -242,6 +285,8 @@ def maxflow_input_specs(meta: GraphMeta) -> FlowState:
         vmask=f((K, V), jnp.bool_), is_boundary=f((K, V), jnp.bool_),
         cross_src=f((X, 3), jnp.int32), cross_dst=f((X, 3), jnp.int32),
         cross_group=f((X,), jnp.int32), cross_valid=f((X,), jnp.bool_),
+        cross_src_arc=f((X,), jnp.int32), cross_dst_arc=f((X,), jnp.int32),
+        cross_src_vtx=f((X,), jnp.int32), cross_dst_vtx=f((X,), jnp.int32),
         cf=f((K, V, E), jnp.int32), sink_cf=f((K, V), jnp.int32),
         excess=f((K, V), jnp.int32), d=f((K, V), jnp.int32),
         flow_to_t=f((), jnp.int32))
@@ -249,15 +294,44 @@ def maxflow_input_specs(meta: GraphMeta) -> FlowState:
 
 def solve_sharded(meta: GraphMeta, state: FlowState, mesh: Mesh,
                   cfg: SweepConfig | None = None, axes=("regions",),
-                  max_sweeps: int | None = None, exchange: str = "full"):
-    """Host loop over sharded sweeps (device-resident state)."""
+                  max_sweeps: int | None = None, exchange: str = "full",
+                  device_resident: bool | None = None,
+                  host_sync_every: int | None = None):
+    """Sharded sweep loop (device-resident state; regions over the mesh).
+
+    Default driver: one jitted SPMD sweep program + one host sync per
+    sweep.  With ``device_resident`` (also picked up from
+    ``cfg.device_resident``) the whole loop runs in a ``lax.while_loop``
+    under shard_map and the host is re-entered once per
+    ``host_sync_every`` sweeps (default: once per solve) — the same
+    treatment as ``core.sweep.solve``.  Returns (state, sweeps).
+    """
     cfg = cfg or SweepConfig()
-    sweep_fn = make_sharded_sweep(meta, mesh, cfg, axes, exchange=exchange)
+    if device_resident is None:
+        device_resident = cfg.device_resident
+    if host_sync_every is None:
+        host_sync_every = cfg.host_sync_every
     shardings = flowstate_shardings(mesh, axes)
     state = jax.device_put(state, shardings)
     bound = (2 * meta.num_boundary ** 2 + 1 if cfg.method == "ard"
              else 2 * meta.num_vertices ** 2)
     limit = max_sweeps if max_sweeps is not None else bound
+
+    if device_resident:
+        run = make_sharded_solve(meta, mesh, cfg, axes, exchange=exchange)
+        sweeps = 0
+        while True:
+            cap = limit if host_sync_every is None \
+                else min(limit, sweeps + host_sync_every)
+            state, idx, n_active = run(state, jnp.asarray(sweeps, _I32),
+                                       jnp.asarray(cap, _I32))
+            sweeps, n_active = (int(x) for x in jax.device_get(
+                (idx, n_active)))
+            if n_active == 0 or sweeps >= limit:
+                break
+        return state, sweeps
+
+    sweep_fn = make_sharded_sweep(meta, mesh, cfg, axes, exchange=exchange)
     sweeps = 0
     while sweeps < limit:
         state, n_active = sweep_fn(state, jnp.asarray(sweeps, _I32))

@@ -167,83 +167,24 @@ def _push_relabel_fused(cf, sink_cf, excess, lab, *, nbr_local, rev_slot,
                         intra, emask, vmask, cross_pushable, cross_lab, d_inf,
                         sink_open, max_iters, backend, chunk_iters,
                         interpret) -> EngineState:
-    """Chunked fused driver: one launch advances up to ``chunk_iters`` iters.
-
-    The outer while_loop trips once per chunk; the chunk itself early-exits
-    as soon as no vertex is active (in-kernel for the Pallas backend, in the
-    inner bounded loop for XLA), so the final state and iteration count are
-    bit-identical to the unfused engine's.
+    """Chunked fused driver on a single region: one launch advances up to
+    ``chunk_iters`` complete iterations, early-exiting as soon as no vertex
+    is active.  Thin K = 1 wrapper over ``_push_relabel_fused_batched`` so
+    the chunk-clamping / early-exit / launch-accounting logic exists once;
+    the accounting is identical at K = 1 (pallas: 1 per trip; xla: 1 per
+    advanced iteration).
     """
-    V, E = cf.shape
-    chunk = int(chunk_iters)
-    assert chunk >= 1
-    pushable = (cross_pushable | intra) & emask
-    zero_e = jnp.zeros((V, E), _I32)
-
-    if backend == "pallas":
-        if interpret is None:
-            interpret = jax.default_backend() != "tpu"
-        intra_i = intra.astype(_I32)
-        pushable_i = pushable.astype(_I32)
-        vmask_i = vmask.astype(_I32)
-
-        def launch(lab, cf, sink_cf, excess, limit):
-            return _pr_kernel.fused_engine_run(
-                lab, cf, sink_cf, excess, nbr_local, rev_slot, intra_i,
-                pushable_i, cross_lab, vmask_i, d_inf, limit,
-                sink_open=sink_open, interpret=interpret)
-    else:
-        # same pure iteration the kernel advances per in-kernel step —
-        # sharing it is what makes the fused backends bit-exact by
-        # construction (kernels/ref.py stays the independent oracle)
-        iteration = _pr_kernel.make_fused_iteration(
-            nbr=nbr_local, rev_slot=rev_slot, intra=intra,
-            pushable=pushable, cross_lab=cross_lab, vmask=vmask, d_inf=d_inf,
-            sink_open=sink_open)
-
-        def launch(lab, cf, sink_cf, excess, limit):
-            def icond(c):
-                cf, sink_cf, excess, lab, op, sp, rs, it = c
-                return (it < limit) & (
-                    (excess > 0) & (lab < d_inf) & vmask).any()
-
-            def ibody(c):
-                cf, sink_cf, excess, lab, op, sp, rs, it = c
-                cf, sink_cf, excess, lab, d_cross, d_sink, rinc = iteration(
-                    cf, sink_cf, excess, lab)
-                return (cf, sink_cf, excess, lab, op + d_cross, sp + d_sink,
-                        rs + rinc, it + 1)
-
-            z = jnp.zeros((), _I32)
-            init = (cf, sink_cf, excess, lab, zero_e, z, z, z)
-            out = jax.lax.while_loop(icond, ibody, init)
-            cf, sink_cf, excess, lab, op, sp, rs, it = out
-            return cf, sink_cf, excess, lab, op, sp, rs, it
-
-    def cond(s: EngineState):
-        ok = ((s.excess > 0) & (s.lab < d_inf) & vmask).any()
-        if max_iters is not None:
-            ok = ok & (s.iters < max_iters)
-        return ok
-
-    def body(s: EngineState) -> EngineState:
-        limit = jnp.asarray(chunk, _I32)
-        if max_iters is not None:
-            limit = jnp.minimum(limit, jnp.asarray(max_iters, _I32) - s.iters)
-        cf, sink_cf, excess, lab, dpush, dsink, drls, dit = launch(
-            s.lab, s.cf, s.sink_cf, s.excess, limit)
-        # launch accounting: one real kernel launch per chunk on pallas;
-        # the fused XLA body is still one compute program per iteration
-        # (vs two phase calls unfused), so it counts per iteration
-        dln = jnp.ones((), _I32) if backend == "pallas" else dit
-        return EngineState(cf, sink_cf, excess, lab, s.out_push + dpush,
-                           s.sink_pushed + dsink, s.iters + dit,
-                           s.relabel_sum + drls, s.launches + dln)
-
-    init = EngineState(cf, sink_cf, excess, lab, zero_e,
-                       jnp.zeros((), _I32), jnp.zeros((), _I32),
-                       jnp.zeros((), _I32), jnp.zeros((), _I32))
-    return jax.lax.while_loop(cond, body, init)
+    one = lambda a: a[None]
+    es = _push_relabel_fused_batched(
+        one(cf), one(sink_cf), one(excess), one(lab),
+        nbr_local=one(nbr_local), rev_slot=one(rev_slot), intra=one(intra),
+        emask=one(emask), vmask=one(vmask),
+        cross_pushable=one(cross_pushable), cross_lab=one(cross_lab),
+        d_inf=d_inf, sink_open=sink_open, max_iters=max_iters,
+        backend=backend, chunk_iters=chunk_iters, interpret=interpret)
+    return EngineState(es.cf[0], es.sink_cf[0], es.excess[0], es.lab[0],
+                       es.out_push[0], es.sink_pushed[0], es.iters[0],
+                       es.relabel_sum[0], es.launches)
 
 
 def push_relabel(
@@ -343,6 +284,168 @@ def push_relabel(
                        jnp.zeros((), _I32), jnp.zeros((), _I32),
                        jnp.zeros((), _I32), jnp.zeros((), _I32))
     return jax.lax.while_loop(cond, body, init)
+
+
+def _push_relabel_fused_batched(cf, sink_cf, excess, lab, *, nbr_local,
+                                rev_slot, intra, emask, vmask, cross_pushable,
+                                cross_lab, d_inf, sink_open, max_iters,
+                                backend, chunk_iters, interpret) -> EngineState:
+    """Fused chunked driver over ALL regions at once (grid-over-regions).
+
+    One outer trip advances every still-running region by up to
+    ``chunk_iters`` iterations: on ``backend="pallas"`` the trip is a single
+    ``fused_engine_run_batched`` launch (``grid=(K,)``, per-region in-kernel
+    early exit); on ``backend="xla"`` it is one traced batched body with
+    per-region run masking.  Each region's iteration sequence is exactly the
+    scalar driver's (a region advances iff it has an active vertex and
+    budget left), so per-region states and iteration counts are
+    bit-identical to ``jax.vmap`` of the scalar path.  ``launches`` is the
+    *global* dispatch count: 1 per trip on pallas (the kernel covers every
+    region), one traced body per advanced region-iteration on xla —
+    mirroring the scalar fused accounting summed over regions.
+    """
+    K, V, E = cf.shape
+    chunk = int(chunk_iters)
+    assert chunk >= 1
+    pushable = (cross_pushable | intra) & emask
+    zero_e = jnp.zeros((K, V, E), _I32)
+    zero_k = jnp.zeros((K,), _I32)
+
+    def region_active(excess, lab):
+        return ((excess > 0) & (lab < d_inf) & vmask).any(axis=1)   # [K]
+
+    if backend == "pallas":
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        intra_i = intra.astype(_I32)
+        pushable_i = pushable.astype(_I32)
+        vmask_i = vmask.astype(_I32)
+
+        def launch(lab, cf, sink_cf, excess, limit):
+            out = _pr_kernel.fused_engine_run_batched(
+                lab, cf, sink_cf, excess, nbr_local, rev_slot, intra_i,
+                pushable_i, cross_lab, vmask_i, d_inf, limit,
+                sink_open=sink_open, interpret=interpret)
+            cf, sink_cf, excess, lab, op, sp, rs, it = out
+            return cf, sink_cf, excess, lab, op, sp, rs, it
+    else:
+        # the same pure fused iteration, vmapped over the region axis; a
+        # per-region run mask freezes regions that are idle or out of
+        # budget, exactly like vmap-of-while_loop batching does
+        def one_region(cf, sink_cf, excess, lab, nbr, rev, it_m, pu_m, cl,
+                       vm):
+            step = _pr_kernel.make_fused_iteration(
+                nbr=nbr, rev_slot=rev, intra=it_m, pushable=pu_m,
+                cross_lab=cl, vmask=vm, d_inf=d_inf, sink_open=sink_open)
+            return step(cf, sink_cf, excess, lab)
+
+        batched_iteration = jax.vmap(one_region)
+
+        def launch(lab, cf, sink_cf, excess, limit):
+            def icond(c):
+                cf, sink_cf, excess, lab, op, sp, rs, it = c
+                return ((it < limit) & region_active(excess, lab)).any()
+
+            def ibody(c):
+                cf, sink_cf, excess, lab, op, sp, rs, it = c
+                run = (it < limit) & region_active(excess, lab)      # [K]
+                ncf, nsink, nexc, nlab, d_cross, d_sink, rinc = \
+                    batched_iteration(cf, sink_cf, excess, lab, nbr_local,
+                                      rev_slot, intra, pushable, cross_lab,
+                                      vmask)
+                w3, w2 = run[:, None, None], run[:, None]
+                cf = jnp.where(w3, ncf, cf)
+                sink_cf = jnp.where(w2, nsink, sink_cf)
+                excess = jnp.where(w2, nexc, excess)
+                lab = jnp.where(w2, nlab, lab)
+                op = op + jnp.where(w3, d_cross, 0)
+                sp = sp + jnp.where(run, d_sink, 0)
+                rs = rs + jnp.where(run, rinc, 0)
+                return (cf, sink_cf, excess, lab, op, sp, rs,
+                        it + run.astype(_I32))
+
+            init = (cf, sink_cf, excess, lab, zero_e, zero_k, zero_k, zero_k)
+            return jax.lax.while_loop(icond, ibody, init)
+
+    def cond(s: EngineState):
+        run = region_active(s.excess, s.lab)
+        if max_iters is not None:
+            run = run & (s.iters < max_iters)
+        return run.any()
+
+    def body(s: EngineState) -> EngineState:
+        limit = jnp.full((K,), chunk, _I32)
+        if max_iters is not None:
+            limit = jnp.minimum(limit, jnp.asarray(max_iters, _I32) - s.iters)
+        cf, sink_cf, excess, lab, dpush, dsink, drls, dit = launch(
+            s.lab, s.cf, s.sink_cf, s.excess, limit)
+        # one real kernel launch covers every region on pallas; the fused
+        # XLA body is one compute program per advanced region-iteration
+        # (the scalar fused-xla accounting, summed over regions)
+        dln = jnp.ones((), _I32) if backend == "pallas" else dit.sum()
+        return EngineState(cf, sink_cf, excess, lab, s.out_push + dpush,
+                           s.sink_pushed + dsink, s.iters + dit,
+                           s.relabel_sum + drls, s.launches + dln)
+
+    init = EngineState(cf, sink_cf, excess, lab, zero_e, zero_k, zero_k,
+                       zero_k, jnp.zeros((), _I32))
+    return jax.lax.while_loop(cond, body, init)
+
+
+def push_relabel_batched(
+    cf: jax.Array,               # i32[K,V,E]
+    sink_cf: jax.Array,          # i32[K,V]
+    excess: jax.Array,           # i32[K,V]
+    lab: jax.Array,              # i32[K,V]
+    *,
+    nbr_local: jax.Array,
+    rev_slot: jax.Array,
+    intra: jax.Array,
+    emask: jax.Array,
+    vmask: jax.Array,
+    cross_pushable: jax.Array,
+    cross_lab: jax.Array,
+    d_inf,
+    sink_open: bool = True,
+    max_iters: int | None = None,
+    backend: str = "xla",
+    block_v: int | None = None,
+    interpret: bool | None = None,
+    chunk_iters: int | None = None,
+    vmem_budget_bytes: int | None = None,
+) -> EngineState:
+    """Run push/relabel on all K regions of a sweep through one entry point.
+
+    The batched counterpart of ``push_relabel``: per-region results (state,
+    ``out_push``, iteration counts) are bit-identical to vmapping the
+    scalar engine, but the fused paths dispatch over regions collectively —
+    one ``grid=(K,)`` kernel launch per chunk on ``backend="pallas"``
+    instead of K independent launch sequences.  ``EngineState`` fields are
+    the [K]-batched forms except ``launches``, which is the global dispatch
+    count of this engine run.  Unfused configurations (``chunk_iters=None``)
+    and Pallas regions over the VMEM budget fall back to ``jax.vmap`` of
+    the scalar engine (per-region launch counts summed).
+    """
+    K, V, E = cf.shape
+    d_inf = jnp.asarray(d_inf, _I32)
+    if chunk_iters is not None and backend == "pallas" \
+            and not _pr_kernel.fused_region_fits_vmem(V, E, vmem_budget_bytes):
+        chunk_iters = None
+    if chunk_iters is None:
+        fn = lambda cf, s, e, l, nl, rs, it, em, vm, cp, cl: push_relabel(
+            cf, s, e, l, nbr_local=nl, rev_slot=rs, intra=it, emask=em,
+            vmask=vm, cross_pushable=cp, cross_lab=cl, d_inf=d_inf,
+            sink_open=sink_open, max_iters=max_iters, backend=backend,
+            block_v=block_v, interpret=interpret)
+        es = jax.vmap(fn)(cf, sink_cf, excess, lab, nbr_local, rev_slot,
+                          intra, emask, vmask, cross_pushable, cross_lab)
+        return es._replace(launches=es.launches.sum())
+    return _push_relabel_fused_batched(
+        cf, sink_cf, excess, lab, nbr_local=nbr_local, rev_slot=rev_slot,
+        intra=intra, emask=emask, vmask=vmask, cross_pushable=cross_pushable,
+        cross_lab=cross_lab, d_inf=d_inf, sink_open=sink_open,
+        max_iters=max_iters, backend=backend, chunk_iters=chunk_iters,
+        interpret=interpret)
 
 
 def bfs_to_targets(

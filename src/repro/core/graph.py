@@ -77,6 +77,13 @@ class FlowState:
     cross_group: jax.Array   # i32[X]    id of the (src_region, dst_vertex)
     #                                    pair — "ghost w as seen from R"
     cross_valid: jax.Array   # bool[X]   padded-entry mask
+    # flat scatter indices of the cross table, precomputed at build time so
+    # no jitted sweep rebuilds them: arc index (r*V + l)*E + s into the
+    # flattened [K,V,E] arrays, vertex index r*V + l into flattened [K,V]
+    cross_src_arc: jax.Array  # i32[X]
+    cross_dst_arc: jax.Array  # i32[X]
+    cross_src_vtx: jax.Array  # i32[X]
+    cross_dst_vtx: jax.Array  # i32[X]
     # --- mutable flow state ---
     cf: jax.Array            # i32[K,V,E] residual capacity of each arc
     sink_cf: jax.Array       # i32[K,V]  residual capacity of the t-link
@@ -255,6 +262,18 @@ def build(problem: Problem, part: np.ndarray) -> tuple[GraphMeta, FlowState, "La
         cross_dst=jnp.asarray(cross_dst),
         cross_group=jnp.asarray(cross_group),
         cross_valid=jnp.asarray(cross_valid),
+        cross_src_arc=jnp.asarray(
+            (cross_src[:, 0].astype(np.int64) * V + cross_src[:, 1]) * E
+            + cross_src[:, 2], dtype=jnp.int32),
+        cross_dst_arc=jnp.asarray(
+            (cross_dst[:, 0].astype(np.int64) * V + cross_dst[:, 1]) * E
+            + cross_dst[:, 2], dtype=jnp.int32),
+        cross_src_vtx=jnp.asarray(
+            cross_src[:, 0].astype(np.int64) * V + cross_src[:, 1],
+            dtype=jnp.int32),
+        cross_dst_vtx=jnp.asarray(
+            cross_dst[:, 0].astype(np.int64) * V + cross_dst[:, 1],
+            dtype=jnp.int32),
         cf=jnp.asarray(cf),
         sink_cf=jnp.asarray(sink_cf),
         excess=jnp.asarray(excess),

@@ -17,6 +17,15 @@ sweeps discharge regions one at a time, applying boundary flow immediately
 The driver also hosts the optional heuristics of Secs. 5-6 (global gap,
 boundary-relabel, partial discharges) and the per-sweep accounting used by
 the paper's tables (sweeps, boundary bytes, engine iterations, page I/O).
+
+Two solve drivers share the same sweep programs and are bit-identical:
+the host loop runs one jitted program + one host sync per sweep, while the
+device-resident driver (``SweepConfig.device_resident``) runs the whole
+loop — discharge, fusion, heuristics, convergence check and statistics —
+inside one ``lax.while_loop``, syncing to the host once per
+``host_sync_every`` sweeps (default: once per solve).  Parallel sweeps
+discharge through the *batched* operators (grid-over-regions kernel: one
+launch covers all K regions) instead of vmapping the per-region path.
 """
 
 from __future__ import annotations
@@ -30,12 +39,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import heuristics
-from repro.core.ard import ard_discharge_one
+from repro.core.ard import ard_discharge_batched, ard_discharge_one
 from repro.core.engine import ENGINE_BACKENDS
 from repro.core.graph import FlowState, GraphMeta, intra_mask
 from repro.core.labels import (gather_ghost_labels, global_gap,
                                region_relabel)
-from repro.core.prd import prd_discharge_one
+from repro.core.prd import prd_discharge_batched, prd_discharge_one
 
 _I32 = jnp.int32
 
@@ -60,6 +69,20 @@ class SweepConfig:
                           backend, one traced body per iteration on "xla");
                           None keeps the unfused two-phase engine.  All
                           combinations are bit-identical.
+    device_resident     — run the whole solve loop (discharge, fusion, gap
+                          heuristic, convergence check, statistics) inside
+                          one ``lax.while_loop`` on device instead of one
+                          jitted program + one host sync per sweep;
+                          bit-identical results, per-sweep curves kept in
+                          fixed ``stats_ring_size`` device rings.
+    host_sync_every     — device-resident escape hatch: return to the host
+                          (one ``device_get``) every m sweeps; None (the
+                          default) syncs only at convergence / the sweep
+                          cap, i.e. a single sync per solve.
+    stats_ring_size     — capacity of the device-resident flow/active curve
+                          rings; only the last ``stats_ring_size`` sweeps
+                          of the curves survive when a solve runs longer
+                          (counters stay exact).
     """
 
     method: str = "ard"
@@ -71,11 +94,16 @@ class SweepConfig:
     engine_max_iters: int | None = None
     engine_backend: str = "xla"
     engine_chunk_iters: int | None = None
+    device_resident: bool = False
+    host_sync_every: int | None = None
+    stats_ring_size: int = 1024
 
     def __post_init__(self):
         assert self.method in ("ard", "prd")
         assert self.engine_backend in ENGINE_BACKENDS
         assert self.engine_chunk_iters is None or self.engine_chunk_iters >= 1
+        assert self.host_sync_every is None or self.host_sync_every >= 1
+        assert self.stats_ring_size >= 1
 
 
 @dataclass
@@ -83,7 +111,13 @@ class SweepStats:
     sweeps: int = 0
     engine_iters: int = 0
     engine_launches: int = 0     # compute-program dispatches (2/iter unfused;
-    #                              fused: 1/chunk pallas, 1/iter xla)
+    #                              fused: 1/chunk-trip pallas — batched over
+    #                              all regions of a parallel sweep — 1/iter
+    #                              xla)
+    host_syncs: int = 0          # device->host transfers of the solve loop
+    #                              (host loop: 1 + 1/sweep; device-resident:
+    #                              1 per host_sync_every sweeps, 1 total by
+    #                              default)
     boundary_bytes: int = 0      # flow+label messages over the cut (paper: I/O)
     page_bytes: int = 0          # streaming-mode region load/store bytes
     regions_discharged: int = 0
@@ -96,25 +130,27 @@ def _d_inf(meta: GraphMeta, cfg: SweepConfig) -> int:
 
 
 def _discharge_all(meta: GraphMeta, state: FlowState, cfg: SweepConfig,
-                   ghost_d: jax.Array, stage_cap) :
-    """vmap the configured discharge over all regions."""
+                   ghost_d: jax.Array, stage_cap):
+    """Discharge all regions of a parallel sweep through the batched entry
+    points (``ard_discharge_batched``/``prd_discharge_batched``) — one
+    grid-over-regions kernel launch per engine chunk on the fused pallas
+    path instead of vmapping K per-region launch sequences.  Per-region
+    results are bit-identical to the vmapped scalar path;
+    ``DischargeResult.engine_launches`` is the sweep's global dispatch
+    count.
+    """
     intra = intra_mask(state)
+    kw = dict(nbr_local=state.nbr_local, rev_slot=state.rev_slot,
+              intra=intra, emask=state.emask, vmask=state.vmask,
+              max_iters=cfg.engine_max_iters, backend=cfg.engine_backend,
+              chunk_iters=cfg.engine_chunk_iters)
     if cfg.method == "ard":
-        fn = lambda cf, s, e, g, nl, rs, it, em, vm: ard_discharge_one(
-            cf, s, e, g, nbr_local=nl, rev_slot=rs, intra=it, emask=em,
-            vmask=vm, d_inf=meta.d_inf_ard, stage_cap=stage_cap,
-            max_iters=cfg.engine_max_iters, backend=cfg.engine_backend,
-            chunk_iters=cfg.engine_chunk_iters)
-        return jax.vmap(fn)(state.cf, state.sink_cf, state.excess, ghost_d,
-                            state.nbr_local, state.rev_slot, intra,
-                            state.emask, state.vmask)
-    fn = lambda cf, s, e, d, g, nl, rs, it, em, vm: prd_discharge_one(
-        cf, s, e, d, g, nbr_local=nl, rev_slot=rs, intra=it, emask=em,
-        vmask=vm, d_inf=meta.d_inf_prd, max_iters=cfg.engine_max_iters,
-        backend=cfg.engine_backend, chunk_iters=cfg.engine_chunk_iters)
-    return jax.vmap(fn)(state.cf, state.sink_cf, state.excess, state.d,
-                        ghost_d, state.nbr_local, state.rev_slot, intra,
-                        state.emask, state.vmask)
+        return ard_discharge_batched(
+            state.cf, state.sink_cf, state.excess, ghost_d,
+            d_inf=meta.d_inf_ard, stage_cap=stage_cap, **kw)
+    return prd_discharge_batched(
+        state.cf, state.sink_cf, state.excess, state.d, ghost_d,
+        d_inf=meta.d_inf_prd, **kw)
 
 
 def _apply_cross_flow(state: FlowState, out_push: jax.Array,
@@ -125,23 +161,22 @@ def _apply_cross_flow(state: FlowState, out_push: jax.Array,
     raises the receiver's reverse residual + excess; rejected flow is
     refunded to the sender (residual and excess), matching the paper's
     "do not allow the flow to cross the boundary in one of the directions".
+    The flat scatter indices are the build-time precomputed
+    ``cross_*_arc``/``cross_*_vtx`` fields of ``FlowState`` — static
+    topology, so no jitted sweep rebuilds them from ``cross_src``/
+    ``cross_dst``.
     """
     K, V, E = state.cf.shape
-    src, dst = state.cross_src, state.cross_dst
-    delta = out_push[src[:, 0], src[:, 1], src[:, 2]]
+    delta = out_push.reshape(-1)[state.cross_src_arc]
     acc = jnp.where(accept, delta, 0)
     rej = delta - acc
-    cf = state.cf
-    flat = cf.reshape(-1)
-    dst_idx = (dst[:, 0] * V + dst[:, 1]) * E + dst[:, 2]
-    src_idx = (src[:, 0] * V + src[:, 1]) * E + src[:, 2]
-    flat = flat.at[dst_idx].add(acc, mode="drop")
-    flat = flat.at[src_idx].add(rej, mode="drop")
+    flat = state.cf.reshape(-1)
+    flat = flat.at[state.cross_dst_arc].add(acc, mode="drop")
+    flat = flat.at[state.cross_src_arc].add(rej, mode="drop")
     cf = flat.reshape(K, V, E)
-    excess = state.excess
-    eflat = excess.reshape(-1)
-    eflat = eflat.at[dst[:, 0] * V + dst[:, 1]].add(acc, mode="drop")
-    eflat = eflat.at[src[:, 0] * V + src[:, 1]].add(rej, mode="drop")
+    eflat = state.excess.reshape(-1)
+    eflat = eflat.at[state.cross_dst_vtx].add(acc, mode="drop")
+    eflat = eflat.at[state.cross_src_vtx].add(rej, mode="drop")
     excess = eflat.reshape(K, V)
     return state.replace(cf=cf, excess=excess)
 
@@ -193,8 +228,12 @@ def sequential_sweep(meta: GraphMeta, state: FlowState, cfg: SweepConfig,
 
     def body(k, carry):
         state, iters, launches, discharged = carry
-        ghost_d = gather_ghost_labels(state)
         sl = lambda a: jax.lax.dynamic_index_in_dim(a, k, 0, keepdims=False)
+        # ghost labels only for the arcs of region k (a [V,E] gather) — the
+        # other K-1 regions' ghosts are never read by this discharge, so
+        # gathering the full [K,V,E] table per region iteration is K x
+        # wasted label traffic
+        ghost_k = state.d[sl(state.nbr_region), sl(state.nbr_local)]
         active = ((sl(state.excess) > 0) & (sl(state.d) < d_inf)
                   & sl(state.vmask)).any()
 
@@ -202,7 +241,7 @@ def sequential_sweep(meta: GraphMeta, state: FlowState, cfg: SweepConfig,
             if cfg.method == "ard":
                 res = ard_discharge_one(
                     sl(state.cf), sl(state.sink_cf), sl(state.excess),
-                    sl(ghost_d), nbr_local=sl(state.nbr_local),
+                    ghost_k, nbr_local=sl(state.nbr_local),
                     rev_slot=sl(state.rev_slot), intra=sl(intra),
                     emask=sl(state.emask), vmask=sl(state.vmask),
                     d_inf=meta.d_inf_ard, stage_cap=stage_cap_all,
@@ -212,7 +251,7 @@ def sequential_sweep(meta: GraphMeta, state: FlowState, cfg: SweepConfig,
             else:
                 res = prd_discharge_one(
                     sl(state.cf), sl(state.sink_cf), sl(state.excess),
-                    sl(state.d), sl(ghost_d), nbr_local=sl(state.nbr_local),
+                    sl(state.d), ghost_k, nbr_local=sl(state.nbr_local),
                     rev_slot=sl(state.rev_slot), intra=sl(intra),
                     emask=sl(state.emask), vmask=sl(state.vmask),
                     d_inf=meta.d_inf_prd, max_iters=cfg.engine_max_iters,
@@ -261,26 +300,122 @@ def sweep_bound(meta: GraphMeta, cfg: SweepConfig) -> int:
     return 2 * meta.num_vertices * meta.num_vertices
 
 
-def solve(meta: GraphMeta, state: FlowState, cfg: SweepConfig | None = None):
-    """Run sweeps until no active vertex remains (maximum preflow reached).
-
-    Returns (state, SweepStats).  The host-level loop is intentional: each
-    sweep is one jitted device program and the paper's statistics (sweeps,
-    I/O bytes) are accumulated between programs, exactly like the streaming
-    solver accounts disk I/O between region loads.
-    """
-    cfg = cfg or SweepConfig()
-    stats = SweepStats()
-    bound = sweep_bound(meta, cfg)
-    max_sweeps = cfg.max_sweeps if cfg.max_sweeps is not None else bound
+def _page_and_msg_bytes(meta: GraphMeta, state: FlowState):
     # bytes of one region page (cf + labels + excess + topology) — paper's
     # streaming unit; boundary message = 4B flow + 4B label per cross arc.
     page_bytes = (state.cf.itemsize * state.cf[0].size * 4
                   + 4 * state.excess[0].size * 4)
-    msg_bytes = 8 * meta.num_cross_arcs
+    return page_bytes, 8 * meta.num_cross_arcs
+
+
+@partial(jax.jit, static_argnums=(0, 1))
+def _run_device_sweeps(meta: GraphMeta, cfg: SweepConfig, state: FlowState,
+                       carry, limit):
+    """Advance the solve up to ``limit`` total sweeps entirely on device.
+
+    ``carry`` = (sweep_idx, engine_iters, engine_launches,
+    regions_discharged, flow_ring [R], active_ring [R], n_active) — the
+    device-resident mirror of the host loop's ``SweepStats`` accumulation.
+    One trip of the ``lax.while_loop`` is one complete sweep (discharge →
+    fusion → heuristics → convergence count), identical math to the
+    host-loop driver, so the final state and every counter are bit-equal.
+    """
+    R = cfg.stats_ring_size
+
+    def cond(c):
+        _state, idx, it, ln, dc, fr, ar, n_act = c
+        return (idx < limit) & (n_act > 0)
+
+    def body(c):
+        state, idx, it, ln, dc, fr, ar, n_act = c
+        ar = ar.at[idx % R].set(n_act)
+        if cfg.parallel:
+            state, dit, dln = parallel_sweep(meta, state, cfg, idx)
+            ddc = _I32(meta.num_regions)
+        else:
+            state, dit, dln, ddc = sequential_sweep(meta, state, cfg, idx)
+        n_act = num_active(meta, state, cfg).astype(_I32)
+        fr = fr.at[idx % R].set(state.flow_to_t)
+        return (state, idx + 1, it + dit, ln + dln, dc + ddc, fr, ar, n_act)
+
+    out = jax.lax.while_loop(cond, body, (state, *carry))
+    return out[0], out[1:]
+
+
+def _solve_device_resident(meta: GraphMeta, state: FlowState,
+                           cfg: SweepConfig):
+    """Device-resident solve: one kernel-program chain per host sync.
+
+    The whole sweep loop — discharge, fusion, gap heuristic, convergence
+    check and statistics accumulation — runs inside ``lax.while_loop`` on
+    device; the host is re-entered once per ``cfg.host_sync_every`` sweeps
+    (default: only at convergence or the sweep cap, i.e. exactly one
+    ``device_get`` per solve).  Bit-exact with the host loop on state and
+    counters; the flow/active curves live in fixed-size device rings, so
+    only the last ``stats_ring_size`` sweeps of the curves survive very
+    long solves.
+    """
+    stats = SweepStats()
+    bound = sweep_bound(meta, cfg)
+    max_sweeps = cfg.max_sweeps if cfg.max_sweeps is not None else bound
+    R = cfg.stats_ring_size
+    page_bytes, msg_bytes = _page_and_msg_bytes(meta, state)
+
+    z = jnp.zeros((), _I32)
+    ring = jnp.zeros((R,), _I32)
+    carry = (z, z, z, z, ring, ring,
+             num_active(meta, state, cfg).astype(_I32))
+    done = 0
+    while True:
+        limit = max_sweeps if cfg.host_sync_every is None \
+            else min(max_sweeps, done + cfg.host_sync_every)
+        state, carry = _run_device_sweeps(meta, cfg, state, carry,
+                                          jnp.asarray(limit, _I32))
+        idx, it, ln, dc, fr, ar, n_act = jax.device_get(carry)
+        stats.host_syncs += 1
+        done = int(idx)
+        if int(n_act) == 0 or done >= max_sweeps:
+            break
+
+    stats.sweeps = done
+    stats.engine_iters = int(it)
+    stats.engine_launches = int(ln)
+    stats.regions_discharged = int(dc)
+    stats.page_bytes = int(dc) * page_bytes
+    stats.boundary_bytes = done * msg_bytes
+    first = max(0, done - R)
+    stats.flow_curve = [int(fr[j % R]) for j in range(first, done)]
+    stats.active_curve = [int(ar[j % R]) for j in range(first, done)]
+    if int(n_act) == 0 and done < max_sweeps:
+        stats.active_curve.append(int(n_act))   # the terminal 0 the host
+        #                                         loop records on its exit
+    return state, stats
+
+
+def solve(meta: GraphMeta, state: FlowState, cfg: SweepConfig | None = None):
+    """Run sweeps until no active vertex remains (maximum preflow reached).
+
+    Returns (state, SweepStats).  Two drivers, bit-identical results:
+
+    * host loop (default) — each sweep is one jitted device program with
+      one device->host sync after it; the paper's statistics (sweeps, I/O
+      bytes) are accumulated between programs, exactly like the streaming
+      solver accounts disk I/O between region loads;
+    * ``cfg.device_resident`` — the loop itself moves into a
+      ``lax.while_loop``; the host is re-entered once per
+      ``cfg.host_sync_every`` sweeps (default: once per solve).
+    """
+    cfg = cfg or SweepConfig()
+    if cfg.device_resident:
+        return _solve_device_resident(meta, state, cfg)
+    stats = SweepStats()
+    bound = sweep_bound(meta, cfg)
+    max_sweeps = cfg.max_sweeps if cfg.max_sweeps is not None else bound
+    page_bytes, msg_bytes = _page_and_msg_bytes(meta, state)
 
     sweep_idx = 0
     n_act = int(num_active(meta, state, cfg))
+    stats.host_syncs += 1
     while sweep_idx < max_sweeps:
         stats.active_curve.append(n_act)
         if n_act == 0:
@@ -297,6 +432,7 @@ def solve(meta: GraphMeta, state: FlowState, cfg: SweepConfig | None = None):
         n_act, flow, it, ln, dc = (int(x) for x in jax.device_get(
             (num_active(meta, state, cfg), state.flow_to_t, iters, launches,
              disc)))
+        stats.host_syncs += 1
         stats.sweeps += 1
         stats.engine_iters += it
         stats.engine_launches += ln

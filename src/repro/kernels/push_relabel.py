@@ -44,6 +44,13 @@ one per *k* iterations — the paper's "intra-region work is cheap because it
 stays local" premise, honored on the accelerator.  ``core.engine`` falls
 back to the blocked two-phase path when the region exceeds the VMEM budget
 (``fused_region_fits_vmem``).
+
+``fused_engine_run_batched`` is the grid-over-regions form: the same
+in-kernel loop as a ``grid=(K,)`` program, one launch discharging *all*
+regions of a parallel sweep — each program instance owns one region's
+``[V, E]`` tile, takes its own iteration budget from a per-region limit
+vector, and early-exits independently, so idle regions cost O(1) inside
+the shared launch.  ``core.engine.push_relabel_batched`` drives it.
 """
 
 from __future__ import annotations
@@ -250,25 +257,22 @@ def make_fused_iteration(*, nbr, rev_slot, intra, pushable, cross_lab, vmask,
     return iteration
 
 
-def _fused_kernel(lab_ref, cf_ref, sink_cf_ref, excess_ref, nbr_ref, rev_ref,
-                  intra_ref, pushable_ref, cross_lab_ref, vmask_ref, scal_ref,
-                  cf_out, sink_out, exc_out, lab_out, push_out, sinkp_out,
-                  rls_out, it_out, *, sink_open: bool):
-    """Whole-region block: up to ``scal[1]`` fused engine iterations.
+def _fused_region_loop(lab, cf, sink_cf, excess, nbr, rev_slot, intra,
+                       pushable, cross_lab, vmask, d_inf, limit, *,
+                       sink_open: bool):
+    """Up to ``limit`` fused engine iterations on one region's arrays.
 
-    One in-kernel iteration is bit-identical to one trip of the unfused
-    engine loop (push compute -> intra scatter -> post-push relabel); the
-    while_loop exits early once no vertex is active, so idle regions cost
-    O(1).  All carries live in VMEM; the only HBM traffic is the initial
-    load and the final store of the region state.
+    One iteration is bit-identical to one trip of the unfused engine loop
+    (push compute -> intra scatter -> post-push relabel); the while_loop
+    exits early once no vertex is active, so idle regions cost O(1).  This
+    is the shared in-kernel body of the single-region (``grid=()``) and the
+    grid-over-regions (``grid=(K,)``) fused kernels.
     """
-    V, E = cf_ref.shape
-    vmask = vmask_ref[...] != 0
-    d_inf = scal_ref[0]
-    limit = scal_ref[1]
+    V, E = cf.shape
+    vmask = vmask != 0
     iteration = make_fused_iteration(
-        nbr=nbr_ref[...], rev_slot=rev_ref[...], intra=intra_ref[...] != 0,
-        pushable=pushable_ref[...] != 0, cross_lab=cross_lab_ref[...],
+        nbr=nbr, rev_slot=rev_slot, intra=intra != 0,
+        pushable=pushable != 0, cross_lab=cross_lab,
         vmask=vmask, d_inf=d_inf, sink_open=sink_open)
 
     def body(carry):
@@ -283,15 +287,32 @@ def _fused_kernel(lab_ref, cf_ref, sink_cf_ref, excess_ref, nbr_ref, rev_ref,
         return (it < limit) & ((excess > 0) & (lab < d_inf) & vmask).any()
 
     z = jnp.zeros((), jnp.int32)
-    init = (cf_ref[...], sink_cf_ref[...], excess_ref[...], lab_ref[...],
-            jnp.zeros((V, E), jnp.int32), z, z, z)
-    cf, sink_cf, excess, lab, out_push, sinkp, rls, it = jax.lax.while_loop(
-        cond, body, init)
-    cf_out[...] = cf
-    sink_out[...] = sink_cf
-    exc_out[...] = excess
-    lab_out[...] = lab
-    push_out[...] = out_push
+    init = (cf, sink_cf, excess, lab, jnp.zeros((V, E), jnp.int32), z, z, z)
+    return jax.lax.while_loop(cond, body, init)
+
+
+def _fused_kernel_grid(lab_ref, cf_ref, sink_cf_ref, excess_ref, nbr_ref,
+                       rev_ref, intra_ref, pushable_ref, cross_lab_ref,
+                       vmask_ref, scal_ref, cf_out, sink_out, exc_out,
+                       lab_out, push_out, sinkp_out, rls_out, it_out, *,
+                       sink_open: bool):
+    """Grid-over-regions program instance: region ``pl.program_id(0)``.
+
+    Every ref carries a leading block dimension of 1 (one region's tile);
+    ``scal_ref`` is this region's (d_inf, iter_limit) row.  The in-kernel
+    early exit makes an idle or already-converged region cost O(1), so one
+    launch can mix hot and idle regions freely.
+    """
+    cf, sink_cf, excess, lab, out_push, sinkp, rls, it = _fused_region_loop(
+        lab_ref[0], cf_ref[0], sink_cf_ref[0], excess_ref[0],
+        nbr_ref[0], rev_ref[0], intra_ref[0], pushable_ref[0],
+        cross_lab_ref[0], vmask_ref[0], scal_ref[0, 0], scal_ref[0, 1],
+        sink_open=sink_open)
+    cf_out[0] = cf
+    sink_out[0] = sink_cf
+    exc_out[0] = excess
+    lab_out[0] = lab
+    push_out[0] = out_push
     sinkp_out[0] = sinkp
     rls_out[0] = rls
     it_out[0] = it
@@ -306,39 +327,67 @@ def fused_engine_run(lab, cf, sink_cf, excess, nbr, rev_slot, intra, pushable,
     Region-resident mode: ``block_v = V`` (the caller guarantees
     ``fused_region_fits_vmem``).  Masks are int32 (0/1) for portable Pallas
     lowering; ``iter_limit`` is dynamic so the driver can clamp the last
-    chunk to a ``max_iters`` cap.  Returns the post-chunk region state plus
-    this launch's accumulators:
+    chunk to a ``max_iters`` cap.  The single-region convenience form of
+    ``fused_engine_run_batched`` (K = 1 grid, same kernel body).  Returns
+    the post-chunk region state plus this launch's accumulators:
     ``(cf, sink_cf, excess, lab, out_push, sink_pushed, relabel_sum, iters)``.
     """
-    V, E = cf.shape
-    scal = jnp.stack([jnp.asarray(d_inf, jnp.int32),
-                      jnp.asarray(iter_limit, jnp.int32)])
-    vec = lambda: pl.BlockSpec((V,), lambda: (0,))
-    mat = lambda w: pl.BlockSpec((V, w), lambda: (0, 0))
+    one = lambda a: a[None]
+    outs = fused_engine_run_batched(
+        one(lab), one(cf), one(sink_cf), one(excess), one(nbr),
+        one(rev_slot), one(intra), one(pushable), one(cross_lab), one(vmask),
+        d_inf, jnp.reshape(jnp.asarray(iter_limit, jnp.int32), (1,)),
+        sink_open=sink_open, interpret=interpret)
+    return tuple(o[0] for o in outs)
+
+
+@functools.partial(jax.jit, static_argnames=("sink_open", "interpret"))
+def fused_engine_run_batched(lab, cf, sink_cf, excess, nbr, rev_slot, intra,
+                             pushable, cross_lab, vmask, d_inf, iter_limit, *,
+                             sink_open: bool = True, interpret: bool = True):
+    """All K regions of a parallel sweep in ONE ``grid=(K,)`` kernel launch.
+
+    The grid-over-regions variant of ``fused_engine_run``: program instance
+    k owns region k's ``[V, E]`` tile and advances it up to
+    ``iter_limit[k]`` complete fused engine iterations with per-region
+    in-kernel early exit — an idle region costs O(1).  Inputs are the
+    batched ``[K, ...]`` forms of the single-region call; ``iter_limit`` is
+    a dynamic i32[K] so the driver can clamp each region's last chunk to
+    its ``max_iters`` budget independently.  Per-region results are
+    bit-identical to K separate ``fused_engine_run`` calls; what changes is
+    the dispatch count: one launch instead of K.
+
+    Returns ``(cf, sink_cf, excess, lab, out_push, sink_pushed [K],
+    relabel_sum [K], iters [K])``.
+    """
+    K, V, E = cf.shape
+    scal = jnp.stack(
+        [jnp.broadcast_to(jnp.asarray(d_inf, jnp.int32), (K,)),
+         jnp.asarray(iter_limit, jnp.int32)], axis=1)          # [K, 2]
+    vec = lambda: pl.BlockSpec((1, V), lambda k: (k, 0))
+    mat = lambda w: pl.BlockSpec((1, V, w), lambda k: (k, 0, 0))
+    one = lambda: pl.BlockSpec((1,), lambda k: (k,))
     outs = pl.pallas_call(
-        functools.partial(_fused_kernel, sink_open=sink_open),
-        grid=(),
+        functools.partial(_fused_kernel_grid, sink_open=sink_open),
+        grid=(K,),
         in_specs=[vec(), mat(E), vec(), vec(), mat(E), mat(E), mat(E),
-                  mat(E), mat(E), vec(), pl.BlockSpec((2,), lambda: (0,))],
-        out_specs=[mat(E), vec(), vec(), vec(), mat(E),
-                   pl.BlockSpec((1,), lambda: (0,)),
-                   pl.BlockSpec((1,), lambda: (0,)),
-                   pl.BlockSpec((1,), lambda: (0,))],
+                  mat(E), mat(E), vec(),
+                  pl.BlockSpec((1, 2), lambda k: (k, 0))],
+        out_specs=[mat(E), vec(), vec(), vec(), mat(E), one(), one(), one()],
         out_shape=[
-            jax.ShapeDtypeStruct((V, E), jnp.int32),   # cf
-            jax.ShapeDtypeStruct((V,), jnp.int32),     # sink_cf
-            jax.ShapeDtypeStruct((V,), jnp.int32),     # excess
-            jax.ShapeDtypeStruct((V,), jnp.int32),     # lab
-            jax.ShapeDtypeStruct((V, E), jnp.int32),   # out_push
-            jax.ShapeDtypeStruct((1,), jnp.int32),     # sink_pushed
-            jax.ShapeDtypeStruct((1,), jnp.int32),     # relabel_sum
-            jax.ShapeDtypeStruct((1,), jnp.int32),     # iters
+            jax.ShapeDtypeStruct((K, V, E), jnp.int32),   # cf
+            jax.ShapeDtypeStruct((K, V), jnp.int32),      # sink_cf
+            jax.ShapeDtypeStruct((K, V), jnp.int32),      # excess
+            jax.ShapeDtypeStruct((K, V), jnp.int32),      # lab
+            jax.ShapeDtypeStruct((K, V, E), jnp.int32),   # out_push
+            jax.ShapeDtypeStruct((K,), jnp.int32),        # sink_pushed
+            jax.ShapeDtypeStruct((K,), jnp.int32),        # relabel_sum
+            jax.ShapeDtypeStruct((K,), jnp.int32),        # iters
         ],
         interpret=interpret,
     )(lab, cf, sink_cf, excess, nbr, rev_slot, intra, pushable, cross_lab,
       vmask, scal)
-    cf2, sink2, exc2, lab2, out_push, sinkp, rls, it = outs
-    return cf2, sink2, exc2, lab2, out_push, sinkp[0], rls[0], it[0]
+    return outs
 
 
 def engine_phase(lab, cf, sink_cf, excess, *, nbr_local, intra, emask, vmask,

@@ -40,6 +40,13 @@ def main():
                          "early exit; falls back to the blocked path when "
                          "the region exceeds the VMEM budget); default: "
                          "unfused two-phase engine")
+    ap.add_argument("--device-resident", action="store_true",
+                    help="run the whole sweep loop in one lax.while_loop "
+                         "on device: one host sync per solve instead of "
+                         "one per sweep (bit-identical results)")
+    ap.add_argument("--host-sync-every", type=int, default=None, metavar="M",
+                    help="device-resident escape hatch: return to the host "
+                         "every M sweeps (default: only at convergence)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -57,7 +64,9 @@ def main():
     part = grid_partition((args.height, args.width), (ry, rx))
     cfg = SweepConfig(method=args.method, parallel=not args.sequential,
                       engine_backend=args.engine_backend,
-                      engine_chunk_iters=args.engine_chunk_iters)
+                      engine_chunk_iters=args.engine_chunk_iters,
+                      device_resident=args.device_resident,
+                      host_sync_every=args.host_sync_every)
 
     t0 = time.time()
     if args.sharded:
@@ -81,8 +90,11 @@ def main():
         assert flow == cost
     else:
         res = solve_mincut(prob, part=part, config=cfg)
-        print(f"[maxflow] {args.method} parallel={cfg.parallel}: "
+        print(f"[maxflow] {args.method} parallel={cfg.parallel} "
+              f"device_resident={cfg.device_resident}: "
               f"flow={res.flow_value} sweeps={res.stats.sweeps} "
+              f"launches={res.stats.engine_launches} "
+              f"host_syncs={res.stats.host_syncs} "
               f"boundary_bytes={res.stats.boundary_bytes} "
               f"page_bytes={res.stats.page_bytes} "
               f"t={time.time()-t0:.2f}s")

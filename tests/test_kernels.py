@@ -7,9 +7,11 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import push_relabel
+from repro.core.engine import push_relabel, push_relabel_batched
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.push_relabel import engine_phase, push_relabel_phase
+from repro.kernels.push_relabel import (engine_phase, fused_engine_run,
+                                        fused_engine_run_batched,
+                                        push_relabel_phase)
 from repro.kernels.ref import (attention_ref, fused_iteration_ref,
                                push_relabel_iteration_ref)
 
@@ -268,6 +270,79 @@ def test_fused_pallas_vmem_fallback():
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
                                       err_msg=f"field {name}")
     assert int(b.launches) == 2 * int(b.iters)
+
+
+def test_fused_engine_run_batched_matches_scalar_kernel():
+    """The grid-over-regions kernel (grid=(K,)) is bit-identical, region by
+    region, to K separate single-region fused kernel launches — including a
+    region whose per-region iteration budget is exhausted (limit 0)."""
+    rng = np.random.RandomState(0)
+    K, V, E = 3, 16, 4
+    mk = lambda *s, hi=10: jnp.asarray(rng.randint(0, hi, s), jnp.int32)
+    lab, cf = mk(K, V, hi=8), mk(K, V, E, hi=50)
+    sink, exc = mk(K, V, hi=20), mk(K, V, hi=40)
+    nbr, rev = mk(K, V, E, hi=V), mk(K, V, E, hi=E)
+    intra = jnp.asarray(rng.rand(K, V, E) < 0.8, jnp.int32)
+    pushable = jnp.asarray(rng.rand(K, V, E) < 0.9, jnp.int32)
+    clab = mk(K, V, E, hi=6)
+    vmask = jnp.asarray(rng.rand(K, V) < 0.95, jnp.int32)
+    d_inf, limit = 18, jnp.asarray([5, 0, 9], jnp.int32)
+    got = fused_engine_run_batched(lab, cf, sink, exc, nbr, rev, intra,
+                                   pushable, clab, vmask, d_inf, limit,
+                                   interpret=True)
+    for k in range(K):
+        want = fused_engine_run(lab[k], cf[k], sink[k], exc[k], nbr[k],
+                                rev[k], intra[k], pushable[k], clab[k],
+                                vmask[k], d_inf, limit[k], interpret=True)
+        for i, (x, y) in enumerate(zip([o[k] for o in got], want)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                          err_msg=f"region {k} output {i}")
+
+
+@pytest.mark.parametrize("backend,chunk",
+                         [("xla", None), ("xla", 8), ("pallas", 8)],
+                         ids=["xla-unfused", "xla-fused", "pallas-fused"])
+def test_push_relabel_batched_matches_vmapped_scalar(backend, chunk):
+    """The batched engine entry point is bit-identical, per region, to
+    jax.vmap of the scalar engine on every state field; only the launch
+    accounting becomes global (1 per chunk trip on fused pallas)."""
+    rng = np.random.RandomState(5)
+    K, V, E = 3, 16, 4
+    regions = [_random_region(V, E, seed=100 + k) for k in range(K)]
+    stack = lambda name: jnp.stack([r[name] for r in regions])
+    kw = dict(nbr_local=stack("nbr_local"), rev_slot=stack("rev_slot"),
+              intra=stack("intra"), emask=stack("emask"),
+              vmask=stack("vmask"), cross_pushable=stack("cross_pushable"),
+              cross_lab=stack("cross_lab"), d_inf=V + 2, sink_open=True,
+              max_iters=16)
+    got = push_relabel_batched(stack("cf"), stack("sink_cf"),
+                               stack("excess"), stack("lab"),
+                               backend=backend, chunk_iters=chunk, **kw)
+    launches = 0
+    for k, r in enumerate(regions):
+        want = push_relabel(r["cf"], r["sink_cf"], r["excess"], r["lab"],
+                            nbr_local=r["nbr_local"], rev_slot=r["rev_slot"],
+                            intra=r["intra"], emask=r["emask"],
+                            vmask=r["vmask"],
+                            cross_pushable=r["cross_pushable"],
+                            cross_lab=r["cross_lab"], d_inf=V + 2,
+                            sink_open=True, max_iters=16, backend=backend,
+                            chunk_iters=chunk)
+        launches += int(want.launches)
+        for name, x, y in zip(want._fields, got, want):
+            if name == "launches":
+                continue
+            np.testing.assert_array_equal(np.asarray(x[k]), np.asarray(y),
+                                          err_msg=f"region {k} field {name}")
+    if backend == "pallas" and chunk:
+        # grid-over-regions: one launch per chunk trip covers every region,
+        # so the dispatch count is the busiest region's ceil(iters/chunk)
+        # instead of the sum over regions
+        want_trips = max(-(-int(it) // chunk)
+                         for it in np.asarray(got.iters))
+        assert int(got.launches) == want_trips
+    else:
+        assert int(got.launches) == launches
 
 
 def test_push_relabel_phase_respects_blocking():

@@ -54,6 +54,49 @@ def test_sharded_pard_matches_oracle():
     assert "OK" in out
 
 
+def test_sharded_device_resident_matches_host_loop():
+    """solve_sharded(device_resident=True) — the lax.while_loop-under-
+    shard_map driver — must match the per-sweep host loop bit-exactly
+    (flow, labels, sweep count) at every sync cadence, and still report one
+    (no-op) sweep on an already-converged input like the host loop does."""
+    out = _run("""
+        import jax, numpy as np
+        from repro.data.grids import synthetic_grid
+        from repro.core.graph import build, init_labels
+        from repro.core import partition
+        from repro.core.distributed import solve_sharded
+        from repro.core.sweep import SweepConfig
+        from repro.kernels.ref import maxflow_oracle
+
+        p = synthetic_grid(16, 16, connectivity=8, strength=120, seed=4)
+        want, _ = maxflow_oracle(p)
+        part = partition.grid_partition((16, 16), (2, 4))
+        meta, state0, _ = build(p, part)
+        cfg = SweepConfig(method='ard')
+        mesh = jax.make_mesh((8,), ('regions',))
+        st, sweeps = solve_sharded(meta, init_labels(meta, state0), mesh,
+                                   cfg, max_sweeps=500)
+        assert int(st.flow_to_t) == want
+        for hse in (None, 2):
+            st2, sweeps2 = solve_sharded(meta, init_labels(meta, state0),
+                                         mesh, cfg, max_sweeps=500,
+                                         device_resident=True,
+                                         host_sync_every=hse)
+            assert int(st2.flow_to_t) == want, hse
+            assert sweeps2 == sweeps, (hse, sweeps2, sweeps)
+            np.testing.assert_array_equal(np.asarray(st.d),
+                                          np.asarray(st2.d))
+        # converged-at-entry: both drivers run exactly one no-op sweep
+        for dr in (False, True):
+            st3, s3 = solve_sharded(meta, st, mesh, cfg, max_sweeps=500,
+                                    device_resident=dr)
+            assert s3 == 1, (dr, s3)
+            assert int(st3.flow_to_t) == want
+        print('OK sweeps', sweeps)
+    """)
+    assert "OK" in out
+
+
 def test_sharded_train_step_matches_single_device():
     out = _run("""
         import dataclasses, jax, numpy as np
