@@ -1,0 +1,235 @@
+"""Batched multi-instance solving benchmark: throughput and launch sharing.
+
+PR 3 made a *single* solve one kernel launch per sweep and one host sync
+per solve; this benchmark measures the instance axis on top — a fleet of
+problems packed into shape buckets (``graph.pack_instances``) and solved
+by ONE batched device program per bucket (``grid=(B, K)`` fused kernel,
+per-instance convergence flags).  Per batch and configuration it records:
+
+  * ``seq_s`` / ``batch_s``            — wall time of the sequential loop
+                                         (device-resident single solves)
+                                         vs the batched solve, post-warmup;
+  * ``inst_per_s_{seq,batch}``         — the throughput headline;
+  * ``seq_launches`` / ``batch_launches`` — compute-program dispatches,
+                                         summed over the loop vs global to
+                                         the batch;
+  * ``launch_reduction``               — seq/batch: >= B on the fused
+                                         pallas path for a uniform batch
+                                         (every instance rides the same
+                                         grid=(B,K) launch stream);
+  * ``launches_per_instance``          — batch_launches / B;
+  * ``retraces_second_solve``          — batched device-program traces
+                                         incurred by a second batch in the
+                                         same bucket: must be 0 (the
+                                         compile cache is keyed on bucket
+                                         shape, not instance content).
+
+Per-instance results are asserted bit-exact against the single-instance
+driver (flow, sweeps, engine iters) — every column is a pure performance
+knob.  Results go to ``BENCH_batch.json``; on this CPU-only container the
+Pallas kernel runs in interpret mode, so absolute times measure
+correctness-path overhead, not TPU speed (the JSON records platform +
+interpret mode).
+
+    PYTHONPATH=src python benchmarks/bench_batch.py [--quick]
+        [--smoke] [--out BENCH_batch.json]
+
+``--smoke`` runs a tiny mixed-shape batch through every configuration,
+asserts every flow against the Edmonds-Karp oracle, the >= B x launch
+reduction on the uniform fused-pallas batch, and the zero-recompile
+property — the CI guard for the batched plumbing.
+
+Also exposes the ``run(emit, quick)`` contract of benchmarks/run.py.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.common import emit_csv  # noqa: E402
+
+FUSED_CHUNK_ITERS = 8
+PRD_BIG_CHUNK = 1 << 20     # larger than any discharge: 1 launch per sweep
+
+
+def _configs():
+    import dataclasses
+
+    from repro.core import SweepConfig
+
+    fused = SweepConfig(method="ard", engine_backend="pallas",
+                        engine_chunk_iters=FUSED_CHUNK_ITERS)
+    yield "ard/pallas-fused", fused
+    yield "ard/xla", SweepConfig(method="ard")
+    yield "prd/pallas-1launch", dataclasses.replace(
+        fused, method="prd", engine_chunk_iters=PRD_BIG_CHUNK)
+
+
+def _batches(quick: bool):
+    """(label, problems, parts).  'uniform' = B copies of one instance
+    (identical trip structure -> the exact >= B x launch-reduction bar);
+    'mixed' = different sizes/partitions spanning multiple shape buckets
+    (the per-row bucket split is recorded as ``num_buckets``)."""
+    from repro.core import grid_partition
+    from repro.data.grids import random_sparse, synthetic_grid
+
+    g = 10 if quick else 16
+    uni_b = 4 if quick else 8
+    uniform = [synthetic_grid(g, g, connectivity=8, strength=150, seed=0)
+               for _ in range(uni_b)]
+    upart = [grid_partition((g, g), (2, 2))] * uni_b
+    yield f"uniform{uni_b}_grid{g}", uniform, upart
+
+    sizes = [10, 12, 10, 14] if quick else [16, 12, 16, 20]
+    mixed = [synthetic_grid(s, s, connectivity=8, strength=150, seed=i)
+             for i, s in enumerate(sizes)]
+    mpart = [grid_partition((s, s), (2, 2)) for s in sizes]
+    mixed.append(random_sparse(14, 28, seed=9))
+    mpart.append(None)
+    yield "mixed5_multibucket", mixed, mpart
+
+
+def _bench_batch(label, cfg, probs, parts):
+    import dataclasses
+
+    from repro.core import BatchedSolver, solve_mincut
+    from repro.core import batch as batch_mod
+
+    B = len(probs)
+    # sequential baseline: the strongest single-instance configuration
+    # (device-resident: 1 host sync per solve), check off on both sides
+    seq_cfg = dataclasses.replace(cfg, device_resident=True)
+    seq = lambda: [solve_mincut(p, part=pt, num_regions=4, config=seq_cfg,
+                                check=False)
+                   for p, pt in zip(probs, parts)]
+    seq()                                   # warm-up: trace + compile
+    t0 = time.perf_counter()
+    singles = seq()
+    seq_s = time.perf_counter() - t0
+
+    solver = BatchedSolver(cfg, num_regions=4, check=False)
+    solver.solve(probs, parts)              # warm-up: trace + compile
+    before = batch_mod.trace_count()
+    t0 = time.perf_counter()
+    batched = solver.solve(probs, parts)
+    batch_s = time.perf_counter() - t0
+    retraces = batch_mod.trace_count() - before
+
+    for i, (s, b) in enumerate(zip(singles, batched)):
+        assert b.flow_value == s.flow_value, (label, i)
+        assert b.stats.sweeps == s.stats.sweeps, (label, i)
+        assert b.stats.engine_iters == s.stats.engine_iters, (label, i)
+    seq_launches = sum(s.stats.engine_launches for s in singles)
+    batch_launches = sum(bs.engine_launches
+                         for bs in solver.last_batch_stats)
+    return dict(
+        batch=label,
+        config=f"{cfg.method}/{cfg.engine_backend}",
+        backend=cfg.engine_backend,
+        method=cfg.method,
+        chunk_iters=cfg.engine_chunk_iters,
+        num_instances=B,
+        num_buckets=len(solver.last_batch_stats),
+        seq_s=round(seq_s, 3),
+        batch_s=round(batch_s, 3),
+        inst_per_s_seq=round(B / seq_s, 2),
+        inst_per_s_batch=round(B / batch_s, 2),
+        seq_launches=seq_launches,
+        batch_launches=batch_launches,
+        launch_reduction=round(seq_launches / max(1, batch_launches), 2),
+        launches_per_instance=round(batch_launches / B, 2),
+        host_syncs_batch=sum(bs.host_syncs
+                             for bs in solver.last_batch_stats),
+        retraces_second_solve=retraces,
+        flows=[r.flow_value for r in batched],
+    )
+
+
+def collect(quick: bool = False) -> dict:
+    import jax
+
+    rows = []
+    for blabel, probs, parts in _batches(quick):
+        for clabel, cfg in _configs():
+            row = _bench_batch(blabel, cfg, probs, parts)
+            row["config"] = clabel
+            rows.append(row)
+            assert row["retraces_second_solve"] == 0, (clabel, blabel)
+            if cfg.engine_backend == "pallas" \
+                    and blabel.startswith("uniform"):
+                # identical instances ride one launch stream: the batch
+                # costs what ONE instance costs in dispatches
+                assert row["launch_reduction"] >= row["num_instances"], row
+    return dict(
+        bench="batch",
+        platform=jax.default_backend(),
+        jax_version=jax.__version__,
+        pallas_interpret=jax.default_backend() != "tpu",
+        fused_chunk_iters=FUSED_CHUNK_ITERS,
+        prd_big_chunk=PRD_BIG_CHUNK,
+        results=rows,
+    )
+
+
+def smoke() -> None:
+    """CI guard: tiny batches, every configuration, oracle flows, the
+    >= B x launch-reduction bar and the zero-recompile property."""
+    from repro.kernels.ref import maxflow_oracle
+
+    for blabel, probs, parts in _batches(quick=True):
+        oracle = [maxflow_oracle(p)[0] for p in probs]
+        for clabel, cfg in _configs():
+            row = _bench_batch(blabel, cfg, probs, parts)
+            assert row["flows"] == oracle, (clabel, blabel)
+            assert row["retraces_second_solve"] == 0, (clabel, blabel)
+            if cfg.engine_backend == "pallas" \
+                    and blabel.startswith("uniform"):
+                assert row["launch_reduction"] >= row["num_instances"], row
+            print(f"smoke ok: {blabel} x {clabel} flows={row['flows']} "
+                  f"launches {row['seq_launches']}->"
+                  f"{row['batch_launches']} "
+                  f"(x{row['launch_reduction']})")
+    print("smoke passed: oracle flows, bit-exact vs single driver, "
+          ">=Bx launch reduction on uniform fused-pallas batches, "
+          "zero recompilation on bucket re-solve")
+
+
+def run(emit=emit_csv, quick: bool = False) -> None:
+    data = collect(quick=quick)
+    for row in data["results"]:
+        emit(f"batch/{row['config']}/{row['batch']}",
+             row["batch_s"] * 1e6,
+             f"inst_per_s={row['inst_per_s_batch']};"
+             f"launch_reduction={row['launch_reduction']};"
+             f"launches_per_instance={row['launches_per_instance']};"
+             f"retraces={row['retraces_second_solve']}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-batch oracle + launch-reduction check (CI), "
+                         "no JSON output")
+    ap.add_argument("--out", default=str(Path(__file__).resolve().parents[1]
+                                         / "BENCH_batch.json"))
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+        return
+    data = collect(quick=args.quick)
+    Path(args.out).write_text(json.dumps(data, indent=2) + "\n")
+    print(f"wrote {args.out}")
+    for row in data["results"]:
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

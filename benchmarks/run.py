@@ -25,12 +25,14 @@ def main() -> None:
                     help="substring filter on benchmark module names")
     args, _ = ap.parse_known_args()
 
-    from benchmarks import (bench_competitions, bench_engine_backend,
-                            bench_lm, bench_sweep_driver, bench_synthetic)
+    from benchmarks import (bench_batch, bench_competitions,
+                            bench_engine_backend, bench_lm,
+                            bench_sweep_driver, bench_synthetic)
 
     mods = [("synthetic", bench_synthetic),
             ("engine_backend", bench_engine_backend),
             ("sweep_driver", bench_sweep_driver),
+            ("batch", bench_batch),
             ("competitions", bench_competitions),
             ("lm", bench_lm)]
     print("name,us_per_call,derived")

@@ -2,20 +2,26 @@
 
 Public surface:
   Problem, build, solve_mincut, SweepConfig — single-host solver
+  solve_mincut_batch, BatchedSolver,
+  pack_instances                            — shape-bucketed batched solver
   solve_sharded, make_sharded_sweep        — shard_map distributed solver
   region_reduction                          — Alg. 5 preprocessing
 """
 
-from repro.core.api import MincutResult, solve_mincut
-from repro.core.graph import (FlowState, GraphMeta, Layout, Problem, build,
-                              init_labels)
+from repro.core.api import (BatchedSolver, MincutResult, solve_mincut,
+                            solve_mincut_batch)
+from repro.core.graph import (BatchMeta, BatchState, FlowState, GraphMeta,
+                              Layout, PackedBatch, Problem, bucket_shape_for,
+                              build, init_labels, pack_instances)
 from repro.core.partition import bfs_partition, block_partition, grid_partition
 from repro.core.reduction import region_reduction
 from repro.core.sweep import SweepConfig, SweepStats, cut_value, extract_cut, solve
 
 __all__ = [
-    "FlowState", "GraphMeta", "Layout", "MincutResult", "Problem",
-    "SweepConfig", "SweepStats", "bfs_partition", "block_partition", "build",
-    "cut_value", "extract_cut", "grid_partition", "init_labels",
-    "region_reduction", "solve", "solve_mincut",
+    "BatchMeta", "BatchState", "BatchedSolver", "FlowState", "GraphMeta",
+    "Layout", "MincutResult", "PackedBatch", "Problem", "SweepConfig",
+    "SweepStats", "bfs_partition", "block_partition", "bucket_shape_for",
+    "build", "cut_value", "extract_cut", "grid_partition", "init_labels",
+    "pack_instances",
+    "region_reduction", "solve", "solve_mincut", "solve_mincut_batch",
 ]

@@ -123,10 +123,13 @@ def ard_discharge_one(cf, sink_cf, excess, ghost_d, *, nbr_local, rev_slot,
 
 
 def ard_discharge_batched(cf, sink_cf, excess, ghost_d, *, nbr_local,
-                          rev_slot, intra, emask, vmask, d_inf: int,
+                          rev_slot, intra, emask, vmask, d_inf,
                           stage_cap, max_iters: int | None = None,
                           backend: str = "xla",
-                          chunk_iters: int | None = None) -> DischargeResult:
+                          chunk_iters: int | None = None,
+                          linf=None,
+                          grid2d: tuple[int, int] | None = None
+                          ) -> DischargeResult:
     """ARD on all K regions of a parallel sweep, collectively.
 
     The batched counterpart of ``jax.vmap(ard_discharge_one)``: the stage
@@ -138,20 +141,28 @@ def ard_discharge_batched(cf, sink_cf, excess, ghost_d, *, nbr_local,
     sequences.  Per-region results (state, labels, out_push, engine
     iterations, stage counts) are bit-identical to the vmapped scalar path;
     ``engine_launches`` becomes the global dispatch count of the sweep.
+
+    ``d_inf``/``stage_cap`` may be scalars or per-region i32[K] vectors and
+    ``linf`` overrides the per-region engine/BFS ceiling (default: the
+    padded row count ``V + 2``) — a solve batch's regions carry their own
+    instance's ceilings, which keeps every region's iteration sequence
+    identical to the instance's standalone solve regardless of bucket
+    padding.  ``grid2d`` renders the fused pallas launch as ``grid=(B,Kr)``.
     """
     K, V, E = cf.shape
     cross = emask & ~intra
-    linf_local = V + 2
-    stage_vals = jax.vmap(
-        lambda g, c, e: _distinct_sorted_ghost_labels(g, c, e, d_inf))(
-        ghost_d, cross, emask)                               # [K, n_vals]
+    d_inf = jnp.broadcast_to(jnp.asarray(d_inf, _I32), (K,))
+    linf = jnp.broadcast_to(
+        jnp.asarray(V + 2 if linf is None else linf, _I32), (K,))
+    stage_cap = jnp.broadcast_to(jnp.asarray(stage_cap, _I32), (K,))
+    stage_vals = jax.vmap(_distinct_sorted_ghost_labels)(
+        ghost_d, cross, emask, d_inf)                        # [K, n_vals]
     n_vals = stage_vals.shape[1]
-    stage_cap = jnp.asarray(stage_cap, _I32)
 
     bfs_batched = jax.vmap(
-        lambda cf, s, nl, it, em, vm, tc: bfs_to_targets(
+        lambda cf, s, nl, it, em, vm, tc, li: bfs_to_targets(
             cf, s, nbr_local=nl, intra=it, emask=em, vmask=vm,
-            target_cross=tc, linf=linf_local))
+            target_cross=tc, linf=li))
 
     def stage_more(i):
         lvl = jnp.take_along_axis(
@@ -163,16 +174,16 @@ def ard_discharge_batched(cf, sink_cf, excess, ghost_d, *, nbr_local,
         i, cf, sink_cf, excess, out_push, sink_pushed, iters, launches = carry
         lvl, more = stage_more(i)                            # [K], [K]
         target_cross = cross & (ghost_d <= lvl[:, None, None]) \
-            & (ghost_d < d_inf)
+            & (ghost_d < d_inf[:, None, None])
         lab0 = bfs_batched(cf, sink_cf, nbr_local, intra, emask, vmask,
-                           target_cross)
+                           target_cross, linf)
         es = push_relabel_batched(
             cf, sink_cf, excess, lab0,
             nbr_local=nbr_local, rev_slot=rev_slot, intra=intra, emask=emask,
             vmask=vmask, cross_pushable=target_cross,
-            cross_lab=jnp.zeros_like(ghost_d), d_inf=linf_local,
+            cross_lab=jnp.zeros_like(ghost_d), d_inf=linf,
             sink_open=True, max_iters=max_iters, backend=backend,
-            chunk_iters=chunk_iters)
+            chunk_iters=chunk_iters, grid2d=grid2d)
         w3, w2 = more[:, None, None], more[:, None]
         return (i + more.astype(_I32),
                 jnp.where(w3, es.cf, cf),
@@ -194,9 +205,9 @@ def ard_discharge_batched(cf, sink_cf, excess, ghost_d, *, nbr_local,
      launches) = jax.lax.while_loop(stage_cond, stage_body, init)
 
     d_new = jax.vmap(
-        lambda cf, s, g, nl, it, em, vm: _region_relabel_one(
+        lambda cf, s, g, nl, it, em, vm, di: _region_relabel_one(
             cf, s, g, nbr_local=nl, intra=it, emask=em, vmask=vm,
-            d_inf=d_inf, hop_cost=0))(
-        cf, sink_cf, ghost_d, nbr_local, intra, emask, vmask)
+            d_inf=di, hop_cost=0))(
+        cf, sink_cf, ghost_d, nbr_local, intra, emask, vmask, d_inf)
     return DischargeResult(cf, sink_cf, excess, d_new, out_push,
                            sink_pushed, iters, i, launches)

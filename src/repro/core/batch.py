@@ -1,0 +1,290 @@
+"""Batched multi-instance solving: the instance axis as a first dimension.
+
+The paper solves one network at a time, but its target workloads (vision
+maxflow fleets, serving traffic) arrive as many similar-shaped problems.
+This module lifts the device-resident sweep driver of ``sweep.py`` over a
+leading instance axis B:
+
+* one batched parallel sweep discharges **every region of every instance**
+  through the grid-over-regions discharge operators — on the fused pallas
+  path a single ``grid=(B, K)`` kernel launch per engine chunk-trip
+  (``kernels.push_relabel.fused_engine_run_batched``);
+* the whole multi-sweep loop runs in one ``lax.while_loop`` with
+  **per-instance convergence flags**: an instance that has converged (or
+  exhausted its sweep budget) is frozen by per-instance selects and its
+  excess is zeroed on the way into the discharge, so its regions take the
+  engine's O(1) early exit — a converged instance costs what an idle
+  region costs today;
+* per-instance label ceilings (``BatchState.d_inf_*``, ``linf``) are
+  device arrays, so every instance runs exactly the iteration sequence of
+  its standalone solve regardless of bucket padding: flow, labels, sweep
+  counts and engine iteration counts are **bit-identical per instance** to
+  ``sweep.solve`` on the unpacked problem (asserted in
+  tests/test_batch.py).
+
+Compilation is keyed by ``(BatchMeta, SweepConfig)`` — both hashable
+statics of the jitted ``_run_batched_sweeps`` — so any batch landing in a
+previously seen shape bucket reuses the executable with zero retracing
+(``trace_count()`` exposes the retrace counter for benchmarks/tests).
+
+Batched solving is intentionally scoped to the serving configuration:
+parallel sweeps (Alg. 2) with the optional global-gap / partial-discharge
+heuristics; sequential sweeps and the boundary-relabel heuristic keep the
+single-instance driver.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ard import ard_discharge_batched
+from repro.core.graph import BatchMeta, BatchState, PackedBatch
+from repro.core.labels import GAP_HIST_CAP, gap_new_labels
+from repro.core.prd import prd_discharge_batched
+from repro.core.sweep import SweepConfig, sweep_bound
+
+_I32 = jnp.int32
+
+# bumped once per trace of the batched device program — the observable the
+# compile-cache accounting (BatchedSolver.cache_info, bench_batch --smoke)
+# asserts against: a second batch in a known bucket must not bump it.
+_TRACE_COUNT = 0
+
+
+def trace_count() -> int:
+    return _TRACE_COUNT
+
+
+@dataclass
+class BatchStats:
+    """Per-batch solve accounting (host side, after the final sync).
+
+    ``sweeps``/``engine_iters`` are per-instance i32[B] (bit-equal to the
+    standalone drivers); ``engine_launches`` and ``host_syncs`` are global
+    to the batch — the whole point of batching is that the batch shares
+    one launch/sync stream, so a per-instance split would be fiction.
+    """
+
+    sweeps: np.ndarray
+    engine_iters: np.ndarray
+    engine_launches: int = 0
+    host_syncs: int = 0
+
+
+def _ghost_labels(state: BatchState) -> jax.Array:
+    """i32[B,K,V,E] — per-instance gather of every arc destination's label."""
+    return jax.vmap(lambda d, r, l: d[r, l])(
+        state.d, state.nbr_region, state.nbr_local)
+
+
+def _intra(state: BatchState) -> jax.Array:
+    K = state.nbr_region.shape[1]
+    own = jnp.arange(K, dtype=state.nbr_region.dtype)[None, :, None, None]
+    return (state.nbr_region == own) & state.emask
+
+
+def num_active_batch(state: BatchState, d_inf: jax.Array) -> jax.Array:
+    """i32[B] — active-vertex count of every instance."""
+    act = (state.excess > 0) & (state.d < d_inf[:, None, None]) & state.vmask
+    return act.sum(axis=(1, 2)).astype(_I32)
+
+
+def _global_gap_batch(state: BatchState, d_inf: jax.Array,
+                      ard: bool) -> BatchState:
+    """Per-instance ``labels.global_gap`` with dynamic ceilings.
+
+    The histogram capacity must be static under vmap, so it is pinned at
+    ``GAP_HIST_CAP``; ``labels.gap_new_labels`` documents why that is
+    bit-equal to the single-instance heuristic's ``min(d_inf + 1, cap)``.
+    """
+    fn = partial(gap_new_labels, cap=GAP_HIST_CAP, ard=ard)
+    new_d = jax.vmap(fn)(state.d, state.vmask, state.is_boundary, d_inf)
+    return state.replace(d=new_d)
+
+
+def _apply_cross_flow_batch(state: BatchState, out_push: jax.Array,
+                            accept: jax.Array) -> BatchState:
+    """Per-instance form of ``sweep._apply_cross_flow``.
+
+    Gathers each cross arc's pushed flow through the bucket-dim flat
+    indices, zeroing padded table entries (their index-0 slots alias real
+    arcs), and scatters accepted/refunded flow instance-locally.
+    """
+    B = state.cf.shape[0]
+    delta = jnp.take_along_axis(out_push.reshape(B, -1),
+                                state.cross_src_arc, axis=1)
+    delta = jnp.where(state.cross_valid, delta, 0)
+    acc = jnp.where(accept, delta, 0)
+    rej = delta - acc
+
+    def one(flat, dst, src, acc, rej):
+        flat = flat.at[dst].add(acc, mode="drop")
+        return flat.at[src].add(rej, mode="drop")
+
+    cf = jax.vmap(one)(state.cf.reshape(B, -1), state.cross_dst_arc,
+                       state.cross_src_arc, acc, rej).reshape(state.cf.shape)
+    excess = jax.vmap(one)(
+        state.excess.reshape(B, -1), state.cross_dst_vtx,
+        state.cross_src_vtx, acc, rej).reshape(state.excess.shape)
+    return state.replace(cf=cf, excess=excess)
+
+
+def _parallel_sweep_batch(bmeta: BatchMeta, cfg: SweepConfig,
+                          state: BatchState, sweep_idx: jax.Array,
+                          run: jax.Array | None = None):
+    """One parallel sweep (Alg. 2) over every instance of the batch.
+
+    Identical math to ``sweep.parallel_sweep`` applied per instance: the
+    discharge goes through the flat [B*K] grid-over-regions operators with
+    per-region ceilings (``grid2d`` renders the fused pallas launch as the
+    ``grid=(B, K)`` program), fusion uses the bucket-dim cross tables, and
+    the gap heuristic runs per instance.  ``run`` (bool[B]) marks the
+    instances whose result the driver will keep — frozen instances get
+    their ARD stage schedule emptied (cap -2 admits not even the sink
+    stage) so they never add stage-loop trips to the shared launch stream.
+    Returns ``(state, engine_iters [B], engine_launches scalar)`` —
+    launches are global to the batch.
+    """
+    B, K = bmeta.num_instances, bmeta.num_regions
+    V, E = bmeta.region_size, bmeta.max_degree
+    ard = cfg.method == "ard"
+    d_inf = state.d_inf_ard if ard else state.d_inf_prd       # [B]
+    ghost = _ghost_labels(state)
+    intra = _intra(state)
+    f3 = lambda a: a.reshape(B * K, V, E)
+    f2 = lambda a: a.reshape(B * K, V)
+    rep = lambda a: jnp.repeat(a, K)                          # [B] -> [B*K]
+    kw = dict(nbr_local=f3(state.nbr_local), rev_slot=f3(state.rev_slot),
+              intra=f3(intra), emask=f3(state.emask), vmask=f2(state.vmask),
+              max_iters=cfg.engine_max_iters, backend=cfg.engine_backend,
+              chunk_iters=cfg.engine_chunk_iters, grid2d=(B, K))
+    if ard:
+        if cfg.partial_discharge:
+            stage_cap = jnp.broadcast_to(
+                jnp.maximum(sweep_idx - 1, -1).astype(_I32), (B,))
+        else:
+            stage_cap = d_inf
+        if run is not None:
+            stage_cap = jnp.where(run, stage_cap, -2)
+        res = ard_discharge_batched(
+            f3(state.cf), f2(state.sink_cf), f2(state.excess), f3(ghost),
+            d_inf=rep(d_inf), stage_cap=rep(stage_cap), linf=rep(state.linf),
+            **kw)
+    else:
+        res = prd_discharge_batched(
+            f3(state.cf), f2(state.sink_cf), f2(state.excess), f2(state.d),
+            f3(ghost), d_inf=rep(d_inf), **kw)
+    u3 = lambda a: a.reshape(B, K, V, E)
+    u2 = lambda a: a.reshape(B, K, V)
+    new = state.replace(
+        cf=u3(res.cf), sink_cf=u2(res.sink_cf), excess=u2(res.excess),
+        d=jnp.maximum(state.d, u2(res.d)),
+        flow_to_t=state.flow_to_t + res.sink_pushed.reshape(B, K).sum(1))
+    # ---- fusion (Alg. 2 lines 4-6), per instance ----
+    dflat = new.d.reshape(B, K * V)
+    du = jnp.take_along_axis(dflat, new.cross_src_vtx, axis=1)
+    dv = jnp.take_along_axis(dflat, new.cross_dst_vtx, axis=1)
+    accept = (dv <= du + 1) & new.cross_valid
+    new = _apply_cross_flow_batch(new, u3(res.out_push), accept)
+    if cfg.use_global_gap:
+        new = _global_gap_batch(new, d_inf, ard)
+    iters = res.engine_iters.reshape(B, K).sum(1)
+    return new, iters, res.engine_launches
+
+
+@partial(jax.jit, static_argnums=(0, 1))
+def _run_batched_sweeps(bmeta: BatchMeta, cfg: SweepConfig,
+                        state: BatchState, carry, limit: jax.Array):
+    """Advance every instance up to its per-instance sweep ``limit`` [B].
+
+    The batched mirror of ``sweep._run_device_sweeps``: one
+    ``lax.while_loop`` trip is one complete parallel sweep of every
+    still-running instance.  ``carry`` = (sweeps [B], engine_iters [B],
+    engine_launches, n_act [B]).  Frozen instances (converged or out of
+    budget) are excluded by per-instance selects — and their excess is
+    zeroed on the way into the discharge, so their regions cost the
+    engine's O(1) early exit inside the shared launch.
+    """
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1
+    ard = cfg.method == "ard"
+    d_inf = state.d_inf_ard if ard else state.d_inf_prd
+
+    def cond(c):
+        _state, sweeps, _it, _ln, n_act = c
+        return ((sweeps < limit) & (n_act > 0)).any()
+
+    def body(c):
+        st, sweeps, it, ln, n_act = c
+        run = (sweeps < limit) & (n_act > 0)                  # [B]
+        st_in = st.replace(
+            excess=jnp.where(run[:, None, None], st.excess, 0))
+        new, dit, dln = _parallel_sweep_batch(bmeta, cfg, st_in, sweeps, run)
+        w3 = run[:, None, None, None]
+        w2 = run[:, None, None]
+        st = st.replace(
+            cf=jnp.where(w3, new.cf, st.cf),
+            sink_cf=jnp.where(w2, new.sink_cf, st.sink_cf),
+            excess=jnp.where(w2, new.excess, st.excess),
+            d=jnp.where(w2, new.d, st.d),
+            flow_to_t=jnp.where(run, new.flow_to_t, st.flow_to_t))
+        n_act = num_active_batch(st, d_inf)
+        return (st, sweeps + run.astype(_I32),
+                it + jnp.where(run, dit, 0), ln + dln, n_act)
+
+    out = jax.lax.while_loop(cond, body, (state, *carry))
+    return out[0], out[1:]
+
+
+def solve_batch(packed: PackedBatch, cfg: SweepConfig | None = None):
+    """Solve every instance of a packed bucket; returns (BatchState, stats).
+
+    The batched mirror of ``sweep.solve`` in its device-resident form: the
+    host is re-entered once per ``cfg.host_sync_every`` sweeps (default:
+    once per solve).  Per-instance flow, labels, sweep counts and engine
+    iteration counts are bit-identical to solving each instance alone.
+    """
+    cfg = cfg or SweepConfig()
+    if not cfg.parallel:
+        raise ValueError("batched solving runs parallel sweeps (Alg. 2); "
+                         "use sweep.solve for sequential sweeps")
+    if cfg.use_boundary_relabel:
+        raise ValueError("boundary-relabel is not supported in batched "
+                         "solving; use the single-instance driver")
+    bmeta, state = packed.meta, packed.state
+    B = bmeta.num_instances
+    ard = cfg.method == "ard"
+
+    limit = np.zeros(B, np.int64)
+    for b, meta in enumerate(packed.metas):
+        bound = sweep_bound(meta, cfg)
+        limit[b] = bound if cfg.max_sweeps is None \
+            else min(cfg.max_sweeps, bound)
+    limit = np.minimum(limit, np.iinfo(np.int32).max).astype(np.int32)
+
+    d_inf = state.d_inf_ard if ard else state.d_inf_prd
+    zb = jnp.zeros((B,), _I32)
+    carry = (zb, zb, jnp.zeros((), _I32), num_active_batch(state, d_inf))
+    stats = BatchStats(sweeps=np.zeros(B, np.int64),
+                       engine_iters=np.zeros(B, np.int64))
+    done = 0
+    while True:
+        lim = limit if cfg.host_sync_every is None \
+            else np.minimum(limit, done + cfg.host_sync_every)
+        state, carry = _run_batched_sweeps(
+            bmeta, cfg, state, carry, jnp.asarray(lim, _I32))
+        sweeps, iters, launches, n_act = jax.device_get(carry)
+        stats.host_syncs += 1
+        done = int(sweeps.max(initial=0))
+        if not ((n_act > 0) & (sweeps < limit)).any():
+            break
+    stats.sweeps = np.asarray(sweeps, np.int64)
+    stats.engine_iters = np.asarray(iters, np.int64)
+    stats.engine_launches = int(launches)
+    return state, stats

@@ -63,6 +63,7 @@ launch-reduction accounting.
 
 from __future__ import annotations
 
+import math
 from typing import NamedTuple
 
 import jax
@@ -289,7 +290,9 @@ def push_relabel(
 def _push_relabel_fused_batched(cf, sink_cf, excess, lab, *, nbr_local,
                                 rev_slot, intra, emask, vmask, cross_pushable,
                                 cross_lab, d_inf, sink_open, max_iters,
-                                backend, chunk_iters, interpret) -> EngineState:
+                                backend, chunk_iters, interpret,
+                                grid2d: tuple[int, int] | None = None
+                                ) -> EngineState:
     """Fused chunked driver over ALL regions at once (grid-over-regions).
 
     One outer trip advances every still-running region by up to
@@ -303,16 +306,22 @@ def _push_relabel_fused_batched(cf, sink_cf, excess, lab, *, nbr_local,
     *global* dispatch count: 1 per trip on pallas (the kernel covers every
     region), one traced body per advanced region-iteration on xla —
     mirroring the scalar fused accounting summed over regions.
+
+    ``d_inf`` may be a scalar or a per-region i32[K] vector (a solve
+    batch's regions carry their instance's ceiling).  ``grid2d=(B, Kr)``
+    with ``K == B*Kr`` reshapes the pallas launch to the ``grid=(B, Kr)``
+    kernel form — same launch count, but the grid names the instance axis.
     """
     K, V, E = cf.shape
     chunk = int(chunk_iters)
     assert chunk >= 1
+    d_inf = jnp.broadcast_to(jnp.asarray(d_inf, _I32), (K,))
     pushable = (cross_pushable | intra) & emask
     zero_e = jnp.zeros((K, V, E), _I32)
     zero_k = jnp.zeros((K,), _I32)
 
     def region_active(excess, lab):
-        return ((excess > 0) & (lab < d_inf) & vmask).any(axis=1)   # [K]
+        return ((excess > 0) & (lab < d_inf[:, None]) & vmask).any(axis=1)
 
     if backend == "pallas":
         if interpret is None:
@@ -320,23 +329,26 @@ def _push_relabel_fused_batched(cf, sink_cf, excess, lab, *, nbr_local,
         intra_i = intra.astype(_I32)
         pushable_i = pushable.astype(_I32)
         vmask_i = vmask.astype(_I32)
+        lead = (K,) if grid2d is None else tuple(grid2d)
+        assert math.prod(lead) == K, (lead, K)
+        rs = lambda a: a.reshape(lead + a.shape[1:])
 
         def launch(lab, cf, sink_cf, excess, limit):
             out = _pr_kernel.fused_engine_run_batched(
-                lab, cf, sink_cf, excess, nbr_local, rev_slot, intra_i,
-                pushable_i, cross_lab, vmask_i, d_inf, limit,
+                rs(lab), rs(cf), rs(sink_cf), rs(excess), rs(nbr_local),
+                rs(rev_slot), rs(intra_i), rs(pushable_i), rs(cross_lab),
+                rs(vmask_i), rs(d_inf), rs(limit),
                 sink_open=sink_open, interpret=interpret)
-            cf, sink_cf, excess, lab, op, sp, rs, it = out
-            return cf, sink_cf, excess, lab, op, sp, rs, it
+            return tuple(o.reshape((K,) + o.shape[len(lead):]) for o in out)
     else:
         # the same pure fused iteration, vmapped over the region axis; a
         # per-region run mask freezes regions that are idle or out of
         # budget, exactly like vmap-of-while_loop batching does
         def one_region(cf, sink_cf, excess, lab, nbr, rev, it_m, pu_m, cl,
-                       vm):
+                       vm, di):
             step = _pr_kernel.make_fused_iteration(
                 nbr=nbr, rev_slot=rev, intra=it_m, pushable=pu_m,
-                cross_lab=cl, vmask=vm, d_inf=d_inf, sink_open=sink_open)
+                cross_lab=cl, vmask=vm, d_inf=di, sink_open=sink_open)
             return step(cf, sink_cf, excess, lab)
 
         batched_iteration = jax.vmap(one_region)
@@ -352,7 +364,7 @@ def _push_relabel_fused_batched(cf, sink_cf, excess, lab, *, nbr_local,
                 ncf, nsink, nexc, nlab, d_cross, d_sink, rinc = \
                     batched_iteration(cf, sink_cf, excess, lab, nbr_local,
                                       rev_slot, intra, pushable, cross_lab,
-                                      vmask)
+                                      vmask, d_inf)
                 w3, w2 = run[:, None, None], run[:, None]
                 cf = jnp.where(w3, ncf, cf)
                 sink_cf = jnp.where(w2, nsink, sink_cf)
@@ -413,6 +425,7 @@ def push_relabel_batched(
     interpret: bool | None = None,
     chunk_iters: int | None = None,
     vmem_budget_bytes: int | None = None,
+    grid2d: tuple[int, int] | None = None,
 ) -> EngineState:
     """Run push/relabel on all K regions of a sweep through one entry point.
 
@@ -425,6 +438,12 @@ def push_relabel_batched(
     count of this engine run.  Unfused configurations (``chunk_iters=None``)
     and Pallas regions over the VMEM budget fall back to ``jax.vmap`` of
     the scalar engine (per-region launch counts summed).
+
+    ``d_inf`` may be a scalar or per-region i32[K] (each region of a solve
+    batch keeps its own instance's ceiling).  ``grid2d=(B, Kr)`` renders
+    the fused pallas launch as a ``grid=(B, Kr)`` program over the flat
+    region axis ``K == B*Kr`` (the solve-batch form); results and launch
+    counts are unchanged.
     """
     K, V, E = cf.shape
     d_inf = jnp.asarray(d_inf, _I32)
@@ -432,20 +451,22 @@ def push_relabel_batched(
             and not _pr_kernel.fused_region_fits_vmem(V, E, vmem_budget_bytes):
         chunk_iters = None
     if chunk_iters is None:
-        fn = lambda cf, s, e, l, nl, rs, it, em, vm, cp, cl: push_relabel(
+        d_inf_k = jnp.broadcast_to(d_inf, (K,))
+        fn = lambda cf, s, e, l, nl, rs, it, em, vm, cp, cl, di: push_relabel(
             cf, s, e, l, nbr_local=nl, rev_slot=rs, intra=it, emask=em,
-            vmask=vm, cross_pushable=cp, cross_lab=cl, d_inf=d_inf,
+            vmask=vm, cross_pushable=cp, cross_lab=cl, d_inf=di,
             sink_open=sink_open, max_iters=max_iters, backend=backend,
             block_v=block_v, interpret=interpret)
         es = jax.vmap(fn)(cf, sink_cf, excess, lab, nbr_local, rev_slot,
-                          intra, emask, vmask, cross_pushable, cross_lab)
+                          intra, emask, vmask, cross_pushable, cross_lab,
+                          d_inf_k)
         return es._replace(launches=es.launches.sum())
     return _push_relabel_fused_batched(
         cf, sink_cf, excess, lab, nbr_local=nbr_local, rev_slot=rev_slot,
         intra=intra, emask=emask, vmask=vmask, cross_pushable=cross_pushable,
         cross_lab=cross_lab, d_inf=d_inf, sink_open=sink_open,
         max_iters=max_iters, backend=backend, chunk_iters=chunk_iters,
-        interpret=interpret)
+        interpret=interpret, grid2d=grid2d)
 
 
 def bfs_to_targets(

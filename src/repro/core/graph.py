@@ -288,6 +288,211 @@ def init_labels(meta: GraphMeta, state: FlowState) -> FlowState:
     return state.replace(d=jnp.zeros_like(state.d))
 
 
+# --------------------------------------------------------------------------
+# Multi-instance packing: stack independent problems into shape buckets.
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class BatchMeta:
+    """Static bucket-shape metadata of a packed instance batch.
+
+    Deliberately holds ONLY the padded bucket dimensions — everything that
+    varies between same-shaped batches (instance count, label ceilings,
+    sweep bounds) lives in ``BatchState`` device arrays or host-side in
+    ``PackedBatch``, so a compiled batched solve is keyed purely by
+    ``(bucket_shape, SweepConfig)`` and is reused verbatim for any batch
+    that lands in the same bucket.
+    """
+
+    num_instances: int        # B  (padded bucket batch size)
+    num_regions: int          # K  (padded)
+    region_size: int          # V  (padded)
+    max_degree: int           # E  (padded)
+    num_cross_arcs: int       # X  (padded)
+
+    @property
+    def bucket_shape(self) -> tuple[int, int, int, int, int]:
+        return (self.num_instances, self.num_regions, self.region_size,
+                self.max_degree, self.num_cross_arcs)
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class BatchState:
+    """Device-resident state of a packed solve batch (a JAX pytree).
+
+    The ``[B, ...]`` forms of the ``FlowState`` fields the batched sweep
+    driver needs, plus the per-instance dynamic metadata (label ceilings)
+    that a single solve bakes in statically from ``GraphMeta``.  Keeping
+    the ceilings as device arrays is what lets instances of *different
+    original sizes* share one bucket-shaped executable while running
+    exactly the iteration sequence of their standalone solves.
+    """
+
+    # --- static topology (never mutated) ---
+    nbr_region: jax.Array     # i32[B,K,V,E]
+    nbr_local: jax.Array      # i32[B,K,V,E]
+    rev_slot: jax.Array       # i32[B,K,V,E]
+    emask: jax.Array          # bool[B,K,V,E]
+    vmask: jax.Array          # bool[B,K,V]
+    is_boundary: jax.Array    # bool[B,K,V]
+    # flat cross-arc scatter/gather indices, recomputed for the bucket dims
+    cross_src_arc: jax.Array  # i32[B,X]  (r*V + l)*E + s of the source row
+    cross_dst_arc: jax.Array  # i32[B,X]
+    cross_src_vtx: jax.Array  # i32[B,X]  r*V + l
+    cross_dst_vtx: jax.Array  # i32[B,X]
+    cross_valid: jax.Array    # bool[B,X] padded-entry mask
+    # --- per-instance dynamic metadata ---
+    d_inf_ard: jax.Array      # i32[B]  |B_b|  (ARD ceiling of instance b)
+    d_inf_prd: jax.Array      # i32[B]  n_b    (PRD ceiling)
+    linf: jax.Array           # i32[B]  V_b+2  (ARD stage/BFS local ceiling,
+    #                                   the instance's ORIGINAL region size)
+    # --- mutable flow state ---
+    cf: jax.Array             # i32[B,K,V,E]
+    sink_cf: jax.Array        # i32[B,K,V]
+    excess: jax.Array         # i32[B,K,V]
+    d: jax.Array              # i32[B,K,V]
+    flow_to_t: jax.Array      # i32[B]
+
+    def replace(self, **kw) -> "BatchState":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass
+class PackedBatch:
+    """Host-side handle on one shape bucket of a packed batch.
+
+    ``metas``/``layouts``/``states0`` are the per-real-instance build
+    artifacts (unpadded), kept for unpacking results, the cut check and
+    the byte accounting; ``indices`` maps bucket slots back to positions
+    in the caller's problem list.  Slots beyond ``len(indices)`` are inert
+    padding instances (all-masked, zero excess) that converge at entry.
+    """
+
+    meta: BatchMeta
+    state: BatchState
+    metas: list
+    layouts: list
+    states0: list
+    indices: list
+
+    @property
+    def num_real(self) -> int:
+        return len(self.indices)
+
+
+def _round_pow2(n: int) -> int:
+    return 1 << max(0, int(n - 1).bit_length())
+
+
+def bucket_shape_for(meta: GraphMeta) -> tuple[int, int, int, int]:
+    """(K, V, E, X) bucket of an instance: each dim rounded up to a power
+    of two, so mixed problem sizes collapse onto a small set of compiled
+    executables."""
+    return (_round_pow2(meta.num_regions), _round_pow2(meta.region_size),
+            _round_pow2(meta.max_degree), _round_pow2(meta.num_cross_arcs))
+
+
+def _pad_to(a: np.ndarray, shape: tuple[int, ...]) -> np.ndarray:
+    return np.pad(a, [(0, s - d) for d, s in zip(a.shape, shape)])
+
+
+def pack_instances(problems, parts=None, *, num_regions: int = 4,
+                   pad_batch: bool = True) -> list[PackedBatch]:
+    """Stack independent problems into shape-bucketed solve batches.
+
+    Each problem is region-blocked with ``build`` (``parts[i]`` or the
+    node-number fallback partitioner), its (K, V, E, X) rounded up to the
+    power-of-two bucket, and instances sharing a bucket are stacked along
+    a new leading instance axis.  Padding is inert by construction:
+    masked-off vertices/arcs/cross entries and (with ``pad_batch``) the
+    batch axis rounded up with all-masked dummy instances, so any batch
+    landing in a bucket reuses the bucket's compiled solve.  Returns one
+    ``PackedBatch`` per bucket (ascending bucket shape).
+    """
+    from repro.core.partition import block_partition
+
+    builds = []
+    for i, p in enumerate(problems):
+        part = parts[i] if parts is not None and parts[i] is not None \
+            else block_partition(p.num_vertices, num_regions)
+        meta, state, layout = build(p, np.asarray(part))
+        builds.append((i, meta, state, layout))
+
+    groups: dict = {}
+    for item in builds:
+        groups.setdefault(bucket_shape_for(item[1]), []).append(item)
+
+    out = []
+    for (K, V, E, X), items in sorted(groups.items()):
+        B = _round_pow2(len(items)) if pad_batch else len(items)
+        shp3 = {"nbr_region": np.int32, "nbr_local": np.int32,
+                "rev_slot": np.int32, "emask": bool, "cf": np.int32}
+        shp2 = {"vmask": bool, "is_boundary": bool, "sink_cf": np.int32,
+                "excess": np.int32, "d": np.int32}
+        cols = {k: np.zeros((B, K, V, E), dt) for k, dt in shp3.items()}
+        cols.update({k: np.zeros((B, K, V), dt) for k, dt in shp2.items()})
+        cross = {k: np.zeros((B, X), np.int32) for k in
+                 ("cross_src_arc", "cross_dst_arc",
+                  "cross_src_vtx", "cross_dst_vtx")}
+        cross_valid = np.zeros((B, X), bool)
+        d_inf_ard = np.ones(B, np.int32)
+        d_inf_prd = np.ones(B, np.int32)
+        linf = np.full(B, 3, np.int32)
+        for b, (i, meta, state, layout) in enumerate(items):
+            for k in shp3:
+                cols[k][b] = _pad_to(np.asarray(getattr(state, k)), (K, V, E))
+            for k in shp2:
+                cols[k][b] = _pad_to(np.asarray(getattr(state, k)), (K, V))
+            # flat scatter indices must be recomputed for the BUCKET dims —
+            # the per-instance build derived them from its original (V, E)
+            src = np.asarray(state.cross_src, np.int64)
+            dst = np.asarray(state.cross_dst, np.int64)
+            valid = np.asarray(state.cross_valid)
+            n_x = len(valid)
+            arc = lambda t: ((t[:, 0] * V + t[:, 1]) * E + t[:, 2]) \
+                .astype(np.int32)
+            vtx = lambda t: (t[:, 0] * V + t[:, 1]).astype(np.int32)
+            cross["cross_src_arc"][b, :n_x] = arc(src)
+            cross["cross_dst_arc"][b, :n_x] = arc(dst)
+            cross["cross_src_vtx"][b, :n_x] = vtx(src)
+            cross["cross_dst_vtx"][b, :n_x] = vtx(dst)
+            cross_valid[b, :n_x] = valid
+            d_inf_ard[b] = meta.d_inf_ard
+            d_inf_prd[b] = meta.d_inf_prd
+            linf[b] = meta.region_size + 2
+        state = BatchState(
+            nbr_region=jnp.asarray(cols["nbr_region"]),
+            nbr_local=jnp.asarray(cols["nbr_local"]),
+            rev_slot=jnp.asarray(cols["rev_slot"]),
+            emask=jnp.asarray(cols["emask"]),
+            vmask=jnp.asarray(cols["vmask"]),
+            is_boundary=jnp.asarray(cols["is_boundary"]),
+            cross_src_arc=jnp.asarray(cross["cross_src_arc"]),
+            cross_dst_arc=jnp.asarray(cross["cross_dst_arc"]),
+            cross_src_vtx=jnp.asarray(cross["cross_src_vtx"]),
+            cross_dst_vtx=jnp.asarray(cross["cross_dst_vtx"]),
+            cross_valid=jnp.asarray(cross_valid),
+            d_inf_ard=jnp.asarray(d_inf_ard),
+            d_inf_prd=jnp.asarray(d_inf_prd),
+            linf=jnp.asarray(linf),
+            cf=jnp.asarray(cols["cf"]),
+            sink_cf=jnp.asarray(cols["sink_cf"]),
+            excess=jnp.asarray(cols["excess"]),
+            d=jnp.asarray(cols["d"]),
+            flow_to_t=jnp.zeros((B,), jnp.int32),
+        )
+        out.append(PackedBatch(
+            meta=BatchMeta(num_instances=B, num_regions=K, region_size=V,
+                           max_degree=E, num_cross_arcs=X),
+            state=state,
+            metas=[it[1] for it in items],
+            layouts=[it[3] for it in items],
+            states0=[it[2] for it in items],
+            indices=[it[0] for it in items]))
+    return out
+
+
 def intra_mask(state: FlowState) -> jax.Array:
     """bool[K,V,E] — arc stays within its own region."""
     K = state.nbr_region.shape[0]

@@ -80,6 +80,30 @@ def region_relabel(meta: GraphMeta, state: FlowState, *, ard: bool) -> FlowState
     return state.replace(d=jnp.maximum(state.d, new_d))
 
 
+def gap_new_labels(d, vmask, is_boundary, d_inf, *, cap: int, ard: bool):
+    """Shared body of the global gap heuristic (Sec. 5.1).
+
+    ``d_inf`` may be a python int (single-instance path) or a traced
+    scalar (the batched driver's per-instance ceiling); ``cap`` is the
+    static histogram capacity.  Any cap >= min(d_inf + 1, GAP_HIST_CAP)
+    yields the same gap label: member labels are < d_inf so larger
+    histograms only add empty bins beyond the scan range — which is what
+    lets ``core.batch`` pin cap at ``GAP_HIST_CAP`` under vmap while
+    staying bit-equal to this heuristic.
+    """
+    member = vmask & (d < d_inf)
+    if ard:
+        member = member & is_boundary
+    vals = jnp.where(member, d, 0).reshape(-1)
+    w = member.reshape(-1).astype(_I32)
+    hist = jnp.zeros((cap,), _I32).at[jnp.clip(vals, 0, cap - 1)].add(w)
+    idx = jnp.arange(cap)
+    max_lab = jnp.max(jnp.where(member, d, 0))
+    is_gap = (hist == 0) & (idx >= 1) & (idx <= jnp.minimum(max_lab, cap - 1))
+    g = jnp.min(jnp.where(is_gap, idx, INF_LABEL))
+    return jnp.where(vmask & (d > g) & (d < d_inf), d_inf, d).astype(_I32)
+
+
 def global_gap(meta: GraphMeta, state: FlowState, *, ard: bool) -> FlowState:
     """Global gap heuristic (Sec. 5.1).
 
@@ -90,19 +114,9 @@ def global_gap(meta: GraphMeta, state: FlowState, *, ard: bool) -> FlowState:
     """
     d_inf = meta.d_inf_ard if ard else meta.d_inf_prd
     cap = min(d_inf + 1, GAP_HIST_CAP)
-    member = state.vmask & (state.d < d_inf)
-    if ard:
-        member = member & state.is_boundary
-    vals = jnp.where(member, state.d, 0).reshape(-1)
-    w = member.reshape(-1).astype(_I32)
-    hist = jnp.zeros((cap,), _I32).at[jnp.clip(vals, 0, cap - 1)].add(w)
-    idx = jnp.arange(cap)
-    max_lab = jnp.max(jnp.where(member, state.d, 0))
-    is_gap = (hist == 0) & (idx >= 1) & (idx <= jnp.minimum(max_lab, cap - 1))
-    g = jnp.min(jnp.where(is_gap, idx, INF_LABEL))
-    new_d = jnp.where(
-        state.vmask & (state.d > g) & (state.d < d_inf), d_inf, state.d)
-    return state.replace(d=new_d.astype(_I32))
+    new_d = gap_new_labels(state.d, state.vmask, state.is_boundary, d_inf,
+                           cap=cap, ard=ard)
+    return state.replace(d=new_d)
 
 
 def region_gap_prd(meta: GraphMeta, state: FlowState, region: jax.Array) -> FlowState:

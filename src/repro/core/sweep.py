@@ -26,6 +26,12 @@ inside one ``lax.while_loop``, syncing to the host once per
 ``host_sync_every`` sweeps (default: once per solve).  Parallel sweeps
 discharge through the *batched* operators (grid-over-regions kernel: one
 launch covers all K regions) instead of vmapping the per-region path.
+
+``core.batch`` lifts the device-resident driver over a leading *instance*
+axis (``_run_batched_sweeps`` mirrors ``_run_device_sweeps`` with
+per-instance convergence flags); a packed batch of problems then shares
+one ``grid=(B, K)`` launch stream per sweep, with per-instance results
+bit-identical to this module's drivers.
 """
 
 from __future__ import annotations

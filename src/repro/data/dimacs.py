@@ -1,0 +1,154 @@
+"""DIMACS ``.max`` maxflow instance reader/writer.
+
+The standard interchange format of the maxflow benchmark families the
+paper evaluates (BVZ/KZ2/LB07 stereo, segmentation, the Univ. of Western
+Ontario archives):
+
+    c <comment>
+    p max <num_nodes> <num_arcs>
+    n <node_id> s          # source designator (1-based ids)
+    n <node_id> t          # sink designator
+    a <from> <to> <cap>    # directed arc
+
+Mapping to the solver's terminal-capacity ``Problem`` representation is
+the paper's ``Init``: source arcs (s, v) become per-vertex ``excess``
+(the source is eliminated by saturating them), arcs (v, t) become
+``sink_cap``, and the remaining directed arcs pair up into undirected
+edges with independent forward/backward capacities.  Arcs INTO the source
+and OUT of the sink carry no flow in any maxflow and are dropped (a note
+is standard practice — cf. the BK reader).  Parallel arcs accumulate.
+
+``write_dimacs`` emits the inverse, so ``read_dimacs(write_dimacs(p))``
+reproduces the problem up to edge order and zero-capacity edges
+(tests/test_dimacs.py asserts the canonical roundtrip and oracle-flow
+equality).
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.graph import Problem
+
+
+def read_dimacs(source) -> Problem:
+    """Parse a DIMACS ``.max`` file into a ``Problem``.
+
+    ``source`` — path, file-like object, or the text itself.
+    """
+    if hasattr(source, "read"):
+        text = source.read()
+    else:
+        s = str(source)
+        if "\n" in s:
+            text = s                  # raw DIMACS text (always multi-line)
+        else:
+            text = Path(s).read_text()   # a path; missing file raises
+    n_decl = None
+    src_id = sink_id = None
+    arcs: list[tuple[int, int, int]] = []
+    for ln, line in enumerate(text.splitlines(), 1):
+        tok = line.split()
+        if not tok or tok[0] == "c":
+            continue
+        if tok[0] == "p":
+            assert len(tok) == 4 and tok[1] == "max", \
+                f"line {ln}: expected 'p max <n> <m>', got {line!r}"
+            n_decl = int(tok[2])
+        elif tok[0] == "n":
+            assert len(tok) == 3, f"line {ln}: bad node designator {line!r}"
+            if tok[2] == "s":
+                src_id = int(tok[1])
+            elif tok[2] == "t":
+                sink_id = int(tok[1])
+            else:
+                raise ValueError(f"line {ln}: unknown designator {tok[2]!r}")
+        elif tok[0] == "a":
+            assert len(tok) == 4, f"line {ln}: bad arc {line!r}"
+            arcs.append((int(tok[1]), int(tok[2]), int(tok[3])))
+        else:
+            raise ValueError(f"line {ln}: unknown record {tok[0]!r}")
+    assert n_decl is not None, "missing 'p max' problem line"
+    assert src_id is not None and sink_id is not None, \
+        "missing source/sink designators"
+    assert src_id != sink_id
+
+    # map non-terminal 1-based file ids -> dense 0-based vertex ids
+    vid = {}
+    for u in range(1, n_decl + 1):
+        if u != src_id and u != sink_id:
+            vid[u] = len(vid)
+    n = len(vid)
+    excess = np.zeros(n, np.int64)
+    sink_cap = np.zeros(n, np.int64)
+    directed: dict[tuple[int, int], int] = {}
+    for u, v, c in arcs:
+        assert c >= 0, f"negative capacity on arc ({u}, {v})"
+        assert 1 <= u <= n_decl and 1 <= v <= n_decl, \
+            f"arc ({u}, {v}) outside the declared node range"
+        if u == v or v == src_id or u == sink_id:
+            continue          # self loops, arcs into s / out of t: no flow
+        if u == src_id and v == sink_id:
+            # a direct (s, t) arc adds a constant c to every maxflow; the
+            # terminal-capacity representation has no slot for it
+            raise NotImplementedError(
+                "direct source->sink arcs are not representable in the "
+                "excess/sink_cap form")
+        if u == src_id:
+            excess[vid[v]] += c
+        elif v == sink_id:
+            sink_cap[vid[u]] += c
+        else:
+            directed[(vid[u], vid[v])] = \
+                directed.get((vid[u], vid[v]), 0) + c
+
+    pairs = sorted({(min(u, v), max(u, v)) for u, v in directed})
+    edges = np.asarray(pairs, np.int64).reshape(-1, 2)
+    cap_fwd = np.asarray([directed.get((u, v), 0) for u, v in pairs],
+                         np.int64)
+    cap_bwd = np.asarray([directed.get((v, u), 0) for u, v in pairs],
+                         np.int64)
+    for name, a in (("arc", cap_fwd), ("arc", cap_bwd),
+                    ("source-arc", excess), ("sink-arc", sink_cap)):
+        assert a.size == 0 or a.max(initial=0) <= np.iinfo(np.int32).max, \
+            f"{name} capacity overflows int32"
+    return Problem(num_vertices=n, edges=edges,
+                   cap_fwd=cap_fwd.astype(np.int32),
+                   cap_bwd=cap_bwd.astype(np.int32),
+                   excess=excess.astype(np.int32),
+                   sink_cap=sink_cap.astype(np.int32))
+
+
+def write_dimacs(problem: Problem, dest=None) -> str:
+    """Serialize a ``Problem`` as DIMACS ``.max`` text.
+
+    Terminals are appended as nodes n+1 (source) and n+2 (sink);
+    zero-capacity arcs are omitted (they constrain nothing).  Writes to
+    ``dest`` (path or file-like) when given; always returns the text.
+    """
+    n = problem.num_vertices
+    s, t = n + 1, n + 2
+    lines = []
+    for v in range(n):
+        if problem.excess[v]:
+            lines.append(f"a {s} {v + 1} {int(problem.excess[v])}")
+        if problem.sink_cap[v]:
+            lines.append(f"a {v + 1} {t} {int(problem.sink_cap[v])}")
+    for (u, v), cf, cb in zip(problem.edges, problem.cap_fwd,
+                              problem.cap_bwd):
+        if cf:
+            lines.append(f"a {int(u) + 1} {int(v) + 1} {int(cf)}")
+        if cb:
+            lines.append(f"a {int(v) + 1} {int(u) + 1} {int(cb)}")
+    text = "\n".join(
+        ["c generated by repro.data.dimacs",
+         f"p max {n + 2} {len(lines)}", f"n {s} s", f"n {t} t"]
+        + lines) + "\n"
+    if dest is not None:
+        if hasattr(dest, "write"):
+            dest.write(text)
+        else:
+            Path(dest).write_text(text)
+    return text

@@ -34,7 +34,6 @@ def synthetic_grid(height: int, width: int, *, connectivity: int = 8,
     vid = np.arange(n).reshape(height, width)
     edges = []
     for dy, dx in connectivity_offsets(connectivity):
-        src = vid[: height - dy, : width - dx] if dy or dx else None
         dst = vid[dy:, dx:]
         edges.append(np.stack(
             [vid[: height - dy, : width - dx].reshape(-1),

@@ -51,6 +51,15 @@ regions of a parallel sweep — each program instance owns one region's
 ``[V, E]`` tile, takes its own iteration budget from a per-region limit
 vector, and early-exits independently, so idle regions cost O(1) inside
 the shared launch.  ``core.engine.push_relabel_batched`` drives it.
+
+With ``[B, K, V, E]`` inputs the same entry point lowers to a
+``grid=(B, K)`` program — one launch advancing *every region of every
+instance of a solve batch*.  ``d_inf`` and ``iter_limit`` broadcast
+against the ``(B, K)`` lead, so each instance keeps its own label ceiling
+(mixed problem sizes share one bucket-shaped executable) and the driver's
+per-instance convergence flags arrive as zeroed iteration budgets; a
+converged instance's regions all take the O(1) early exit, exactly like
+idle regions of a single solve.  ``core.batch`` drives this form.
 """
 
 from __future__ import annotations
@@ -295,27 +304,32 @@ def _fused_kernel_grid(lab_ref, cf_ref, sink_cf_ref, excess_ref, nbr_ref,
                        rev_ref, intra_ref, pushable_ref, cross_lab_ref,
                        vmask_ref, scal_ref, cf_out, sink_out, exc_out,
                        lab_out, push_out, sinkp_out, rls_out, it_out, *,
-                       sink_open: bool):
-    """Grid-over-regions program instance: region ``pl.program_id(0)``.
+                       sink_open: bool, nlead: int):
+    """Grid program instance: region ``pl.program_id(0)`` (``grid=(K,)``)
+    or region (``pl.program_id(0)``, ``pl.program_id(1)``) of a solve batch
+    (``grid=(B, K)``).
 
-    Every ref carries a leading block dimension of 1 (one region's tile);
-    ``scal_ref`` is this region's (d_inf, iter_limit) row.  The in-kernel
-    early exit makes an idle or already-converged region cost O(1), so one
-    launch can mix hot and idle regions freely.
+    Every ref carries ``nlead`` leading block dimensions of 1 (one region's
+    tile); ``scal_ref`` is this region's (d_inf, iter_limit) row.  The
+    in-kernel early exit makes an idle or already-converged region cost
+    O(1), so one launch can mix hot and idle regions — and converged and
+    running instances — freely.
     """
+    z = (0,) * nlead
+    scal = scal_ref[z]
     cf, sink_cf, excess, lab, out_push, sinkp, rls, it = _fused_region_loop(
-        lab_ref[0], cf_ref[0], sink_cf_ref[0], excess_ref[0],
-        nbr_ref[0], rev_ref[0], intra_ref[0], pushable_ref[0],
-        cross_lab_ref[0], vmask_ref[0], scal_ref[0, 0], scal_ref[0, 1],
+        lab_ref[z], cf_ref[z], sink_cf_ref[z], excess_ref[z],
+        nbr_ref[z], rev_ref[z], intra_ref[z], pushable_ref[z],
+        cross_lab_ref[z], vmask_ref[z], scal[0], scal[1],
         sink_open=sink_open)
-    cf_out[0] = cf
-    sink_out[0] = sink_cf
-    exc_out[0] = excess
-    lab_out[0] = lab
-    push_out[0] = out_push
-    sinkp_out[0] = sinkp
-    rls_out[0] = rls
-    it_out[0] = it
+    cf_out[z] = cf
+    sink_out[z] = sink_cf
+    exc_out[z] = excess
+    lab_out[z] = lab
+    push_out[z] = out_push
+    sinkp_out[z] = sinkp
+    rls_out[z] = rls
+    it_out[z] = it
 
 
 @functools.partial(jax.jit, static_argnames=("sink_open", "interpret"))
@@ -345,44 +359,55 @@ def fused_engine_run(lab, cf, sink_cf, excess, nbr, rev_slot, intra, pushable,
 def fused_engine_run_batched(lab, cf, sink_cf, excess, nbr, rev_slot, intra,
                              pushable, cross_lab, vmask, d_inf, iter_limit, *,
                              sink_open: bool = True, interpret: bool = True):
-    """All K regions of a parallel sweep in ONE ``grid=(K,)`` kernel launch.
+    """All regions of a sweep — or of a solve batch — in ONE kernel launch.
 
-    The grid-over-regions variant of ``fused_engine_run``: program instance
-    k owns region k's ``[V, E]`` tile and advances it up to
-    ``iter_limit[k]`` complete fused engine iterations with per-region
-    in-kernel early exit — an idle region costs O(1).  Inputs are the
-    batched ``[K, ...]`` forms of the single-region call; ``iter_limit`` is
-    a dynamic i32[K] so the driver can clamp each region's last chunk to
-    its ``max_iters`` budget independently.  Per-region results are
-    bit-identical to K separate ``fused_engine_run`` calls; what changes is
-    the dispatch count: one launch instead of K.
+    The grid-over-regions variant of ``fused_engine_run``: with
+    ``[K, V, E]`` inputs the program is ``grid=(K,)`` and instance k owns
+    region k's ``[V, E]`` tile; with ``[B, K, V, E]`` inputs it is
+    ``grid=(B, K)`` and instance (b, k) owns region k of solve-batch
+    instance b.  Each advances its tile up to ``iter_limit[...]`` complete
+    fused engine iterations with per-region in-kernel early exit — an idle
+    region (or every region of a converged instance) costs O(1).
+    ``d_inf`` and ``iter_limit`` broadcast against the lead shape, so each
+    batch instance keeps its own label ceiling and iteration budget (the
+    driver's per-instance convergence flag is a zeroed budget).
+    Per-region results are bit-identical to separate ``fused_engine_run``
+    calls; what changes is the dispatch count: one launch instead of K
+    (resp. B*K).
 
-    Returns ``(cf, sink_cf, excess, lab, out_push, sink_pushed [K],
-    relabel_sum [K], iters [K])``.
+    Returns ``(cf, sink_cf, excess, lab, out_push, sink_pushed [lead],
+    relabel_sum [lead], iters [lead])`` where ``lead`` = ``(K,)`` or
+    ``(B, K)``.
     """
-    K, V, E = cf.shape
+    lead = cf.shape[:-2]
+    V, E = cf.shape[-2:]
+    nlead = len(lead)
+    assert nlead in (1, 2), cf.shape
     scal = jnp.stack(
-        [jnp.broadcast_to(jnp.asarray(d_inf, jnp.int32), (K,)),
-         jnp.asarray(iter_limit, jnp.int32)], axis=1)          # [K, 2]
-    vec = lambda: pl.BlockSpec((1, V), lambda k: (k, 0))
-    mat = lambda w: pl.BlockSpec((1, V, w), lambda k: (k, 0, 0))
-    one = lambda: pl.BlockSpec((1,), lambda k: (k,))
+        [jnp.broadcast_to(jnp.asarray(d_inf, jnp.int32), lead),
+         jnp.broadcast_to(jnp.asarray(iter_limit, jnp.int32), lead)],
+        axis=-1)                                           # [*lead, 2]
+    blk = lambda *tail: pl.BlockSpec(
+        (1,) * nlead + tail, lambda *ids: ids + (0,) * len(tail))
+    vec = lambda: blk(V)
+    mat = lambda w: blk(V, w)
+    one = lambda: pl.BlockSpec((1,) * nlead, lambda *ids: ids)
     outs = pl.pallas_call(
-        functools.partial(_fused_kernel_grid, sink_open=sink_open),
-        grid=(K,),
+        functools.partial(_fused_kernel_grid, sink_open=sink_open,
+                          nlead=nlead),
+        grid=lead,
         in_specs=[vec(), mat(E), vec(), vec(), mat(E), mat(E), mat(E),
-                  mat(E), mat(E), vec(),
-                  pl.BlockSpec((1, 2), lambda k: (k, 0))],
+                  mat(E), mat(E), vec(), blk(2)],
         out_specs=[mat(E), vec(), vec(), vec(), mat(E), one(), one(), one()],
         out_shape=[
-            jax.ShapeDtypeStruct((K, V, E), jnp.int32),   # cf
-            jax.ShapeDtypeStruct((K, V), jnp.int32),      # sink_cf
-            jax.ShapeDtypeStruct((K, V), jnp.int32),      # excess
-            jax.ShapeDtypeStruct((K, V), jnp.int32),      # lab
-            jax.ShapeDtypeStruct((K, V, E), jnp.int32),   # out_push
-            jax.ShapeDtypeStruct((K,), jnp.int32),        # sink_pushed
-            jax.ShapeDtypeStruct((K,), jnp.int32),        # relabel_sum
-            jax.ShapeDtypeStruct((K,), jnp.int32),        # iters
+            jax.ShapeDtypeStruct(lead + (V, E), jnp.int32),   # cf
+            jax.ShapeDtypeStruct(lead + (V,), jnp.int32),     # sink_cf
+            jax.ShapeDtypeStruct(lead + (V,), jnp.int32),     # excess
+            jax.ShapeDtypeStruct(lead + (V,), jnp.int32),     # lab
+            jax.ShapeDtypeStruct(lead + (V, E), jnp.int32),   # out_push
+            jax.ShapeDtypeStruct(lead, jnp.int32),            # sink_pushed
+            jax.ShapeDtypeStruct(lead, jnp.int32),            # relabel_sum
+            jax.ShapeDtypeStruct(lead, jnp.int32),            # iters
         ],
         interpret=interpret,
     )(lab, cf, sink_cf, excess, nbr, rev_slot, intra, pushable, cross_lab,

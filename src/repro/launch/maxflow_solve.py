@@ -7,6 +7,18 @@ Solves a synthetic instance (paper Sec. 7.1) with the region-discharge
 solver and verifies flow value == independently-computed cut cost.  With
 --sharded the parallel sweep runs under shard_map across however many
 devices are available (regions per device = K / n_devices).
+
+Batched throughput mode solves a fleet of instances through the
+shape-bucketed batched driver (one grid=(B,K) device program per bucket):
+
+    PYTHONPATH=src python -m repro.launch.maxflow_solve \
+        --batch 64x64,64x64,48x48 --regions 2x2 \
+        --engine-backend pallas --engine-chunk-iters 8
+
+Each HxW entry becomes one synthetic instance (seeds --seed, --seed+1,
+...); per-instance results are bit-identical to single solves.  DIMACS
+``.max`` files (see repro.data.dimacs) can be mixed in by path:
+``--batch instance.max,64x64``.
 """
 
 from __future__ import annotations
@@ -47,6 +59,16 @@ def main():
     ap.add_argument("--host-sync-every", type=int, default=None, metavar="M",
                     help="device-resident escape hatch: return to the host "
                          "every M sweeps (default: only at convergence)")
+    ap.add_argument("--batch", default=None, metavar="SPEC[,SPEC...]",
+                    help="batched throughput mode: comma-separated instance "
+                         "specs (HxW synthetic grid or a DIMACS .max path) "
+                         "solved together through solve_mincut_batch — one "
+                         "shape-bucketed grid=(B,K) device program per "
+                         "bucket, compiled solve cached per bucket shape")
+    ap.add_argument("--no-check", action="store_true",
+                    help="skip the host-side cut-cost == flow assertion "
+                         "(an extra device fetch + O(n*E) host reduction "
+                         "per solve) — the serving-path setting")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -58,15 +80,57 @@ def main():
     from repro.data.grids import synthetic_grid
 
     ry, rx = (int(v) for v in args.regions.split("x"))
-    prob = synthetic_grid(args.height, args.width,
-                          connectivity=args.connectivity,
-                          strength=args.strength, seed=args.seed)
-    part = grid_partition((args.height, args.width), (ry, rx))
     cfg = SweepConfig(method=args.method, parallel=not args.sequential,
                       engine_backend=args.engine_backend,
                       engine_chunk_iters=args.engine_chunk_iters,
                       device_resident=args.device_resident,
                       host_sync_every=args.host_sync_every)
+
+    if args.batch:
+        import re
+        from pathlib import Path
+
+        from repro.data.dimacs import read_dimacs
+
+        probs, parts = [], []
+        for i, spec in enumerate(args.batch.split(",")):
+            grid = re.fullmatch(r"(\d+)x(\d+)", spec)
+            if grid and not Path(spec).exists():   # a file named HxW wins
+                h, w = int(grid[1]), int(grid[2])
+                probs.append(synthetic_grid(
+                    h, w, connectivity=args.connectivity,
+                    strength=args.strength, seed=args.seed + i))
+                parts.append(grid_partition((h, w), (ry, rx)))
+            elif Path(spec).is_file():
+                probs.append(read_dimacs(spec))
+                parts.append(None)     # node-number fallback partitioner
+            else:
+                ap.error(f"--batch spec {spec!r} is neither HxW nor an "
+                         "existing DIMACS file")
+        from repro.core import BatchedSolver
+
+        solver = BatchedSolver(cfg, num_regions=ry * rx,
+                               check=not args.no_check)
+        t0 = time.time()
+        results = solver.solve(probs, parts)
+        dt = time.time() - t0
+        for i, res in enumerate(results):
+            print(f"[maxflow]   instance {i}: flow={res.flow_value} "
+                  f"sweeps={res.stats.sweeps} "
+                  f"engine_iters={res.stats.engine_iters}")
+        launches = sum(bs.engine_launches for bs in solver.last_batch_stats)
+        syncs = sum(bs.host_syncs for bs in solver.last_batch_stats)
+        print(f"[maxflow] batch of {len(results)} ({args.method}, "
+              f"{args.engine_backend}, "
+              f"{len(solver.last_batch_stats)} bucket(s)): "
+              f"launches={launches} host_syncs={syncs} t={dt:.2f}s "
+              f"({len(results) / max(dt, 1e-9):.1f} instances/s)")
+        return
+
+    prob = synthetic_grid(args.height, args.width,
+                          connectivity=args.connectivity,
+                          strength=args.strength, seed=args.seed)
+    part = grid_partition((args.height, args.width), (ry, rx))
 
     t0 = time.time()
     if args.sharded:
@@ -89,7 +153,8 @@ def main():
               f"t={time.time()-t0:.2f}s")
         assert flow == cost
     else:
-        res = solve_mincut(prob, part=part, config=cfg)
+        res = solve_mincut(prob, part=part, config=cfg,
+                           check=not args.no_check)
         print(f"[maxflow] {args.method} parallel={cfg.parallel} "
               f"device_resident={cfg.device_resident}: "
               f"flow={res.flow_value} sweeps={res.stats.sweeps} "

@@ -1,0 +1,167 @@
+"""Batched multi-instance solving vs the single-instance driver.
+
+The acceptance bar of the batched refactor: a mixed-shape batch solved
+through ``solve_mincut_batch`` must be **bit-exact per instance** with
+``solve_mincut`` on the same problem — flow value, labels, sweep count
+and engine iteration count — across ard/prd × xla/pallas, while the
+batch shares one launch/sync stream (far fewer dispatches than the
+sequential loop) and a second batch landing in a known shape bucket
+reuses the compiled solve with zero retracing.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (BatchedSolver, SweepConfig, bucket_shape_for,
+                        pack_instances, solve_mincut, solve_mincut_batch)
+from repro.core import batch as batch_mod
+from repro.core import grid_partition
+from repro.data.grids import random_sparse, synthetic_grid
+from repro.kernels.ref import maxflow_oracle
+
+
+def _mixed_batch():
+    """Mixed shapes and partitioners: two buckets, one with padded K/V."""
+    probs = [synthetic_grid(8, 8, connectivity=8, strength=150, seed=0),
+             synthetic_grid(8, 8, connectivity=8, strength=150, seed=1),
+             random_sparse(14, 28, seed=2),
+             synthetic_grid(10, 10, connectivity=8, strength=120, seed=3)]
+    parts = [grid_partition((8, 8), (2, 2)), grid_partition((8, 8), (2, 2)),
+             None, grid_partition((10, 10), (2, 2))]
+    return probs, parts
+
+
+CONFIGS = [
+    SweepConfig(method="ard"),
+    SweepConfig(method="prd"),
+    SweepConfig(method="ard", engine_backend="pallas", engine_chunk_iters=8),
+    SweepConfig(method="prd", engine_backend="pallas", engine_chunk_iters=8),
+]
+CONFIG_IDS = ["ard-xla", "prd-xla", "ard-pallas-fused", "prd-pallas-fused"]
+
+
+@pytest.mark.parametrize("cfg", CONFIGS, ids=CONFIG_IDS)
+def test_batch_bitexact_vs_single(cfg):
+    probs, parts = _mixed_batch()
+    singles = [solve_mincut(p, part=pt, num_regions=4, config=cfg)
+               for p, pt in zip(probs, parts)]
+    solver = BatchedSolver(cfg, num_regions=4)
+    batched = solver.solve(probs, parts)
+    for i, (s, b) in enumerate(zip(singles, batched)):
+        want, _ = maxflow_oracle(probs[i])
+        assert b.flow_value == s.flow_value == want, i
+        np.testing.assert_array_equal(np.asarray(s.state.d),
+                                      np.asarray(b.state.d), err_msg=str(i))
+        np.testing.assert_array_equal(np.asarray(s.state.cf),
+                                      np.asarray(b.state.cf), err_msg=str(i))
+        np.testing.assert_array_equal(s.source_side, b.source_side)
+        assert b.stats.sweeps == s.stats.sweeps, i
+        assert b.stats.engine_iters == s.stats.engine_iters, i
+    # the batch shares one launch stream: on the fused pallas path (real
+    # kernel dispatches) strictly fewer than the sequential loop; on xla
+    # "launches" counts traced compute bodies, which bit-exactness pins to
+    # exactly the sequential total
+    batch_launches = sum(bs.engine_launches
+                         for bs in solver.last_batch_stats)
+    seq_launches = sum(s.stats.engine_launches for s in singles)
+    if cfg.engine_backend == "pallas" and cfg.engine_chunk_iters:
+        assert batch_launches < seq_launches
+    else:
+        assert batch_launches == seq_launches
+
+
+def test_batch_heuristic_variants_match_single():
+    """partial-discharge / gap-off / engine caps flow through the batched
+    driver with per-instance bit-exactness preserved."""
+    probs, parts = _mixed_batch()
+    for cfg in [SweepConfig(method="ard", partial_discharge=True),
+                SweepConfig(method="ard", use_global_gap=False),
+                SweepConfig(method="prd", engine_max_iters=7)]:
+        singles = [solve_mincut(p, part=pt, num_regions=4, config=cfg)
+                   for p, pt in zip(probs, parts)]
+        batched = solve_mincut_batch(probs, parts, num_regions=4, config=cfg)
+        for i, (s, b) in enumerate(zip(singles, batched)):
+            assert b.flow_value == s.flow_value, (cfg, i)
+            np.testing.assert_array_equal(np.asarray(s.state.d),
+                                          np.asarray(b.state.d))
+            assert b.stats.sweeps == s.stats.sweeps, (cfg, i)
+            assert b.stats.engine_iters == s.stats.engine_iters, (cfg, i)
+
+
+def test_batch_max_sweeps_cap_and_sync_hatch():
+    """A mid-solve sweep cap freezes each instance at its own budget, and
+    the host_sync_every hatch syncs per m sweeps without changing state."""
+    probs, parts = _mixed_batch()
+    base = SweepConfig(method="prd")
+    full = [solve_mincut(p, part=pt, num_regions=4, config=base)
+            for p, pt in zip(probs, parts)]
+    cap = max(1, min(r.stats.sweeps for r in full) - 1)
+    cfg = dataclasses.replace(base, max_sweeps=cap)
+    singles = [solve_mincut(p, part=pt, num_regions=4, config=cfg,
+                            check=False)
+               for p, pt in zip(probs, parts)]
+    for hse in (None, 2):
+        cfg2 = dataclasses.replace(cfg, host_sync_every=hse)
+        batched = solve_mincut_batch(probs, parts, num_regions=4,
+                                     config=cfg2, check=False)
+        for s, b in zip(singles, batched):
+            assert b.stats.sweeps == s.stats.sweeps <= cap
+            assert b.flow_value == s.flow_value
+            np.testing.assert_array_equal(np.asarray(s.state.d),
+                                          np.asarray(b.state.d))
+
+
+def test_pack_instances_buckets_and_padding():
+    probs, parts = _mixed_batch()
+    packs = pack_instances(probs, parts, num_regions=4)
+    assert sum(p.num_real for p in packs) == len(probs)
+    assert sorted(i for p in packs for i in p.indices) == [0, 1, 2, 3]
+    for p in packs:
+        B, K, V, E, X = p.meta.bucket_shape
+        # bucket dims are powers of two and cover every member instance
+        for d in (B, K, V, E, X):
+            assert d & (d - 1) == 0
+        assert p.state.cf.shape == (B, K, V, E)
+        for m in p.metas:
+            assert bucket_shape_for(m) == (K, V, E, X)
+            assert m.num_regions <= K and m.region_size <= V
+        # padding slots (instances beyond num_real) are inert
+        pad = np.asarray(p.state.vmask[p.num_real:])
+        assert not pad.any()
+        assert not np.asarray(p.state.excess[p.num_real:]).any()
+
+
+def test_batched_solver_compile_cache():
+    """A second batch landing in a known bucket shape must not retrace the
+    batched device program, even with a different real instance count."""
+    cfg = SweepConfig(method="ard")
+    solver = BatchedSolver(cfg, num_regions=4)
+    first = [synthetic_grid(8, 8, seed=s) for s in range(3)]
+    r1 = solver.solve(first)
+    assert solver.cache_info().misses >= 1
+    before = batch_mod.trace_count()
+    second = [synthetic_grid(8, 8, seed=s) for s in (11, 12, 13, 14)]
+    r2 = solver.solve(second)
+    assert batch_mod.trace_count() == before, "bucket re-solve retraced"
+    assert solver.cache_info().hits >= 1
+    for p, r in zip(first + second, r1 + r2):
+        assert r.flow_value == maxflow_oracle(p)[0]
+
+
+def test_batched_solver_rejects_unsupported_configs():
+    with pytest.raises(ValueError):
+        BatchedSolver(SweepConfig(parallel=False))
+    with pytest.raises(ValueError):
+        BatchedSolver(SweepConfig(use_boundary_relabel=True))
+
+
+def test_solve_mincut_check_flag():
+    """check=False must skip the cut==flow assertion without changing the
+    result (the serving-path knob)."""
+    p = synthetic_grid(8, 8, seed=4)
+    a = solve_mincut(p, num_regions=4)
+    b = solve_mincut(p, num_regions=4, check=False)
+    assert a.flow_value == b.flow_value == maxflow_oracle(p)[0]
+    np.testing.assert_array_equal(a.source_side, b.source_side)

@@ -1,0 +1,79 @@
+"""DIMACS ``.max`` reader/writer roundtrip and solver integration."""
+
+import numpy as np
+import pytest
+
+from repro.core import SweepConfig, solve_mincut
+from repro.data.dimacs import read_dimacs, write_dimacs
+from repro.data.grids import random_sparse, synthetic_grid
+from repro.kernels.ref import maxflow_oracle
+
+
+def _canonical_edges(p):
+    """Undirected edge -> (cap_lo_to_hi, cap_hi_to_lo), zero edges dropped."""
+    d = {}
+    for (u, v), cf, cb in zip(p.edges, p.cap_fwd, p.cap_bwd):
+        u, v, cf, cb = int(u), int(v), int(cf), int(cb)
+        if u > v:
+            u, v, cf, cb = v, u, cb, cf
+        if cf or cb:
+            a, b = d.get((u, v), (0, 0))
+            d[(u, v)] = (a + cf, b + cb)
+    return d
+
+
+@pytest.mark.parametrize("p", [
+    random_sparse(14, 28, seed=3),
+    random_sparse(9, 14, seed=5),
+    synthetic_grid(6, 6, connectivity=8, strength=120, seed=1),
+], ids=["sparse14", "sparse9", "grid6"])
+def test_write_read_roundtrip(p, tmp_path):
+    path = tmp_path / "instance.max"
+    write_dimacs(p, path)
+    q = read_dimacs(path)
+    assert q.num_vertices == p.num_vertices
+    assert _canonical_edges(q) == _canonical_edges(p)
+    np.testing.assert_array_equal(q.excess, p.excess)
+    np.testing.assert_array_equal(q.sink_cap, p.sink_cap)
+    assert maxflow_oracle(q)[0] == maxflow_oracle(p)[0]
+
+
+def test_read_handles_text_comments_and_merges():
+    text = """c tiny hand-written instance
+p max 5 7
+n 4 s
+n 5 t
+a 4 1 10
+a 4 1 5
+a 1 2 7
+a 2 1 3
+a 2 5 9
+a 3 5 2
+a 1 3 4
+"""
+    p = read_dimacs(text)
+    assert p.num_vertices == 3              # nodes 1..3 (4=s, 5=t)
+    np.testing.assert_array_equal(p.excess, [15, 0, 0])   # parallel s-arcs sum
+    np.testing.assert_array_equal(p.sink_cap, [0, 9, 2])
+    assert _canonical_edges(p) == {(0, 1): (7, 3), (0, 2): (4, 0)}
+    # maxflow: s->1 (15) ; 1->2 (7) -> t (9-capped by 7), 1->3 (4) -> t (2)
+    assert maxflow_oracle(p)[0] == 9
+
+
+def test_read_errors_are_loud(tmp_path):
+    # a missing path must raise FileNotFoundError, not parse as text
+    with pytest.raises(FileNotFoundError):
+        read_dimacs(tmp_path / "no_such_file.max")
+    # a direct (s, t) arc has no slot in the excess/sink_cap form
+    with pytest.raises(NotImplementedError):
+        read_dimacs("c x\np max 3 1\nn 2 s\nn 3 t\na 2 3 5\n")
+
+
+def test_dimacs_instance_solves_end_to_end(tmp_path):
+    p = random_sparse(16, 30, seed=11)
+    path = tmp_path / "solve.max"
+    write_dimacs(p, path)
+    q = read_dimacs(path)
+    want, _ = maxflow_oracle(q)
+    res = solve_mincut(q, num_regions=3, config=SweepConfig(method="ard"))
+    assert res.flow_value == want

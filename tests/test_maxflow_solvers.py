@@ -64,6 +64,22 @@ def test_ard_fewer_sweeps_than_prd():
     assert ard.stats.sweeps <= prd.stats.sweeps
 
 
+@pytest.mark.parametrize("method", ["ard", "prd"])
+def test_bfs_partition_irregular_end_to_end(method):
+    """An irregular (non-grid) instance solved through a BFS-grown
+    partition — exercises partition.bfs_partition in a full solve, which
+    the grid/block partition tests never reach."""
+    from repro.core import bfs_partition
+
+    p = random_sparse(24, 60, seed=7)
+    want, _ = maxflow_oracle(p)
+    part = bfs_partition(p.num_vertices, p.edges, 3, seed=1)
+    assert part.min() >= 0 and part.max() <= 2 and len(part) == 24
+    res = solve_mincut(p, part=part, config=SweepConfig(method=method))
+    assert res.flow_value == want
+    assert res.stats.sweeps <= sweep_bound(res.meta, SweepConfig(method=method))
+
+
 def test_segmentation_instance():
     p = segmentation_grid(20, 20, seed=0)
     want, _ = maxflow_oracle(p)
