@@ -1,0 +1,240 @@
+"""Warm-start re-solve benchmark: cold solve vs incremental warm re-solve.
+
+The serving workload of the session front-end (PR 5): prepare a problem
+once, then repeatedly perturb a p=1% fraction of its edge capacities and
+re-solve through ``handle.update`` + warm ``handle.solve()``.  Per
+instance and configuration it records:
+
+  * ``cold_sweeps`` / ``cold_launches`` / ``cold_s``   — a from-scratch
+    solve of the perturbed problem (the pre-session serving cost);
+  * ``warm_sweeps`` / ``warm_launches`` / ``warm_s``   — the warm re-solve
+    from the previous optimum (Kohli-Torr reparameterization + exact
+    global relabel + the same sweep drivers);
+  * ``sweep_reduction`` / ``launch_reduction``         — cold / warm;
+  * ``flow_equal``                                     — warm flow ==
+    cold flow, asserted (bit-exact ints) before any column is emitted;
+  * ``retraces_second_cycle``                          — session traces
+    incurred by a second same-sized update+solve cycle: must be 0 (the
+    update program is bucketed by padded edit size, the sweep programs by
+    problem shape).
+
+Results go to ``BENCH_warmstart.json``; on this CPU-only container the
+Pallas kernel runs in interpret mode, so absolute times measure
+correctness-path overhead, not TPU speed (the JSON records platform +
+interpret mode).
+
+    PYTHONPATH=src python benchmarks/bench_warmstart.py [--quick]
+        [--smoke] [--out BENCH_warmstart.json]
+
+``--smoke`` runs a tiny instance through every configuration, asserts the
+warm flow against the cold solve AND the Edmonds-Karp oracle, warm sweeps
+<= cold sweeps, and the zero-retrace steady state — the CI guard for the
+warm-start plumbing.
+
+Also exposes the ``run(emit, quick)`` contract of benchmarks/run.py.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import numpy as np
+
+from benchmarks.common import emit_csv  # noqa: E402
+
+PERTURB = 0.01          # the acceptance perturbation: 1% of the edges
+
+
+def _configs(big: bool):
+    """(label, SolverOptions).  The 64^2 headline row runs the default
+    engine; smaller rows add the device-resident and fused-pallas
+    (interpret off-TPU) variants."""
+    from repro.core import SolverOptions
+
+    yield "ard/xla", SolverOptions()
+    if not big:
+        yield "ard/xla-dr", SolverOptions(device_resident=True)
+        yield "ard/pallas-fused-dr", SolverOptions(
+            engine_backend="pallas", engine_chunk_iters=8,
+            device_resident=True)
+        yield "prd/xla", SolverOptions(method="prd")
+
+
+def _instances(quick: bool):
+    """(label, problem, part, regions, big).  The interactive-segmentation
+    seeds instance (sparse scribble terminals) is the headline: all flow
+    crosses region boundaries, so cold solves genuinely need sweeps."""
+    from repro.core import grid_partition
+    from repro.data.grids import segmentation_seeds_grid, synthetic_grid
+
+    g = 24 if quick else 32
+    yield (f"seg{g}_seeds", segmentation_seeds_grid(g, g, seed=0),
+           grid_partition((g, g), (4, 4)), 16, False)
+    yield ("syn16", synthetic_grid(16, 16, connectivity=8, strength=150,
+                                   seed=0),
+           grid_partition((16, 16), (2, 2)), 4, False)
+    if not quick:
+        yield ("seg64_seeds", segmentation_seeds_grid(64, 64, seed=0),
+               grid_partition((64, 64), (4, 4)), 16, True)
+
+
+def _perturb_kwargs(problem, rng):
+    m = len(problem.edges)
+    k = max(1, int(round(PERTURB * m)))
+    idx = rng.choice(m, size=k, replace=False)
+    hi = int(max(problem.cap_fwd.max(), problem.cap_bwd.max())) * 2 + 1
+    return dict(arcs=idx,
+                cap_fwd=rng.randint(0, hi, size=k).astype(np.int32),
+                cap_bwd=rng.randint(0, hi, size=k).astype(np.int32))
+
+
+def _bench(label, opts, prob, part, regions):
+    import dataclasses
+
+    from repro.core import Solver, solve_mincut
+
+    opts = dataclasses.replace(opts, num_regions=regions, check=False)
+    solver = Solver(opts)
+    handle = solver.prepare(prob, part)
+    handle.solve()                           # initial optimum (+ warm-up)
+
+    rng = np.random.RandomState(0)
+    handle.update(**_perturb_kwargs(handle.problem, rng))
+    t0 = time.perf_counter()
+    warm = handle.solve()
+    warm_s = time.perf_counter() - t0
+
+    cfg = opts.sweep_config()
+    solve_mincut(prob, part=part, config=cfg, check=False)   # warm-up jit
+    t0 = time.perf_counter()
+    cold = solve_mincut(handle.problem, part=part, config=cfg, check=False)
+    cold_s = time.perf_counter() - t0
+    assert warm.flow_value == cold.flow_value, (label, warm.flow_value,
+                                                cold.flow_value)
+
+    # steady state: a second same-sized cycle must retrace nothing
+    traces = solver.cache_info().traces
+    handle.update(**_perturb_kwargs(handle.problem, rng))
+    warm2 = handle.solve()
+    retraces = solver.cache_info().traces - traces
+    cold2 = solve_mincut(handle.problem, part=part, config=cfg, check=False)
+    assert warm2.flow_value == cold2.flow_value, label
+
+    return dict(
+        config=label,
+        method=opts.method,
+        backend=opts.engine_backend,
+        device_resident=opts.device_resident,
+        perturb=PERTURB,
+        flow=warm.flow_value,
+        flow_equal=True,
+        cold_sweeps=cold.stats.sweeps,
+        warm_sweeps=warm.stats.sweeps,
+        sweep_reduction=round(cold.stats.sweeps / max(1, warm.stats.sweeps),
+                              2),
+        cold_launches=cold.stats.engine_launches,
+        warm_launches=warm.stats.engine_launches,
+        launch_reduction=round(cold.stats.engine_launches
+                               / max(1, warm.stats.engine_launches), 2),
+        cold_s=round(cold_s, 3),
+        warm_s=round(warm_s, 3),
+        speedup=round(cold_s / max(1e-9, warm_s), 2),
+        retraces_second_cycle=retraces,
+    )
+
+
+def collect(quick: bool = False) -> dict:
+    import jax
+
+    rows = []
+    for ilabel, prob, part, regions, big in _instances(quick):
+        for clabel, opts in _configs(big):
+            row = _bench(clabel, opts, prob, part, regions)
+            row["instance"] = ilabel
+            rows.append(row)
+            assert row["retraces_second_cycle"] == 0, (ilabel, clabel)
+    return dict(
+        bench="warmstart",
+        platform=jax.default_backend(),
+        jax_version=jax.__version__,
+        pallas_interpret=jax.default_backend() != "tpu",
+        perturb=PERTURB,
+        results=rows,
+    )
+
+
+def smoke() -> None:
+    """CI guard: tiny instances, every configuration, warm == cold ==
+    oracle flows, warm sweeps <= cold sweeps, zero retraces."""
+    import dataclasses
+
+    from repro.core import Solver, grid_partition, solve_mincut
+    from repro.data.grids import segmentation_seeds_grid
+    from repro.kernels.ref import maxflow_oracle
+
+    g = 16
+    prob = segmentation_seeds_grid(g, g, seed=0)
+    part = grid_partition((g, g), (2, 2))
+    for clabel, opts in _configs(big=False):
+        opts = dataclasses.replace(opts, num_regions=4, check=True)
+        solver = Solver(opts)
+        handle = solver.prepare(prob, part)
+        handle.solve()
+        rng = np.random.RandomState(1)
+        handle.update(**_perturb_kwargs(handle.problem, rng))
+        warm = handle.solve()
+        cold = solve_mincut(handle.problem, part=part,
+                            config=opts.sweep_config())
+        want, _ = maxflow_oracle(handle.problem)
+        assert warm.flow_value == cold.flow_value == want, clabel
+        assert warm.stats.sweeps <= cold.stats.sweeps, clabel
+        traces = solver.cache_info().traces
+        handle.update(**_perturb_kwargs(handle.problem, rng))
+        handle.solve()
+        assert solver.cache_info().traces == traces, clabel
+        print(f"smoke ok: {clabel} flow={warm.flow_value} "
+              f"warm_sweeps={warm.stats.sweeps} "
+              f"cold_sweeps={cold.stats.sweeps} retraces=0")
+    print("smoke passed: warm == cold == oracle flows, warm <= cold "
+          "sweeps, zero retraces on the second update+solve cycle")
+
+
+def run(emit=emit_csv, quick: bool = False) -> None:
+    data = collect(quick=quick)
+    for row in data["results"]:
+        emit(f"warmstart/{row['config']}/{row['instance']}",
+             row["warm_s"] * 1e6,
+             f"sweep_reduction={row['sweep_reduction']};"
+             f"launch_reduction={row['launch_reduction']};"
+             f"speedup={row['speedup']};"
+             f"retraces={row['retraces_second_cycle']}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-instance warm-vs-cold oracle check (CI), "
+                         "no JSON output")
+    ap.add_argument("--out", default=str(Path(__file__).resolve().parents[1]
+                                         / "BENCH_warmstart.json"))
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+        return
+    data = collect(quick=args.quick)
+    Path(args.out).write_text(json.dumps(data, indent=2) + "\n")
+    print(f"wrote {args.out}")
+    for row in data["results"]:
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

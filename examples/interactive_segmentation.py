@@ -1,0 +1,78 @@
+"""Interactive image segmentation on a ``Solver`` session — the paper's
+motivating dynamic-cuts workload: the user scribbles, the solver re-cuts.
+
+A sparse-seed segmentation instance (foreground scribble at the center,
+background scribble on the border, contrast-weighted 4-connected grid) is
+prepared ONCE; the first solve is cold.  Each simulated "brush stroke"
+then edits terminal capacities through ``handle.update`` — the residual
+network is reparameterized on device — and ``handle.solve()`` re-cuts
+from the warm preflow in a fraction of the cold solve's sweeps.
+
+    PYTHONPATH=src python examples/interactive_segmentation.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+from repro.core import Solver, SolverOptions, grid_partition
+from repro.data.grids import segmentation_seeds_grid
+
+H = W = 32
+
+
+def show(res, title):
+    seg = res.source_side.reshape(H, W)      # source side = foreground
+    print(f"--- {title}: flow={res.flow_value} "
+          f"sweeps={res.stats.sweeps} launches={res.stats.engine_launches}")
+    for row in seg[::2]:
+        print("".join("#" if v else "." for v in row))
+
+
+problem = segmentation_seeds_grid(H, W, seed=0)
+solver = Solver(SolverOptions(method="ard", num_regions=4))
+handle = solver.prepare(problem, grid_partition((H, W), (2, 2)))
+
+cold = handle.solve()
+show(cold, "initial segmentation (cold solve)")
+
+# The user scribbles FOREGROUND over a block in the upper-left quadrant:
+# those pixels get strong source mass (and any sink capacity removed).
+yy, xx = np.mgrid[:H, :W]
+stroke = ((yy - H // 4) ** 2 + (xx - W // 4) ** 2
+          < (H // 8) ** 2).reshape(-1)
+exc = handle.problem.excess.copy()
+snk = handle.problem.sink_cap.copy()
+exc[stroke] = 300                  # strong source mass under the brush
+snk[stroke] = 0                    # ... and no competing sink link
+handle.update(excess=exc, sink_cap=snk)
+
+warm = handle.solve()
+show(warm, "after foreground scribble (warm re-solve)")
+
+# the warm result is exactly what a from-scratch solve of the edited
+# problem computes — the session just got there from the previous optimum
+cold_ref = Solver(SolverOptions(method="ard", num_regions=4)).solve(
+    handle.problem, handle.part)
+assert warm.flow_value == cold_ref.flow_value
+print(f"warm re-solve: {warm.stats.sweeps} sweep(s) / "
+      f"{warm.stats.engine_launches} launches vs cold re-solve "
+      f"{cold_ref.stats.sweeps} / {cold_ref.stats.engine_launches}; "
+      f"session cache: {solver.cache_info()}")
+
+# a second stroke with the same brush shows the steady-state win: the
+# edit lands in the same (power-of-two) update-size bucket and the
+# re-solve reuses every compiled program — zero retraces
+traces = solver.cache_info().traces
+touch = ((yy - H // 4) ** 2 + (xx - 3 * W // 4) ** 2
+         < (H // 8) ** 2).reshape(-1)
+exc2 = handle.problem.excess.copy()
+exc2[touch] = 300
+handle.update(excess=exc2)
+warm2 = handle.solve()
+show(warm2, "after touch-up stroke (warm re-solve)")
+assert solver.cache_info().traces == traces, "steady state must not retrace"
+print(f"touch-up re-solved in {warm2.stats.sweeps} sweep(s), "
+      f"zero retraces")

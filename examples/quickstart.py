@@ -1,4 +1,4 @@
-"""Quickstart: solve a distributed MINCUT with the public API.
+"""Quickstart: solve a distributed MINCUT through a ``Solver`` session.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -9,7 +9,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import numpy as np
 
-from repro.core import Problem, SweepConfig, solve_mincut
+from repro.core import Problem, Solver, SolverOptions
 
 # A tiny hand-built network: 6 vertices, terminal masses, symmetric edges.
 problem = Problem(
@@ -21,17 +21,38 @@ problem = Problem(
     sink_cap=np.array([0, 0, 0, 0, 0, 9], np.int32),   # sink drain at v5
 )
 
-# Solve with the paper's S/P-ARD (augmented-path region discharge).
-result = solve_mincut(problem, num_regions=2,
-                      config=SweepConfig(method="ard", parallel=True))
+# A session holds the options and the compile cache; prepare() blocks the
+# problem into regions ONCE and returns a reusable handle.
+solver = Solver(SolverOptions(method="ard", parallel=True, num_regions=2))
+handle = solver.prepare(problem)
+
+result = handle.solve()          # the paper's S/P-ARD
 print(f"max-flow / min-cut value : {result.flow_value}")
 print(f"source side              : {np.nonzero(result.source_side)[0]}")
 print(f"sweeps                   : {result.stats.sweeps} "
       f"(bound {2 * result.meta.num_boundary**2 + 1})")
 print(f"boundary message bytes   : {result.stats.boundary_bytes}")
 
+# The handle is now WARM: edit capacities in place and re-solve — the
+# update reparameterizes the residual network on device and the solve
+# continues from the previous optimum instead of from zero.  Edge (2, 3)
+# crosses the mincut, so widening it raises the flow.
+handle.update(arcs=np.array([2]),                 # edge (2, 3): 2 -> 6
+              cap_fwd=np.array([6], np.int32),
+              cap_bwd=np.array([6], np.int32))
+warm = handle.solve()
+print(f"after widening edge (2,3): flow {result.flow_value} -> "
+      f"{warm.flow_value} in {warm.stats.sweeps} warm sweep(s)")
+assert warm.flow_value > result.flow_value
+
 # Compare against the push-relabel region discharge baseline (Delong-Boykov)
-baseline = solve_mincut(problem, num_regions=2,
-                        config=SweepConfig(method="prd"))
+baseline = Solver(SolverOptions(method="prd", num_regions=2)).solve(problem)
 assert baseline.flow_value == result.flow_value
 print(f"PRD baseline sweeps      : {baseline.stats.sweeps}")
+
+# Legacy one-shot front-end (thin wrapper over a throwaway session):
+from repro.core import SweepConfig, solve_mincut
+
+legacy = solve_mincut(problem, num_regions=2,
+                      config=SweepConfig(method="ard", parallel=True))
+assert legacy.flow_value == result.flow_value

@@ -1,27 +1,38 @@
 """Core distributed mincut/maxflow library (the paper's contribution).
 
 Public surface:
-  Problem, build, solve_mincut, SweepConfig — single-host solver
+  Solver, SolverOptions, ProblemHandle      — solver sessions: prepared
+                                              handles, warm-start re-solves
+                                              (handle.update + solve), and
+                                              the unified front-end over the
+                                              host-loop / device-resident /
+                                              sharded / batched routes
+  Problem, build, solve_mincut, SweepConfig — legacy one-shot solver
   solve_mincut_batch, BatchedSolver,
   pack_instances                            — shape-bucketed batched solver
   solve_sharded, make_sharded_sweep        — shard_map distributed solver
   region_reduction                          — Alg. 5 preprocessing
 """
 
-from repro.core.api import (BatchedSolver, MincutResult, solve_mincut,
-                            solve_mincut_batch)
+from repro.core.api import (BatchCacheInfo, BatchedSolver, MincutResult,
+                            solve_mincut, solve_mincut_batch)
 from repro.core.graph import (BatchMeta, BatchState, FlowState, GraphMeta,
-                              Layout, PackedBatch, Problem, bucket_shape_for,
-                              build, init_labels, pack_instances)
+                              GraphUpdate, Layout, PackedBatch, Problem,
+                              apply_update, bucket_shape_for, build,
+                              init_labels, pack_built, pack_instances)
 from repro.core.partition import bfs_partition, block_partition, grid_partition
 from repro.core.reduction import region_reduction
+from repro.core.solver import (ProblemHandle, Solver, SolverCacheInfo,
+                               SolverOptions)
 from repro.core.sweep import SweepConfig, SweepStats, cut_value, extract_cut, solve
 
 __all__ = [
-    "BatchMeta", "BatchState", "BatchedSolver", "FlowState", "GraphMeta",
-    "Layout", "MincutResult", "PackedBatch", "Problem", "SweepConfig",
-    "SweepStats", "bfs_partition", "block_partition", "bucket_shape_for",
+    "BatchCacheInfo", "BatchMeta", "BatchState", "BatchedSolver",
+    "FlowState", "GraphMeta", "GraphUpdate", "Layout", "MincutResult",
+    "PackedBatch", "Problem", "ProblemHandle", "Solver", "SolverCacheInfo",
+    "SolverOptions", "SweepConfig", "SweepStats", "apply_update",
+    "bfs_partition", "block_partition", "bucket_shape_for",
     "build", "cut_value", "extract_cut", "grid_partition", "init_labels",
-    "pack_instances",
+    "pack_built", "pack_instances",
     "region_reduction", "solve", "solve_mincut", "solve_mincut_batch",
 ]

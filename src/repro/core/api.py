@@ -1,58 +1,40 @@
-"""Public entry points for the distributed mincut/maxflow solver.
+"""Legacy one-shot entry points — thin shims over the ``Solver`` session.
 
-Two front-ends share all solver machinery:
+The public front-end is ``core.solver``: ``Solver(options)`` →
+``prepare(problem)`` → ``handle.solve()`` / ``handle.update(...)`` /
+``Solver.solve_many([...])``, one unified ``MincutResult``/``SweepStats``
+shape across the host-loop, device-resident, sharded and batched routes,
+plus warm-start incremental re-solves.
 
-* ``solve_mincut`` — one problem, one solve (host-loop or device-resident
-  drivers, see ``sweep.solve``);
-* ``solve_mincut_batch`` / ``BatchedSolver`` — a fleet of problems packed
-  into shape buckets (``graph.pack_instances``) and solved together, one
-  batched device program per bucket with the compiled solve cached per
-  ``(bucket_shape, SweepConfig)``.  Per-instance results are bit-identical
-  to ``solve_mincut`` on the same problem.
+This module keeps the pre-session surface alive, bit-identically:
+
+* ``solve_mincut`` — one problem, one cold solve
+  (``Solver.prepare().solve()``);
+* ``solve_mincut_batch`` / ``BatchedSolver`` — a fleet of problems through
+  the shape-bucketed batched driver (``Solver.solve_many``).
+
+Downstream callers and all pre-session tests run unmodified; new code
+should talk to ``Solver`` directly.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any
-
 import numpy as np
 
-from repro.core import batch as _batch
-from repro.core import partition as _partition
 from repro.core import sweep as _sweep
-from repro.core.graph import (FlowState, GraphMeta, Layout, PackedBatch,
-                              Problem, build, init_labels, pack_instances)
+from repro.core.graph import Problem
+from repro.core.solver import (MincutResult, ProblemHandle, Solver,
+                               SolverCacheInfo, SolverOptions)
 
+# legacy name for the cache-accounting record returned by
+# ``BatchedSolver.cache_info`` (now the session-wide ``SolverCacheInfo``)
+BatchCacheInfo = SolverCacheInfo
 
-@dataclass
-class MincutResult:
-    flow_value: int                 # maximum preflow value == mincut cost
-    source_side: np.ndarray         # bool[n] vertex in the source set C
-    stats: _sweep.SweepStats
-    meta: GraphMeta
-    state: FlowState
-    layout: Layout
-
-
-def _finish(meta: GraphMeta, state0: FlowState, state: FlowState,
-            layout: Layout, stats: _sweep.SweepStats,
-            check: bool) -> MincutResult:
-    """Extract the cut and package a result (shared by both front-ends).
-
-    ``check`` verifies that the cut cost in the initial network equals the
-    preflow value — an extra device fetch plus an O(n*E) host reduction,
-    so serving paths may disable it; correctness tests keep it on.
-    """
-    sink_side = _sweep.extract_cut(meta, state)
-    flow = int(state.flow_to_t)
-    if check:
-        cost = int(_sweep.cut_value(meta, state0, sink_side))
-        assert cost == flow, (
-            f"internal error: cut cost {cost} != max preflow {flow}")
-    source_flat = ~layout.to_flat(np.asarray(sink_side))
-    return MincutResult(flow_value=flow, source_side=source_flat,
-                        stats=stats, meta=meta, state=state, layout=layout)
+__all__ = [
+    "BatchCacheInfo", "BatchedSolver", "MincutResult", "ProblemHandle",
+    "Solver", "SolverCacheInfo", "SolverOptions", "solve_mincut",
+    "solve_mincut_batch",
+]
 
 
 def solve_mincut(
@@ -62,83 +44,38 @@ def solve_mincut(
     config: _sweep.SweepConfig | None = None,
     check: bool = True,
 ) -> MincutResult:
-    """Solve MINCUT/MAXFLOW with region discharge sweeps.
+    """Solve MINCUT/MAXFLOW with region discharge sweeps (one-shot).
 
     ``part`` — region id per vertex; defaults to node-number slicing into
     ``num_regions`` regions (the paper's fallback partitioner).
     ``check=False`` skips the host-side cut-cost == flow assertion (one
     device fetch + an O(n*E) host reduction per solve) on serving paths.
+
+    Equivalent to ``Solver(...).prepare(problem, part).solve()`` — for
+    sequences of related problems, keep the ``Solver`` session instead:
+    it amortizes build/compile across calls and re-solves warm after
+    ``handle.update``.
     """
-    if part is None:
-        part = _partition.block_partition(problem.num_vertices, num_regions)
-    meta, state, layout = build(problem, part)
-    state0 = state
-    state = init_labels(meta, state)
-    cfg = config or _sweep.SweepConfig()
-    state, stats = _sweep.solve(meta, state, cfg)
-    return _finish(meta, state0, state, layout, stats, check)
-
-
-def _unpack_batch(packed: PackedBatch, bstate, bstats,
-                  check: bool) -> list[tuple[int, MincutResult]]:
-    """Slice a solved bucket back into per-instance ``MincutResult``s.
-
-    Instance i's mutable state is the ``[:K_i, :V_i, :E_i]`` corner of its
-    batch slot (packing pads at the high end, so real slots are preserved
-    verbatim) recombined with its ORIGINAL unpadded topology — the result
-    is a bona fide ``FlowState`` that ``extract_cut``/``cut_value``/
-    ``Layout.to_flat`` consume unchanged.
-    """
-    out = []
-    for b, idx in enumerate(packed.indices):
-        meta = packed.metas[b]
-        st0 = packed.states0[b]
-        layout = packed.layouts[b]
-        K, V, E = meta.num_regions, meta.region_size, meta.max_degree
-        st = st0.replace(
-            cf=bstate.cf[b, :K, :V, :E],
-            sink_cf=bstate.sink_cf[b, :K, :V],
-            excess=bstate.excess[b, :K, :V],
-            d=bstate.d[b, :K, :V],
-            flow_to_t=bstate.flow_to_t[b])
-        sweeps = int(bstats.sweeps[b])
-        page_bytes, msg_bytes = _sweep._page_and_msg_bytes(meta, st0)
-        stats = _sweep.SweepStats(
-            sweeps=sweeps,
-            engine_iters=int(bstats.engine_iters[b]),
-            engine_launches=bstats.engine_launches,   # global: the batch
-            host_syncs=bstats.host_syncs,             # shares one stream
-            boundary_bytes=sweeps * msg_bytes,
-            page_bytes=sweeps * meta.num_regions * page_bytes,
-            regions_discharged=sweeps * meta.num_regions)
-        out.append((idx, _finish(meta, st0, st, layout, stats, check)))
-    return out
-
-
-@dataclass
-class BatchCacheInfo:
-    hits: int = 0        # solves served by an already-compiled bucket
-    misses: int = 0      # bucket shapes that traced/compiled a new solve
+    solver = Solver(SolverOptions.from_sweep_config(
+        config, num_regions=num_regions, check=check))
+    return solver.prepare(problem, part).solve()
 
 
 class BatchedSolver:
     """Shape-bucketed, compile-cached multi-instance solver front-end.
 
-    Packs problems into power-of-two shape buckets
-    (``graph.pack_instances``), runs one batched device program per bucket
-    (``batch.solve_batch``), and reuses the compiled solve for every batch
-    that lands in a previously seen ``(bucket_shape, SweepConfig)`` —
-    ``cache_info()`` reports hits/misses, where a miss is an actual trace
-    of the batched device program (``batch.trace_count``).
-
-    The instance-throughput front-end for serving: amortizes compiles
-    across requests and kernel launches/host syncs across the instances of
-    each batch.
+    Legacy wrapper over ``Solver.solve_many``: packs problems into
+    power-of-two shape buckets, one batched device program per bucket,
+    compiled solves cached per ``(bucket_shape, SweepConfig)`` —
+    ``cache_info()`` reports hits/misses.  Per-instance results are
+    bit-identical to ``solve_mincut`` on the same problem.
     """
 
     def __init__(self, config: _sweep.SweepConfig | None = None, *,
                  num_regions: int = 4, check: bool = True):
         self.config = config or _sweep.SweepConfig()
+        self._solver = Solver(SolverOptions.from_sweep_config(
+            self.config, num_regions=num_regions, check=check))
         # fail fast on configurations the batched driver does not take
         if not self.config.parallel or self.config.use_boundary_relabel:
             raise ValueError(
@@ -146,29 +83,16 @@ class BatchedSolver:
                 "boundary-relabel heuristic; use solve_mincut for those")
         self.num_regions = num_regions
         self.check = check
-        self.cache = BatchCacheInfo()
-        self.last_batch_stats: list[_batch.BatchStats] = []
 
     def solve(self, problems, parts=None) -> list[MincutResult]:
-        packs = pack_instances(problems, parts,
-                               num_regions=self.num_regions)
-        results: list[MincutResult | None] = [None] * len(problems)
-        self.last_batch_stats = []
-        for packed in packs:
-            before = _batch.trace_count()
-            bstate, bstats = _batch.solve_batch(packed, self.config)
-            if _batch.trace_count() > before:
-                self.cache.misses += 1
-            else:
-                self.cache.hits += 1
-            self.last_batch_stats.append(bstats)
-            for idx, res in _unpack_batch(packed, bstate, bstats,
-                                          self.check):
-                results[idx] = res
-        return results
+        return self._solver.solve_many(problems, parts)
+
+    @property
+    def last_batch_stats(self):
+        return self._solver.last_batch_stats
 
     def cache_info(self) -> BatchCacheInfo:
-        return self.cache
+        return self._solver.cache_info()
 
 
 def solve_mincut_batch(
@@ -180,12 +104,12 @@ def solve_mincut_batch(
 ) -> list[MincutResult]:
     """Solve a fleet of independent problems through the batched driver.
 
-    One-shot convenience over ``BatchedSolver`` (which amortizes the
-    compile cache across calls): problems are packed into shape buckets
-    and each bucket is solved by one batched device program — on the fused
-    pallas path one ``grid=(B, K)`` kernel launch per engine chunk-trip
-    for the whole bucket.  Results are returned in input order and are
-    bit-identical per instance to ``solve_mincut``.
+    One-shot convenience over ``Solver.solve_many`` (a kept ``Solver``
+    session amortizes the compile cache across calls): problems are packed
+    into shape buckets and each bucket is solved by one batched device
+    program — on the fused pallas path one ``grid=(B, K)`` kernel launch
+    per engine chunk-trip for the whole bucket.  Results are returned in
+    input order and are bit-identical per instance to ``solve_mincut``.
     """
     solver = BatchedSolver(config, num_regions=num_regions, check=check)
     return solver.solve(problems, parts)

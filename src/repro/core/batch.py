@@ -69,6 +69,9 @@ class BatchStats:
     standalone drivers); ``engine_launches`` and ``host_syncs`` are global
     to the batch — the whole point of batching is that the batch shares
     one launch/sync stream, so a per-instance split would be fiction.
+    Per-instance ``SweepStats`` derived from this record are marked
+    ``scope="batch"`` so the global counters cannot be misread as
+    per-instance (see ``sweep.SweepStats``).
     """
 
     sweeps: np.ndarray

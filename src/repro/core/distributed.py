@@ -66,6 +66,14 @@ from repro.core.sweep import SweepConfig
 
 _I32 = jnp.int32
 
+# bumped once per trace of the sharded one-sweep body — part of the session
+# front-end's combined compile-cache observable (Solver.cache_info)
+_TRACE_COUNT = 0
+
+
+def trace_count() -> int:
+    return _TRACE_COUNT
+
 
 def region_axis_sharding(mesh: Mesh, axes) -> dict:
     """PartitionSpecs for a FlowState sharded over its region axis."""
@@ -97,6 +105,8 @@ def _one_sweep_local(meta: GraphMeta, cfg: SweepConfig, axes,
     schedule; see EXPERIMENTS.md §Perf for the measured exchange-mode and
     engine-backend numbers.
     """
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1
     Kl, V, E = state.cf.shape                     # local regions
     # region offset of this shard (flat index over possibly-multiple axes)
     idx = jnp.zeros((), _I32)
@@ -216,6 +226,21 @@ def _one_sweep_local(meta: GraphMeta, cfg: SweepConfig, axes,
     return out, n_active
 
 
+def _memoized(fn):
+    """Memoize a sharded-program builder on its (hashable) arguments.
+
+    ``jax.jit`` caches per function object, so rebuilding the shard_map
+    body on every ``solve_sharded`` call used to retrace/recompile each
+    time; a session issuing warm re-solves through the sharded route must
+    reuse the program.  Keyed on (meta, mesh, cfg, axes, exchange) — all
+    hashable.
+    """
+    import functools
+
+    return functools.lru_cache(maxsize=64)(fn)
+
+
+@_memoized
 def make_sharded_sweep(meta: GraphMeta, mesh: Mesh, cfg: SweepConfig,
                        axes=("regions",), exchange: str = "full"):
     """Build the jitted one-sweep SPMD program for a region-sharded mesh.
@@ -232,6 +257,7 @@ def make_sharded_sweep(meta: GraphMeta, mesh: Mesh, cfg: SweepConfig,
     return jax.jit(fn)
 
 
+@_memoized
 def make_sharded_solve(meta: GraphMeta, mesh: Mesh, cfg: SweepConfig,
                        axes=("regions",), exchange: str = "full"):
     """Build the jitted device-resident multi-sweep SPMD program.
@@ -296,7 +322,8 @@ def solve_sharded(meta: GraphMeta, state: FlowState, mesh: Mesh,
                   cfg: SweepConfig | None = None, axes=("regions",),
                   max_sweeps: int | None = None, exchange: str = "full",
                   device_resident: bool | None = None,
-                  host_sync_every: int | None = None):
+                  host_sync_every: int | None = None,
+                  return_stats: bool = False):
     """Sharded sweep loop (device-resident state; regions over the mesh).
 
     Default driver: one jitted SPMD sweep program + one host sync per
@@ -304,9 +331,14 @@ def solve_sharded(meta: GraphMeta, state: FlowState, mesh: Mesh,
     ``cfg.device_resident``) the whole loop runs in a ``lax.while_loop``
     under shard_map and the host is re-entered once per
     ``host_sync_every`` sweeps (default: once per solve) — the same
-    treatment as ``core.sweep.solve``.  Returns (state, sweeps).
+    treatment as ``core.sweep.solve``.  Returns (state, sweeps), or
+    (state, sweeps, host_syncs) with ``return_stats`` (the session
+    front-end's route).  The compiled SPMD programs are memoized on
+    (meta, mesh, cfg, axes, exchange), so repeated solves — a session's
+    warm re-solves in particular — reuse them.
     """
     cfg = cfg or SweepConfig()
+    axes = tuple(axes) if not isinstance(axes, str) else (axes,)
     if device_resident is None:
         device_resident = cfg.device_resident
     if host_sync_every is None:
@@ -316,6 +348,7 @@ def solve_sharded(meta: GraphMeta, state: FlowState, mesh: Mesh,
     bound = (2 * meta.num_boundary ** 2 + 1 if cfg.method == "ard"
              else 2 * meta.num_vertices ** 2)
     limit = max_sweeps if max_sweeps is not None else bound
+    host_syncs = 0
 
     if device_resident:
         run = make_sharded_solve(meta, mesh, cfg, axes, exchange=exchange)
@@ -327,15 +360,18 @@ def solve_sharded(meta: GraphMeta, state: FlowState, mesh: Mesh,
                                        jnp.asarray(cap, _I32))
             sweeps, n_active = (int(x) for x in jax.device_get(
                 (idx, n_active)))
+            host_syncs += 1
             if n_active == 0 or sweeps >= limit:
                 break
-        return state, sweeps
+        return (state, sweeps, host_syncs) if return_stats \
+            else (state, sweeps)
 
     sweep_fn = make_sharded_sweep(meta, mesh, cfg, axes, exchange=exchange)
     sweeps = 0
     while sweeps < limit:
         state, n_active = sweep_fn(state, jnp.asarray(sweeps, _I32))
         sweeps += 1
+        host_syncs += 1
         if int(n_active) == 0:
             break
-    return state, sweeps
+    return (state, sweeps, host_syncs) if return_stats else (state, sweeps)

@@ -125,10 +125,22 @@ def _check_problem(p: Problem) -> None:
 
 @dataclass(frozen=True)
 class Layout:
-    """Host-side mapping between flat vertex ids and (region, local) slots."""
+    """Host-side mapping between flat vertex ids and (region, local) slots.
+
+    ``edge_arc_u``/``edge_arc_v`` give, for every undirected input edge i,
+    the flat ``[K*V*E]`` index of its two directed arc slots (u's row and
+    v's row); ``edge_vtx_u``/``edge_vtx_v`` the flat ``[K*V]`` index of its
+    endpoints.  They are what lets a prepared handle scatter a capacity
+    delta straight onto the device-resident ``FlowState`` without
+    re-running ``build`` (``apply_update``).
+    """
 
     part: np.ndarray        # i64[n] region of each vertex
     local_id: np.ndarray    # i64[n] slot within the region
+    edge_arc_u: np.ndarray | None = None   # i64[m] flat arc slot of u->v
+    edge_arc_v: np.ndarray | None = None   # i64[m] flat arc slot of v->u
+    edge_vtx_u: np.ndarray | None = None   # i64[m] flat vertex slot of u
+    edge_vtx_v: np.ndarray | None = None   # i64[m] flat vertex slot of v
 
     def to_flat(self, arr_kv: np.ndarray) -> np.ndarray:
         """Gather a [K,V] per-slot array back to flat vertex order."""
@@ -280,12 +292,151 @@ def build(problem: Problem, part: np.ndarray) -> tuple[GraphMeta, FlowState, "La
         d=jnp.zeros((K, V), dtype=jnp.int32),
         flow_to_t=jnp.zeros((), dtype=jnp.int32),
     )
-    return meta, state, Layout(part=part, local_id=local_id)
+    layout = Layout(
+        part=part, local_id=local_id,
+        edge_arc_u=(ru * V + lu) * E + slot_u,
+        edge_arc_v=(rv * V + lv) * E + slot_v,
+        edge_vtx_u=ru * V + lu,
+        edge_vtx_v=rv * V + lv)
+    return meta, state, layout
 
 
 def init_labels(meta: GraphMeta, state: FlowState) -> FlowState:
     """Paper's ``Init``: d := 0 everywhere (source already eliminated)."""
     return state.replace(d=jnp.zeros_like(state.d))
+
+
+# --------------------------------------------------------------------------
+# Warm-start updates: reparameterize the residual network under a capacity
+# delta (Kohli-Torr dynamic-cuts style), keeping the preflow device-resident.
+# --------------------------------------------------------------------------
+
+# traces of the jitted update program — a session's ``cache_info`` counts
+# these together with the sweep/batch program traces
+_UPDATE_TRACES = 0
+
+
+def update_trace_count() -> int:
+    return _UPDATE_TRACES
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class GraphUpdate:
+    """Device-side capacity/terminal delta of a prepared problem (a pytree).
+
+    ``j`` edge entries and ``p`` vertex entries, each padded (to a power of
+    two by the session front-end) with index-0 / zero-delta slots that are
+    inert under the scatter arithmetic of ``apply_update`` — so repeated
+    same-sized updates reuse one compiled program.  Indices are flat:
+    ``arc_*`` into the flattened ``[K*V*E]`` residual table (the build-time
+    ``Layout.edge_arc_*`` slots of the updated edges), ``vtx_*``/``t_vtx``
+    into the flattened ``[K*V]`` vertex arrays.
+    """
+
+    arc_u: jax.Array       # i32[j] flat slot of the edge's u->v arc
+    arc_v: jax.Array       # i32[j] flat slot of the edge's v->u arc
+    vtx_u: jax.Array       # i32[j] flat vertex slot of u
+    vtx_v: jax.Array       # i32[j] flat vertex slot of v
+    d_cap_fwd: jax.Array   # i32[j] capacity delta of u->v
+    d_cap_bwd: jax.Array   # i32[j] capacity delta of v->u
+    t_vtx: jax.Array       # i32[p] flat vertex slot of a terminal update
+    d_sink: jax.Array      # i32[p] t-link capacity delta
+    d_excess: jax.Array    # i32[p] source-mass delta
+
+
+@jax.jit
+def apply_update(state: FlowState, state0: FlowState, upd: GraphUpdate):
+    """Apply a capacity/terminal delta to a solved (or fresh) ``FlowState``.
+
+    The residual network is reparameterized in the Kohli-Torr dynamic-cuts
+    style so the current preflow stays valid on the updated problem:
+
+    * each updated edge's residual pair moves by the capacity delta; where
+      the new capacity falls below the flow the residual is clamped to 0
+      and the clamped overflow is *returned to the sender's excess*, with
+      the matching inflow deficit charged to the receiver;
+    * t-link decreases below the flow already drained return the overflow
+      to the vertex excess and roll ``flow_to_t`` back;
+    * a deficit a vertex cannot cover from its (post-return) excess is
+      cancelled by adding the shortfall to BOTH its conceptual source arc
+      (absorbed into excess, netting zero) and its t-link ``sink_cf`` —
+      adding the same amount to (s,v) and (v,t) raises every s-t cut by
+      exactly that constant, so the mincut partition is unchanged and the
+      solved flow value is simply ``flow_to_t - offset``.
+
+    Returns ``(state', state0', grew, offset_delta)`` where ``state0'`` is
+    the *unreparameterized* initial network of the updated problem (what
+    cut-cost checks price cuts against), ``grew`` flags whether any
+    residual capacity increased (new residual arcs can invalidate kept
+    labels — see ``SolverOptions.warm_labels``), and ``offset_delta`` is
+    the flow-value offset introduced by deficit cancellation.
+    """
+    global _UPDATE_TRACES
+    _UPDATE_TRACES += 1
+    K, V, E = state.cf.shape
+
+    # --- edge capacity deltas, clamped into the new capacity ---
+    cf = state.cf.reshape(-1)
+    ra0, rb0 = cf[upd.arc_u], cf[upd.arc_v]
+    ra = ra0 + upd.d_cap_fwd
+    rb = rb0 + upd.d_cap_bwd
+    # at most one side of a pair can go negative (ra + rb = c_f' + c_b' >= 0)
+    ov_a = jnp.maximum(-ra, 0)          # flow over the new u->v capacity
+    ra, rb = ra + ov_a, rb - ov_a
+    ov_b = jnp.maximum(-rb, 0)          # flow over the new v->u capacity
+    rb, ra = rb + ov_b, ra - ov_b
+    cf = cf.at[upd.arc_u].add(ra - ra0, mode="drop")
+    cf = cf.at[upd.arc_v].add(rb - rb0, mode="drop")
+
+    # clamped overflow goes back to the sender; the receiver is charged
+    nv = K * V
+    returns = jnp.zeros((nv,), jnp.int32).at[upd.vtx_u].add(ov_a,
+                                                            mode="drop")
+    returns = returns.at[upd.vtx_v].add(ov_b, mode="drop")
+    deficits = jnp.zeros((nv,), jnp.int32).at[upd.vtx_v].add(ov_a,
+                                                             mode="drop")
+    deficits = deficits.at[upd.vtx_u].add(ov_b, mode="drop")
+
+    # --- terminal deltas ---
+    sink = state.sink_cf.reshape(-1)
+    s0 = sink[upd.t_vtx]
+    s1 = s0 + upd.d_sink
+    t_ret = jnp.maximum(-s1, 0)         # flow returned from the sink
+    s1 = s1 + t_ret
+    sink = sink.at[upd.t_vtx].add(s1 - s0, mode="drop")
+    flow_to_t = state.flow_to_t - t_ret.sum()
+    returns = returns.at[upd.t_vtx].add(
+        t_ret + jnp.maximum(upd.d_excess, 0), mode="drop")
+    deficits = deficits.at[upd.t_vtx].add(
+        jnp.maximum(-upd.d_excess, 0), mode="drop")
+
+    # --- resolve deficits against excess; cancel the shortfall ---
+    excess = state.excess.reshape(-1) + returns
+    short = jnp.maximum(deficits - excess, 0)
+    excess = jnp.maximum(excess - deficits, 0)
+    sink = sink + short
+    offset = short.sum()
+
+    grew = ((ra > ra0).any() | (rb > rb0).any() | (s1 > s0).any()
+            | (short > 0).any())
+
+    new_state = state.replace(
+        cf=cf.reshape(K, V, E), sink_cf=sink.reshape(K, V),
+        excess=excess.reshape(K, V), flow_to_t=flow_to_t)
+
+    # initial network of the updated problem (zero flow): plain deltas
+    cf0 = state0.cf.reshape(-1).at[upd.arc_u].add(upd.d_cap_fwd,
+                                                  mode="drop")
+    cf0 = cf0.at[upd.arc_v].add(upd.d_cap_bwd, mode="drop")
+    sink0 = state0.sink_cf.reshape(-1).at[upd.t_vtx].add(upd.d_sink,
+                                                         mode="drop")
+    exc0 = state0.excess.reshape(-1).at[upd.t_vtx].add(upd.d_excess,
+                                                       mode="drop")
+    new_state0 = state0.replace(
+        cf=cf0.reshape(K, V, E), sink_cf=sink0.reshape(K, V),
+        excess=exc0.reshape(K, V))
+    return new_state, new_state0, grew, offset
 
 
 # --------------------------------------------------------------------------
@@ -402,13 +553,8 @@ def pack_instances(problems, parts=None, *, num_regions: int = 4,
     """Stack independent problems into shape-bucketed solve batches.
 
     Each problem is region-blocked with ``build`` (``parts[i]`` or the
-    node-number fallback partitioner), its (K, V, E, X) rounded up to the
-    power-of-two bucket, and instances sharing a bucket are stacked along
-    a new leading instance axis.  Padding is inert by construction:
-    masked-off vertices/arcs/cross entries and (with ``pad_batch``) the
-    batch axis rounded up with all-masked dummy instances, so any batch
-    landing in a bucket reuses the bucket's compiled solve.  Returns one
-    ``PackedBatch`` per bucket (ascending bucket shape).
+    node-number fallback partitioner) and handed to ``pack_built`` — one
+    ``PackedBatch`` per power-of-two shape bucket.
     """
     from repro.core.partition import block_partition
 
@@ -417,8 +563,26 @@ def pack_instances(problems, parts=None, *, num_regions: int = 4,
         part = parts[i] if parts is not None and parts[i] is not None \
             else block_partition(p.num_vertices, num_regions)
         meta, state, layout = build(p, np.asarray(part))
-        builds.append((i, meta, state, layout))
+        builds.append((i, meta, state, layout, state))
+    return pack_built(builds, pad_batch=pad_batch)
 
+
+def pack_built(builds, *, pad_batch: bool = True) -> list[PackedBatch]:
+    """Stack already-built instances into shape-bucketed solve batches.
+
+    ``builds`` — ``(index, meta, state, layout, state0)`` tuples: ``state``
+    is the FlowState the batched solve starts from (fresh from ``build``,
+    or a session handle's warm, possibly-updated state — its preflow,
+    labels and ``flow_to_t`` are all carried into the batch), ``state0``
+    the instance's initial network kept for result unpacking and the
+    cut-cost check.  Each instance's (K, V, E, X) is rounded up to the
+    power-of-two bucket and instances sharing a bucket are stacked along a
+    new leading instance axis.  Padding is inert by construction:
+    masked-off vertices/arcs/cross entries and (with ``pad_batch``) the
+    batch axis rounded up with all-masked dummy instances, so any batch
+    landing in a bucket reuses the bucket's compiled solve.  Returns one
+    ``PackedBatch`` per bucket (ascending bucket shape).
+    """
     groups: dict = {}
     for item in builds:
         groups.setdefault(bucket_shape_for(item[1]), []).append(item)
@@ -439,7 +603,8 @@ def pack_instances(problems, parts=None, *, num_regions: int = 4,
         d_inf_ard = np.ones(B, np.int32)
         d_inf_prd = np.ones(B, np.int32)
         linf = np.full(B, 3, np.int32)
-        for b, (i, meta, state, layout) in enumerate(items):
+        flow_to_t = np.zeros(B, np.int32)
+        for b, (i, meta, state, layout, _state0) in enumerate(items):
             for k in shp3:
                 cols[k][b] = _pad_to(np.asarray(getattr(state, k)), (K, V, E))
             for k in shp2:
@@ -461,6 +626,7 @@ def pack_instances(problems, parts=None, *, num_regions: int = 4,
             d_inf_ard[b] = meta.d_inf_ard
             d_inf_prd[b] = meta.d_inf_prd
             linf[b] = meta.region_size + 2
+            flow_to_t[b] = int(state.flow_to_t)
         state = BatchState(
             nbr_region=jnp.asarray(cols["nbr_region"]),
             nbr_local=jnp.asarray(cols["nbr_local"]),
@@ -480,7 +646,7 @@ def pack_instances(problems, parts=None, *, num_regions: int = 4,
             sink_cf=jnp.asarray(cols["sink_cf"]),
             excess=jnp.asarray(cols["excess"]),
             d=jnp.asarray(cols["d"]),
-            flow_to_t=jnp.zeros((B,), jnp.int32),
+            flow_to_t=jnp.asarray(flow_to_t),
         )
         out.append(PackedBatch(
             meta=BatchMeta(num_instances=B, num_regions=K, region_size=V,
@@ -488,7 +654,7 @@ def pack_instances(problems, parts=None, *, num_regions: int = 4,
             state=state,
             metas=[it[1] for it in items],
             layouts=[it[3] for it in items],
-            states0=[it[2] for it in items],
+            states0=[it[4] for it in items],
             indices=[it[0] for it in items]))
     return out
 

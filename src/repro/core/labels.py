@@ -17,12 +17,22 @@ ARD (sufficient per Sec. 5.3), all-vertex bins for PRD.
 
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
 
 from repro.core.graph import FlowState, GraphMeta, INF_LABEL, intra_mask
 
 _I32 = jnp.int32
+
+# traces of the jitted global-relabel program (the warm-start label
+# refresh) — part of the session front-end's combined cache observable
+_TRACE_COUNT = 0
+
+
+def trace_count() -> int:
+    return _TRACE_COUNT
 
 # static histogram cap for gap heuristics (labels above the cap are simply
 # not gap-checked; the heuristic stays sound)
@@ -78,6 +88,39 @@ def region_relabel(meta: GraphMeta, state: FlowState, *, ard: bool) -> FlowState
     new_d = fn(state.cf, state.sink_cf, ghost_d, state.nbr_local, intra,
                state.emask, state.vmask)
     return state.replace(d=jnp.maximum(state.d, new_d))
+
+
+@partial(jax.jit, static_argnums=(0, 2))
+def global_relabel(meta: GraphMeta, state: FlowState, ard: bool) -> FlowState:
+    """Exact distance labeling of the whole residual network, from scratch.
+
+    Iterates the region-relabel operator from the all-zero labeling to its
+    least fixpoint — the exact region distance d*B (ARD) / hop distance d*
+    (PRD) of every vertex in the *current* residual network, with
+    unreachable vertices at ``d_inf``.  One outer iteration propagates
+    labels one region hop, so the trip count is the region-graph diameter
+    (devices: a handful of cheap relabel programs, no discharge engine
+    runs).
+
+    This is the warm-start label refresh: after ``graph.apply_update``
+    adds residual capacity, previously-kept labels can overestimate true
+    distances arbitrarily far upstream (unsound — trapped excess would
+    never re-activate); exact recomputation is sound *unconditionally*
+    (exact distances are valid labels by definition) and tight, so a warm
+    re-solve starts from the best labeling the network admits.
+    """
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1
+
+    def body(carry):
+        st, _ = carry
+        new = region_relabel(meta, st, ard=ard)
+        return new, (new.d != st.d).any()
+
+    st = state.replace(d=jnp.zeros_like(state.d))
+    st, _ = jax.lax.while_loop(lambda c: c[1], body,
+                               (st, jnp.asarray(True)))
+    return st
 
 
 def gap_new_labels(d, vmask, is_boundary, d_inf, *, cap: int, ard: bool):

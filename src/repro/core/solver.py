@@ -1,0 +1,497 @@
+"""Solver sessions: prepared problem handles, warm-start incremental
+re-solves, and one unified front-end over every solve route.
+
+The paper's target workloads are *sequences* of closely related maxflow
+problems — vision instances whose capacities change a little between
+frames while the region structure stays fixed (Sec. 7; the dynamic-cuts
+line of work in PAPERS.md).  A serving system therefore wants three things
+the one-shot entry points cannot give it:
+
+* **prepared handles** — ``Solver.prepare(problem)`` runs the host-side
+  ``build``/``Layout`` blocking ONCE and keeps the ``GraphMeta`` plus the
+  device-resident ``FlowState``; every subsequent solve and update reuses
+  them;
+* **warm-start re-solves** — ``handle.update(...)`` applies a capacity
+  delta directly on device by reparameterizing the residual network in the
+  Kohli-Torr dynamic-cuts style (``graph.apply_update``): residuals are
+  clamped into the new capacities, clamped overflow returns to vertex
+  excess, uncoverable deficits are cancelled against the t-link with the
+  flow-value offset tracked per handle.  ``handle.solve()`` then continues
+  from the warm preflow through the *same* sweep drivers instead of
+  re-solving from zero;
+* **one front-end** — ``handle.solve()`` dispatches to the host-loop or
+  device-resident driver (``SolverOptions.device_resident``), to the
+  sharded SPMD driver (``mesh=``), and ``Solver.solve_many([...])`` to the
+  shape-bucketed batched driver — all returning the same
+  ``MincutResult``/``SweepStats`` shape, all sharing one compile cache
+  (``Solver.cache_info``).
+
+Label semantics across an update (``SolverOptions.warm_labels``): labels
+must stay valid *lower bounds* on residual distance-to-sink.  Capacity
+*decreases* only remove residual arcs, so kept labels stay valid; any
+residual-capacity *increase* (including the deficit-cancellation t-links)
+can create new residual arcs that invalidate labels arbitrarily far
+upstream — trapped excess parked at ``d_inf`` would never re-activate.
+The default ``"auto"`` policy therefore refreshes labels with
+``labels.global_relabel`` — the exact distance labeling of the updated
+residual network, sound unconditionally and *tight*, computed by a
+handful of cheap relabel programs (no discharge engine runs) — but only
+when an update actually added residual capacity (``apply_update``'s
+``grew`` flag); pure decreases keep their still-valid labels for free.
+``"keep"`` always skips the refresh (caller asserts decrease-only
+updates), ``"reset"`` starts from the cold ``Init`` labels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import batch as _batch
+from repro.core import distributed as _distributed
+from repro.core import graph as _graph
+from repro.core import labels as _labels
+from repro.core import partition as _partition
+from repro.core import sweep as _sweep
+from repro.core.graph import (FlowState, GraphMeta, GraphUpdate, Layout,
+                              Problem, _round_pow2)
+
+
+@dataclass
+class MincutResult:
+    flow_value: int                 # maximum preflow value == mincut cost
+    source_side: np.ndarray         # bool[n] vertex in the source set C
+    stats: _sweep.SweepStats
+    meta: GraphMeta
+    state: FlowState
+    layout: Layout
+
+
+@dataclass(frozen=True)
+class SolverOptions:
+    """One place for every solver knob (a frozen, hashable dataclass).
+
+    Absorbs the previously scattered configuration surface: the
+    ``SweepConfig`` fields (see ``sweep.SweepConfig`` for their meaning),
+    the front-end kwargs ``num_regions``/``check``, and the sharded-route
+    ``exchange`` mode.  Session-only knobs:
+
+    warm_labels — label policy of a warm re-solve after ``update``:
+        ``"auto"`` (default) refresh labels with the exact global relabel
+        (``labels.global_relabel`` — sound for any update, tight, a few
+        cheap device programs) iff the update added residual capacity
+        anywhere, else keep them (capacity removal only raises true
+        distances, so kept labels stay valid); ``"keep"``/``True`` always
+        keep (caller asserts decrease-only updates); ``"reset"``/
+        ``False`` re-initialize to the cold ``Init`` labels.
+    """
+
+    # --- sweep/engine knobs (mirror sweep.SweepConfig) ---
+    method: str = "ard"
+    parallel: bool = True
+    partial_discharge: bool = False
+    use_global_gap: bool = True
+    use_boundary_relabel: bool = False
+    max_sweeps: int | None = None
+    engine_max_iters: int | None = None
+    engine_backend: str = "xla"
+    engine_chunk_iters: int | None = None
+    device_resident: bool = False
+    host_sync_every: int | None = None
+    stats_ring_size: int = 1024
+    # --- session knobs ---
+    num_regions: int = 4
+    check: bool = True
+    warm_labels: bool | str = "auto"
+    # --- sharded-route knobs ---
+    exchange: str = "full"
+
+    def __post_init__(self):
+        assert self.warm_labels in (True, False, "auto", "keep", "reset")
+        assert self.exchange in ("full", "boundary")
+        self.sweep_config()     # delegate knob validation to SweepConfig
+
+    def sweep_config(self) -> _sweep.SweepConfig:
+        """The ``SweepConfig`` view consumed by the sweep drivers."""
+        fields = {f.name for f in dataclasses.fields(_sweep.SweepConfig)}
+        return _sweep.SweepConfig(**{
+            f.name: getattr(self, f.name)
+            for f in dataclasses.fields(self) if f.name in fields})
+
+    @classmethod
+    def from_sweep_config(cls, cfg: _sweep.SweepConfig | None = None,
+                          **session_kw) -> "SolverOptions":
+        """Lift a legacy ``SweepConfig`` (plus front-end kwargs) into
+        session options — the bridge the backward-compat shims use."""
+        kw = dataclasses.asdict(cfg) if cfg is not None else {}
+        kw.update(session_kw)
+        return cls(**kw)
+
+    def _labels_mode(self) -> str:
+        return {True: "keep", False: "reset"}.get(
+            self.warm_labels, self.warm_labels)
+
+
+@dataclass
+class SolverCacheInfo:
+    """Compile-cache accounting of one ``Solver`` session.
+
+    ``hits``/``misses`` count solve/update program invocations served by an
+    already-compiled executable vs ones that traced something new;
+    ``traces`` is the raw trace counter those are derived from (a
+    same-shape re-solve must leave it unchanged).
+    """
+
+    hits: int = 0
+    misses: int = 0
+    traces: int = 0
+
+
+def _finish(meta: GraphMeta, state0: FlowState, state: FlowState,
+            layout: Layout, stats: _sweep.SweepStats, check: bool,
+            offset: int = 0) -> MincutResult:
+    """Extract the cut and package a result (shared by every route).
+
+    ``offset`` — accumulated flow-value offset of the handle's
+    deficit-cancelling reparameterizations: the solved ``flow_to_t`` of
+    the reparameterized network exceeds the true maxflow by exactly this
+    constant (see ``graph.apply_update``), and the cut partition is
+    unchanged, so subtracting it here restores the true value.
+    ``check`` verifies that the cut cost in the (current, un-reparameter-
+    ized) initial network equals that value — an extra device fetch plus
+    an O(n*E) host reduction, so serving paths may disable it.
+    """
+    sink_side = _sweep.extract_cut(meta, state)
+    flow = int(state.flow_to_t) - offset
+    if check:
+        cost = int(_sweep.cut_value(meta, state0, sink_side))
+        assert cost == flow, (
+            f"internal error: cut cost {cost} != max preflow {flow}")
+    source_flat = ~layout.to_flat(np.asarray(sink_side))
+    return MincutResult(flow_value=flow, source_side=source_flat,
+                        stats=stats, meta=meta, state=state, layout=layout)
+
+
+def _pad_i32(a: np.ndarray, size: int) -> jnp.ndarray:
+    out = np.zeros(size, np.int32)
+    out[: len(a)] = a
+    return jnp.asarray(out)
+
+
+class ProblemHandle:
+    """A prepared problem inside a ``Solver`` session.
+
+    Holds the one-time ``build`` artifacts (``meta``/``layout``), the
+    device-resident current state, and the initial network of the
+    *current* problem (``state0``, maintained incrementally across
+    updates) used by the cut-cost check.  After a solve the handle is
+    *warm*: ``update`` reparameterizes the solved preflow in place and the
+    next ``solve`` continues from it.
+    """
+
+    def __init__(self, solver: "Solver", problem: Problem,
+                 part: np.ndarray, meta: GraphMeta, state: FlowState,
+                 layout: Layout):
+        self.solver = solver
+        self.problem = problem
+        self.part = part
+        self.meta = meta
+        self.layout = layout
+        self.state = state            # current device state (residuals, d)
+        self.state0 = state           # initial network of current problem
+        self.warm = False             # a solved preflow is resident
+        self._dirty = False           # updates applied since the last solve
+        self._grew = jnp.zeros((), bool)   # any residual capacity increase
+        #                                    since the last solve (device)
+        self._flow_offset = jnp.zeros((), jnp.int32)
+
+    # -- update ------------------------------------------------------------
+
+    def update(self, *, cap_fwd=None, cap_bwd=None, excess=None,
+               sink_cap=None, arcs=None) -> "ProblemHandle":
+        """Apply a capacity/terminal delta to the prepared problem.
+
+        ``cap_fwd``/``cap_bwd`` — new ABSOLUTE edge capacities: full
+        ``[m]`` arrays, or, with ``arcs`` (edge indices into
+        ``problem.edges``), values for just those edges.  ``excess``/
+        ``sink_cap`` — new absolute terminal arrays ``[n]``.  Topology is
+        fixed per handle (that is the point of preparing); new edges need
+        a fresh ``prepare``.
+
+        The delta lands on device through one jitted scatter program
+        (``graph.apply_update``) with the changed-entry count padded to a
+        power of two, so steady-state perturbations of similar size reuse
+        one compiled update.  Statistics semantics: ``SweepStats`` always
+        describes one solve call, so counters "reset" naturally on the
+        next ``solve``; ``flow_to_t`` (and the flow-offset bookkeeping)
+        carry across updates.  Returns ``self`` for chaining.
+        """
+        p = self.problem
+        m, n = len(p.edges), p.num_vertices
+        if arcs is not None:
+            idx = np.atleast_1d(np.asarray(arcs, np.int64))
+            assert idx.ndim == 1
+            if len(idx):
+                assert idx.min() >= 0 and idx.max() < m, "arc index range"
+            new_fwd, new_bwd = p.cap_fwd.copy(), p.cap_bwd.copy()
+            if cap_fwd is not None:
+                new_fwd[idx] = np.asarray(cap_fwd, np.int32)
+            if cap_bwd is not None:
+                new_bwd[idx] = np.asarray(cap_bwd, np.int32)
+        else:
+            # np.array (not asarray): the arrays become the handle's new
+            # baseline, so aliasing the caller's buffer would make a later
+            # mutate-and-update diff against itself and drop the edit
+            new_fwd = p.cap_fwd if cap_fwd is None \
+                else np.array(cap_fwd, np.int32)
+            new_bwd = p.cap_bwd if cap_bwd is None \
+                else np.array(cap_bwd, np.int32)
+        new_exc = p.excess if excess is None else np.array(excess, np.int32)
+        new_snk = p.sink_cap if sink_cap is None \
+            else np.array(sink_cap, np.int32)
+        assert new_fwd.shape == (m,) and new_bwd.shape == (m,)
+        assert new_exc.shape == (n,) and new_snk.shape == (n,)
+        assert (new_fwd >= 0).all() and (new_bwd >= 0).all()
+        assert (new_exc >= 0).all() and (new_snk >= 0).all()
+
+        d_fwd = new_fwd.astype(np.int64) - p.cap_fwd
+        d_bwd = new_bwd.astype(np.int64) - p.cap_bwd
+        changed = np.nonzero((d_fwd != 0) | (d_bwd != 0))[0]
+        d_snk = new_snk.astype(np.int64) - p.sink_cap
+        d_exc = new_exc.astype(np.int64) - p.excess
+        tchanged = np.nonzero((d_snk != 0) | (d_exc != 0))[0]
+        lay = self.layout
+        V = self.meta.region_size
+        tflat = lay.part[tchanged] * V + lay.local_id[tchanged]
+
+        j = _round_pow2(max(1, len(changed)))
+        tp = _round_pow2(max(1, len(tchanged)))
+        upd = GraphUpdate(
+            arc_u=_pad_i32(lay.edge_arc_u[changed], j),
+            arc_v=_pad_i32(lay.edge_arc_v[changed], j),
+            vtx_u=_pad_i32(lay.edge_vtx_u[changed], j),
+            vtx_v=_pad_i32(lay.edge_vtx_v[changed], j),
+            d_cap_fwd=_pad_i32(d_fwd[changed], j),
+            d_cap_bwd=_pad_i32(d_bwd[changed], j),
+            t_vtx=_pad_i32(tflat, tp),
+            d_sink=_pad_i32(d_snk[tchanged], tp),
+            d_excess=_pad_i32(d_exc[tchanged], tp))
+
+        before = self.solver._trace_total()
+        self.state, self.state0, grew, doff = _graph.apply_update(
+            self.state, self.state0, upd)
+        self.solver._note(before)
+        self._dirty = True
+        self._grew = self._grew | grew
+        self._flow_offset = self._flow_offset + doff
+        self.problem = dataclasses.replace(
+            p, cap_fwd=new_fwd, cap_bwd=new_bwd, excess=new_exc,
+            sink_cap=new_snk)
+        return self
+
+    def reset(self) -> "ProblemHandle":
+        """Forget the solved preflow: the next solve runs cold (from the
+        current problem's initial network)."""
+        self.state = self.state0
+        self.warm = False
+        self._dirty = False
+        self._grew = jnp.zeros((), bool)
+        self._flow_offset = jnp.zeros((), jnp.int32)
+        return self
+
+    # -- solve -------------------------------------------------------------
+
+    def _entry_state(self) -> FlowState:
+        """The state a solve starts from, with the label policy applied.
+
+        ``"auto"`` refreshes labels (exact global relabel) only when an
+        update actually ADDED residual capacity somewhere
+        (``apply_update``'s ``grew`` flag, one scalar fetch): pure
+        decreases only remove residual arcs, so the kept labels remain
+        valid lower bounds and the relabel fixpoint would be wasted work.
+        """
+        if not self.warm:
+            return _graph.init_labels(self.meta, self.state)
+        mode = self.solver.options._labels_mode()
+        st = self.state
+        if mode == "reset":
+            return st.replace(d=jnp.zeros_like(st.d))
+        if mode == "auto" and self._dirty and bool(self._grew):
+            return _labels.global_relabel(
+                self.meta, st, self.solver.options.method == "ard")
+        return st                     # "keep", or labels provably valid
+
+    def solve(self, *, mesh=None, axes=("regions",)) -> MincutResult:
+        """Solve (or warm re-solve) the prepared problem.
+
+        Routes on the session options: host-loop or device-resident sweep
+        driver by default, the sharded SPMD driver when a ``mesh`` is
+        given.  Cold solves start from the paper's ``Init``; warm solves
+        continue from the resident preflow with labels per
+        ``SolverOptions.warm_labels``.
+        """
+        opts = self.solver.options
+        cfg = opts.sweep_config()
+        before = self.solver._trace_total()  # before _entry_state: the
+        #                 warm-labels relabel program's trace must count
+        st_in = self._entry_state()
+        if mesh is not None:
+            st, sweeps, syncs = _distributed.solve_sharded(
+                self.meta, st_in, mesh, cfg, axes=tuple(axes),
+                exchange=opts.exchange, return_stats=True)
+            _pb, msg_bytes = _sweep._page_and_msg_bytes(self.meta, st)
+            stats = _sweep.SweepStats(
+                sweeps=sweeps, engine_iters=None, engine_launches=None,
+                host_syncs=syncs, boundary_bytes=sweeps * msg_bytes,
+                page_bytes=None, regions_discharged=None)
+        else:
+            st, stats = _sweep.solve(self.meta, st_in, cfg, warm=True)
+        self.solver._note(before)
+        self.state = st
+        self.warm = True
+        self._dirty = False
+        self._grew = jnp.zeros((), bool)
+        return _finish(self.meta, self.state0, st, self.layout, stats,
+                       opts.check, offset=int(self._flow_offset))
+
+
+class Solver:
+    """A solver session: one ``SolverOptions``, one compile cache, every
+    route.
+
+    ``prepare`` a problem once, then ``solve``/``update``/``solve`` its
+    handle as capacities evolve; hand a fleet of handles (or raw problems)
+    to ``solve_many`` for the shape-bucketed batched driver; pass
+    ``mesh=`` to a handle's solve for the sharded SPMD driver.  All routes
+    return the same ``MincutResult`` shape and share the session's
+    compiled programs — ``cache_info()`` reports hits/misses, where a miss
+    is an invocation that actually traced a device program (sweep, batch,
+    sharded-sweep or update tracers combined).
+    """
+
+    def __init__(self, options: SolverOptions | None = None, **overrides):
+        if options is None:
+            options = SolverOptions(**overrides)
+        elif overrides:
+            options = dataclasses.replace(options, **overrides)
+        self.options = options
+        self.cache = SolverCacheInfo()
+        self.last_batch_stats: list[_batch.BatchStats] = []
+
+    # -- compile-cache accounting -----------------------------------------
+
+    @staticmethod
+    def _trace_total() -> int:
+        return (_sweep.trace_count() + _batch.trace_count()
+                + _graph.update_trace_count() + _labels.trace_count()
+                + _distributed.trace_count())
+
+    def _note(self, before: int) -> None:
+        now = self._trace_total()
+        if now > before:
+            self.cache.misses += 1
+        else:
+            self.cache.hits += 1
+        self.cache.traces = now
+
+    def cache_info(self) -> SolverCacheInfo:
+        self.cache.traces = self._trace_total()
+        return dataclasses.replace(self.cache)   # a snapshot, not an alias
+
+    # -- the front-end -----------------------------------------------------
+
+    def prepare(self, problem: Problem,
+                part: np.ndarray | None = None) -> ProblemHandle:
+        """Region-block a problem once; returns its session handle.
+
+        ``part`` — region id per vertex; defaults to node-number slicing
+        into ``options.num_regions`` regions (the paper's fallback
+        partitioner, as before).
+        """
+        if part is None:
+            part = _partition.block_partition(problem.num_vertices,
+                                              self.options.num_regions)
+        part = np.asarray(part)
+        meta, state, layout = _graph.build(problem, part)
+        return ProblemHandle(self, problem, part, meta, state, layout)
+
+    def solve(self, problem: Problem, part: np.ndarray | None = None, *,
+              mesh=None) -> MincutResult:
+        """One-shot convenience: ``prepare(problem, part).solve()``."""
+        return self.prepare(problem, part).solve(mesh=mesh)
+
+    def solve_many(self, items, parts=None) -> list[MincutResult]:
+        """Solve a fleet through the shape-bucketed batched driver.
+
+        ``items`` — ``ProblemHandle``s of this session and/or raw
+        ``Problem``s (prepared on the fly, ``parts[i]`` honored).  Handles
+        enter with their current state — so previously-solved, updated
+        handles ride the batched driver *warm* — and leave warm, exactly
+        as if solved individually.  Per-instance results are bit-identical
+        to ``handle.solve()`` on the same state; ``engine_launches``/
+        ``host_syncs`` in the returned stats are global to each batch
+        (``SweepStats.scope == "batch"``).
+        """
+        cfg = self.options.sweep_config()
+        if not cfg.parallel or cfg.use_boundary_relabel:
+            raise ValueError(
+                "solve_many runs parallel sweeps without the "
+                "boundary-relabel heuristic; use handle.solve() for those")
+        handles: list[ProblemHandle] = []
+        for i, it in enumerate(items):
+            if isinstance(it, ProblemHandle):
+                if it.solver is not self:
+                    raise ValueError("handle belongs to another Solver "
+                                     "session")
+                handles.append(it)
+            else:
+                part = parts[i] if parts is not None else None
+                handles.append(self.prepare(it, part))
+
+        # trace window opens before the entry states: a warm handle's
+        # label-refresh program must be attributed to this invocation
+        before = self._trace_total()
+        builds = [(i, h.meta, h._entry_state(), h.layout, h.state0)
+                  for i, h in enumerate(handles)]
+        packs = _graph.pack_built(builds)
+        results: list[MincutResult | None] = [None] * len(handles)
+        self.last_batch_stats = []
+        for packed in packs:
+            bstate, bstats = _batch.solve_batch(packed, cfg)
+            self._note(before)
+            before = self._trace_total()
+            self.last_batch_stats.append(bstats)
+            for b, idx in enumerate(packed.indices):
+                h = handles[idx]
+                meta = h.meta
+                K, V, E = (meta.num_regions, meta.region_size,
+                           meta.max_degree)
+                st = h.state0.replace(
+                    cf=bstate.cf[b, :K, :V, :E],
+                    sink_cf=bstate.sink_cf[b, :K, :V],
+                    excess=bstate.excess[b, :K, :V],
+                    d=bstate.d[b, :K, :V],
+                    flow_to_t=bstate.flow_to_t[b])
+                sweeps = int(bstats.sweeps[b])
+                page_bytes, msg_bytes = _sweep._page_and_msg_bytes(
+                    meta, h.state0)
+                stats = _sweep.SweepStats(
+                    sweeps=sweeps,
+                    engine_iters=int(bstats.engine_iters[b]),
+                    engine_launches=bstats.engine_launches,
+                    host_syncs=bstats.host_syncs,
+                    boundary_bytes=sweeps * msg_bytes,
+                    page_bytes=sweeps * meta.num_regions * page_bytes,
+                    regions_discharged=sweeps * meta.num_regions,
+                    scope="batch")
+                h.state = st
+                h.warm = True
+                h._dirty = False
+                h._grew = jnp.zeros((), bool)
+                results[idx] = _finish(
+                    meta, h.state0, st, h.layout, stats, self.options.check,
+                    offset=int(h._flow_offset))
+        return results

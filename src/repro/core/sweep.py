@@ -54,6 +54,16 @@ from repro.core.prd import prd_discharge_batched, prd_discharge_one
 
 _I32 = jnp.int32
 
+# bumped once per trace of a jitted sweep program (one-sweep bodies and the
+# device-resident multi-sweep driver) — the observable behind the session
+# front-end's ``Solver.cache_info``: a re-solve on a known shape must not
+# bump it.
+_TRACE_COUNT = 0
+
+
+def trace_count() -> int:
+    return _TRACE_COUNT
+
 
 @dataclass(frozen=True)
 class SweepConfig:
@@ -114,21 +124,34 @@ class SweepConfig:
 
 @dataclass
 class SweepStats:
+    """Per-solve accounting in the paper's I/O currency.
+
+    ``scope`` says what the launch/sync counters cover: ``"instance"`` —
+    every field is about this one solve; ``"batch"`` — the result came out
+    of a batched multi-instance solve, so ``engine_launches``/``host_syncs``
+    are GLOBAL to the whole batch that shared the launch/sync stream (the
+    per-instance split would be fiction), while ``sweeps``/``engine_iters``
+    and the byte counters remain exact per-instance values.  Fields typed
+    ``int | None`` are ``None`` on routes that cannot observe them (the
+    sharded driver does not count engine dispatches).
+    """
+
     sweeps: int = 0
-    engine_iters: int = 0
-    engine_launches: int = 0     # compute-program dispatches (2/iter unfused;
-    #                              fused: 1/chunk-trip pallas — batched over
-    #                              all regions of a parallel sweep — 1/iter
-    #                              xla)
+    engine_iters: int | None = 0
+    engine_launches: int | None = 0   # compute-program dispatches (2/iter
+    #                              unfused; fused: 1/chunk-trip pallas —
+    #                              batched over all regions of a parallel
+    #                              sweep — 1/iter xla)
     host_syncs: int = 0          # device->host transfers of the solve loop
     #                              (host loop: 1 + 1/sweep; device-resident:
     #                              1 per host_sync_every sweeps, 1 total by
     #                              default)
     boundary_bytes: int = 0      # flow+label messages over the cut (paper: I/O)
-    page_bytes: int = 0          # streaming-mode region load/store bytes
-    regions_discharged: int = 0
+    page_bytes: int | None = 0   # streaming-mode region load/store bytes
+    regions_discharged: int | None = 0
     flow_curve: list = dataclasses.field(default_factory=list)
     active_curve: list = dataclasses.field(default_factory=list)
+    scope: str = "instance"      # "instance" | "batch" (see class docstring)
 
 
 def _d_inf(meta: GraphMeta, cfg: SweepConfig) -> int:
@@ -191,6 +214,8 @@ def _apply_cross_flow(state: FlowState, out_push: jax.Array,
 def parallel_sweep(meta: GraphMeta, state: FlowState, cfg: SweepConfig,
                    sweep_idx: jax.Array):
     """One sweep of Alg. 2: concurrent discharges + label/flow fusion."""
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1
     ghost_d = gather_ghost_labels(state)
     stage_cap = jnp.where(
         jnp.asarray(cfg.partial_discharge),
@@ -222,6 +247,8 @@ def sequential_sweep(meta: GraphMeta, state: FlowState, cfg: SweepConfig,
     discharge engine exits in O(1) for them and the page-I/O accounting in
     ``solve`` only counts discharged regions.
     """
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1
     K, V, E = state.cf.shape
     d_inf = _d_inf(meta, cfg)
     stage_cap_all = jnp.where(
@@ -326,6 +353,8 @@ def _run_device_sweeps(meta: GraphMeta, cfg: SweepConfig, state: FlowState,
     fusion → heuristics → convergence count), identical math to the
     host-loop driver, so the final state and every counter are bit-equal.
     """
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1
     R = cfg.stats_ring_size
 
     def cond(c):
@@ -398,8 +427,18 @@ def _solve_device_resident(meta: GraphMeta, state: FlowState,
     return state, stats
 
 
-def solve(meta: GraphMeta, state: FlowState, cfg: SweepConfig | None = None):
+def solve(meta: GraphMeta, state: FlowState, cfg: SweepConfig | None = None,
+          *, warm: bool = False):
     """Run sweeps until no active vertex remains (maximum preflow reached).
+
+    ``warm`` — continue from the given state *as is*: its preflow (``cf``/
+    ``excess``/``sink_cf``/``flow_to_t``) and labels are taken as the
+    starting point, so a re-solve after a warm-start update
+    (``graph.apply_update``) picks up from the previous optimum instead of
+    from zero.  The caller owns label validity (the session front-end's
+    ``warm_labels`` policy).  With ``warm=False`` (the cold entry) labels
+    are (re-)initialized to the paper's ``Init`` — idempotent with
+    ``graph.init_labels``, so pre-initialized callers are unaffected.
 
     Returns (state, SweepStats).  Two drivers, bit-identical results:
 
@@ -412,6 +451,8 @@ def solve(meta: GraphMeta, state: FlowState, cfg: SweepConfig | None = None):
       ``cfg.host_sync_every`` sweeps (default: once per solve).
     """
     cfg = cfg or SweepConfig()
+    if not warm:
+        state = state.replace(d=jnp.zeros_like(state.d))
     if cfg.device_resident:
         return _solve_device_resident(meta, state, cfg)
     stats = SweepStats()

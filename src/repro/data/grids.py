@@ -75,6 +75,46 @@ def segmentation_grid(height: int, width: int, *, seed: int = 0,
                    cap_bwd=cap.copy(), excess=excess, sink_cap=sink_cap)
 
 
+def segmentation_seeds_grid(height: int, width: int, *, seed: int = 0,
+                            smoothness: int = 20,
+                            seed_strength: int = 200) -> Problem:
+    """Interactive-segmentation instance: SPARSE scribble terminals.
+
+    Unlike ``segmentation_grid`` (dense unaries — every pixel has a
+    terminal link, so every region touches the sink and solves are very
+    local), this is the paper's interactive BJ01 shape: a foreground
+    scribble (small disk at the center) carries source mass, a background
+    scribble (the image border frame) carries sink capacity, and ALL flow
+    must travel across the 4-connected grid between them — crossing many
+    region boundaries, which is what makes sweep counts (and warm-start
+    re-solves) interesting.
+    """
+    rng = np.random.RandomState(seed)
+    n = height * width
+    yy, xx = np.mgrid[:height, :width]
+    cy, cx, r = height / 2, width / 2, min(height, width) / 3
+    fg_seed = ((yy - cy) ** 2 + (xx - cx) ** 2 < (r / 3) ** 2)
+    bg_seed = (yy < 2) | (yy >= height - 2) | (xx < 2) | (xx >= width - 2)
+    exc2d = np.where(fg_seed & ~bg_seed,
+                     seed_strength + rng.randint(0, 15, size=(height, width)),
+                     0)
+    snk2d = np.where(bg_seed,
+                     seed_strength + rng.randint(0, 15, size=(height, width)),
+                     0)
+    vid = np.arange(n).reshape(height, width)
+    edges = []
+    for dy, dx in [(0, 1), (1, 0)]:
+        a = vid[: height - dy or None, : width - dx or None]
+        b = vid[dy:, dx:]
+        edges.append(np.stack([a.reshape(-1), b.reshape(-1)], axis=1))
+    edges = np.concatenate(edges, axis=0).astype(np.int64)
+    cap = rng.randint(1, smoothness + 1, size=len(edges)).astype(np.int32)
+    return Problem(num_vertices=n, edges=edges, cap_fwd=cap.copy(),
+                   cap_bwd=cap.copy(),
+                   excess=exc2d.reshape(-1).astype(np.int32),
+                   sink_cap=snk2d.reshape(-1).astype(np.int32))
+
+
 def random_sparse(n: int, m: int, *, cap_mag: int = 100, term_mag: int = 50,
                   seed: int = 0) -> Problem:
     """Random sparse instance (property-test fodder)."""

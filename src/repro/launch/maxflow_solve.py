@@ -19,6 +19,17 @@ Each HxW entry becomes one synthetic instance (seeds --seed, --seed+1,
 ...); per-instance results are bit-identical to single solves.  DIMACS
 ``.max`` files (see repro.data.dimacs) can be mixed in by path:
 ``--batch instance.max,64x64``.
+
+Warm-start serving mode re-solves the prepared instance N times through
+ONE ``Solver`` session, perturbing a P-fraction of the edge capacities
+before each re-solve (``handle.update`` reparameterizes the residual
+network on device; the solve continues from the warm preflow):
+
+    PYTHONPATH=src python -m repro.launch.maxflow_solve \
+        --height 64 --width 64 --regions 4x4 --resolve 5 --perturb 0.01
+
+Prints per-re-solve sweeps/launches and the session's compile-cache
+hits/misses (steady state: zero retraces per cycle).
 """
 
 from __future__ import annotations
@@ -69,14 +80,21 @@ def main():
                     help="skip the host-side cut-cost == flow assertion "
                          "(an extra device fetch + O(n*E) host reduction "
                          "per solve) — the serving-path setting")
+    ap.add_argument("--resolve", type=int, default=0, metavar="N",
+                    help="warm-start serving mode: N incremental re-solves "
+                         "through one Solver session, perturbing a "
+                         "--perturb fraction of edge capacities before "
+                         "each (handle.update + warm handle.solve)")
+    ap.add_argument("--perturb", type=float, default=0.01, metavar="P",
+                    help="fraction of edges re-randomized per re-solve "
+                         "(default 0.01)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     import jax
     import jax.numpy as jnp
 
-    from repro.core import (SweepConfig, build, cut_value, extract_cut,
-                            grid_partition, init_labels, solve_mincut)
+    from repro.core import SweepConfig, grid_partition
     from repro.data.grids import synthetic_grid
 
     ry, rx = (int(v) for v in args.regions.split("x"))
@@ -87,6 +105,9 @@ def main():
                       host_sync_every=args.host_sync_every)
 
     if args.batch:
+        if args.resolve:
+            ap.error("--resolve works on a single prepared instance; "
+                     "it cannot be combined with --batch")
         import re
         from pathlib import Path
 
@@ -132,37 +153,52 @@ def main():
                           strength=args.strength, seed=args.seed)
     part = grid_partition((args.height, args.width), (ry, rx))
 
-    t0 = time.time()
-    if args.sharded:
-        from repro.core.distributed import solve_sharded
-        from repro.core.graph import build as build_graph
+    # one Solver session for the cold solve and every warm re-solve: the
+    # build/Layout and every compiled program are reused across the loop
+    from repro.core import Solver, SolverOptions
 
-        meta, state, layout = build_graph(prob, part)
-        state0 = state
-        state = init_labels(meta, state)
+    solver = Solver(SolverOptions.from_sweep_config(
+        cfg, num_regions=ry * rx, check=not args.no_check))
+    handle = solver.prepare(prob, part)
+
+    mesh = None
+    if args.sharded:
         n_dev = len(jax.devices())
-        assert meta.num_regions % n_dev == 0, \
-            f"K={meta.num_regions} must divide over {n_dev} devices"
+        assert handle.meta.num_regions % n_dev == 0, \
+            f"K={handle.meta.num_regions} must divide over {n_dev} devices"
         mesh = jax.make_mesh((n_dev,), ("regions",))
-        st, sweeps = solve_sharded(meta, state, mesh, cfg)
-        flow = int(st.flow_to_t)
-        cut = extract_cut(meta, st)
-        cost = int(cut_value(meta, state0, cut))
-        print(f"[maxflow] sharded {args.method} on {n_dev} devices: "
-              f"flow={flow} cut={cost} sweeps={sweeps} "
-              f"t={time.time()-t0:.2f}s")
-        assert flow == cost
-    else:
-        res = solve_mincut(prob, part=part, config=cfg,
-                           check=not args.no_check)
-        print(f"[maxflow] {args.method} parallel={cfg.parallel} "
-              f"device_resident={cfg.device_resident}: "
-              f"flow={res.flow_value} sweeps={res.stats.sweeps} "
+
+    t0 = time.time()
+    res = handle.solve(mesh=mesh)
+    route = (f"sharded x{len(jax.devices())}" if args.sharded
+             else f"device_resident={cfg.device_resident}")
+    print(f"[maxflow] {args.method} parallel={cfg.parallel} {route}: "
+          f"flow={res.flow_value} sweeps={res.stats.sweeps} "
+          f"launches={res.stats.engine_launches} "
+          f"host_syncs={res.stats.host_syncs} "
+          f"boundary_bytes={res.stats.boundary_bytes} "
+          f"page_bytes={res.stats.page_bytes} "
+          f"t={time.time()-t0:.2f}s")
+
+    rng = np.random.RandomState(args.seed + 1)
+    m = len(handle.problem.edges)
+    for i in range(args.resolve):
+        k = max(1, int(round(args.perturb * m)))
+        idx = rng.choice(m, size=k, replace=False)
+        hi = 2 * args.strength + 1
+        handle.update(
+            arcs=idx,
+            cap_fwd=rng.randint(0, hi, size=k).astype(np.int32),
+            cap_bwd=rng.randint(0, hi, size=k).astype(np.int32))
+        t0 = time.time()
+        res = handle.solve(mesh=mesh)
+        info = solver.cache_info()
+        print(f"[maxflow] re-solve {i + 1}/{args.resolve} "
+              f"(perturbed {k}/{m} edges): flow={res.flow_value} "
+              f"sweeps={res.stats.sweeps} "
               f"launches={res.stats.engine_launches} "
-              f"host_syncs={res.stats.host_syncs} "
-              f"boundary_bytes={res.stats.boundary_bytes} "
-              f"page_bytes={res.stats.page_bytes} "
-              f"t={time.time()-t0:.2f}s")
+              f"host_syncs={res.stats.host_syncs} t={time.time()-t0:.2f}s "
+              f"cache_hits={info.hits} cache_misses={info.misses}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,117 @@
+"""Backward-compat shims: the legacy one-shot entry points are thin
+wrappers over the ``Solver`` session and must behave BIT-IDENTICALLY to
+the pre-session (PR-4) implementation — same flow, labels, cut and stats —
+so downstream callers and all existing tests run unmodified.
+
+The PR-4 reference behavior is reconstructed here from the primitives the
+old front-ends composed (``build`` + ``init_labels`` + ``sweep.solve`` +
+``extract_cut``/``cut_value``; ``pack_instances`` + ``batch.solve_batch``)
+rather than from a pinned snapshot — those primitives are themselves
+covered by the driver test suites.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (BatchedSolver, SweepConfig, build, cut_value,
+                        extract_cut, grid_partition, init_labels,
+                        pack_instances, solve, solve_mincut,
+                        solve_mincut_batch)
+from repro.core import batch as batch_mod
+from repro.data.grids import random_sparse, synthetic_grid
+
+
+def _instance(g=10, seed=0):
+    p = synthetic_grid(g, g, connectivity=8, strength=150, seed=seed)
+    return p, grid_partition((g, g), (2, 2))
+
+
+@pytest.mark.parametrize("cfg", [SweepConfig(method="ard"),
+                                 SweepConfig(method="prd"),
+                                 SweepConfig(device_resident=True)],
+                         ids=["ard", "prd", "ard-dr"])
+def test_solve_mincut_matches_pr4_composition(cfg):
+    """solve_mincut == the old build/init_labels/sweep.solve/extract_cut
+    pipeline, bit for bit (flow, labels, residuals, cut, stats)."""
+    p, part = _instance()
+    # --- the PR-4 front-end, reconstructed ---
+    meta, state, layout = build(p, np.asarray(part))
+    state0 = state
+    st, stats = solve(meta, init_labels(meta, state), cfg)
+    sink_side = extract_cut(meta, st)
+    flow = int(st.flow_to_t)
+    assert int(cut_value(meta, state0, sink_side)) == flow
+    source_ref = ~layout.to_flat(np.asarray(sink_side))
+    # --- the shim ---
+    res = solve_mincut(p, part=part, config=cfg)
+    assert res.flow_value == flow
+    np.testing.assert_array_equal(res.source_side, source_ref)
+    np.testing.assert_array_equal(np.asarray(res.state.d), np.asarray(st.d))
+    np.testing.assert_array_equal(np.asarray(res.state.cf),
+                                  np.asarray(st.cf))
+    assert (res.stats.sweeps, res.stats.engine_iters,
+            res.stats.engine_launches, res.stats.host_syncs,
+            res.stats.boundary_bytes, res.stats.page_bytes,
+            res.stats.regions_discharged) == \
+           (stats.sweeps, stats.engine_iters, stats.engine_launches,
+            stats.host_syncs, stats.boundary_bytes, stats.page_bytes,
+            stats.regions_discharged)
+    assert res.stats.flow_curve == stats.flow_curve
+    assert res.stats.active_curve == stats.active_curve
+    assert res.stats.scope == "instance"
+
+
+def test_batched_shims_match_pr4_composition():
+    """solve_mincut_batch/BatchedSolver == pack_instances + solve_batch,
+    per instance, with the batched stats globals surfaced unchanged (now
+    explicitly marked scope="batch")."""
+    probs = [synthetic_grid(8, 8, seed=1), synthetic_grid(8, 8, seed=2),
+             random_sparse(14, 28, seed=3)]
+    cfg = SweepConfig(method="ard")
+    # --- the PR-4 composition ---
+    packs = pack_instances(probs, num_regions=4)
+    ref = {}
+    for packed in packs:
+        bstate, bstats = batch_mod.solve_batch(packed, cfg)
+        for b, idx in enumerate(packed.indices):
+            meta = packed.metas[b]
+            K, V, E = meta.num_regions, meta.region_size, meta.max_degree
+            ref[idx] = (int(bstate.flow_to_t[b]),
+                        np.asarray(bstate.d[b, :K, :V]),
+                        int(bstats.sweeps[b]), int(bstats.engine_iters[b]),
+                        bstats.engine_launches, bstats.host_syncs)
+    # --- the shims ---
+    solver = BatchedSolver(cfg, num_regions=4)
+    res = solver.solve(probs)
+    res2 = solve_mincut_batch(probs, num_regions=4, config=cfg)
+    for i, r in enumerate(res):
+        flow, d, sweeps, iters, launches, syncs = ref[i]
+        assert r.flow_value == flow == res2[i].flow_value
+        np.testing.assert_array_equal(np.asarray(r.state.d), d)
+        assert r.stats.sweeps == sweeps
+        assert r.stats.engine_iters == iters
+        assert r.stats.engine_launches == launches   # the batch's global
+        assert r.stats.host_syncs == syncs           # counters, verbatim
+        assert r.stats.scope == "batch"
+    assert len(solver.last_batch_stats) == len(packs)
+
+
+def test_batched_solver_legacy_surface():
+    """The knobs and failure modes of the old BatchedSolver survive."""
+    with pytest.raises(ValueError):
+        BatchedSolver(SweepConfig(parallel=False))
+    with pytest.raises(ValueError):
+        BatchedSolver(SweepConfig(use_boundary_relabel=True))
+    solver = BatchedSolver(num_regions=4, check=True)
+    solver.solve([synthetic_grid(8, 8, seed=5)])
+    info = solver.cache_info()
+    assert info.misses >= 0 and info.hits >= 0
+    solver.solve([synthetic_grid(8, 8, seed=6)])
+    assert solver.cache_info().hits >= 1
+
+
+def test_legacy_import_surface():
+    """Names downstream code imports keep resolving."""
+    from repro.core.api import (BatchCacheInfo, MincutResult,  # noqa: F401
+                                solve_mincut as _sm)
+    from repro.core import MincutResult as _mr                 # noqa: F401
