@@ -11,11 +11,20 @@ Public surface:
   solve_mincut_batch, BatchedSolver,
   pack_instances                            — shape-bucketed batched solver
   solve_sharded, make_sharded_sweep        — shard_map distributed solver
+  RegionExecutor, Capabilities,
+  UnsupportedFeatureError                   — the region-executor interface
+                                              every route drives (executor
+                                              instances: LocalExecutor,
+                                              BatchedExecutor,
+                                              ShardedExecutor)
   region_reduction                          — Alg. 5 preprocessing
 """
 
 from repro.core.api import (BatchCacheInfo, BatchedSolver, MincutResult,
                             solve_mincut, solve_mincut_batch)
+from repro.core.executor import (BatchedExecutor, Capabilities,
+                                 LocalExecutor, RegionExecutor,
+                                 ShardedExecutor, UnsupportedFeatureError)
 from repro.core.graph import (BatchMeta, BatchState, FlowState, GraphMeta,
                               GraphUpdate, Layout, PackedBatch, Problem,
                               apply_update, bucket_shape_for, build,
@@ -27,10 +36,14 @@ from repro.core.solver import (ProblemHandle, Solver, SolverCacheInfo,
 from repro.core.sweep import SweepConfig, SweepStats, cut_value, extract_cut, solve
 
 __all__ = [
-    "BatchCacheInfo", "BatchMeta", "BatchState", "BatchedSolver",
-    "FlowState", "GraphMeta", "GraphUpdate", "Layout", "MincutResult",
-    "PackedBatch", "Problem", "ProblemHandle", "Solver", "SolverCacheInfo",
-    "SolverOptions", "SweepConfig", "SweepStats", "apply_update",
+    "BatchCacheInfo", "BatchMeta", "BatchState", "BatchedExecutor",
+    "BatchedSolver", "Capabilities",
+    "FlowState", "GraphMeta", "GraphUpdate", "Layout", "LocalExecutor",
+    "MincutResult",
+    "PackedBatch", "Problem", "ProblemHandle", "RegionExecutor",
+    "ShardedExecutor", "Solver", "SolverCacheInfo",
+    "SolverOptions", "SweepConfig", "SweepStats",
+    "UnsupportedFeatureError", "apply_update",
     "bfs_partition", "block_partition", "bucket_shape_for",
     "build", "cut_value", "extract_cut", "grid_partition", "init_labels",
     "pack_built", "pack_instances",

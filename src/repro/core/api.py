@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core import executor as _executor
 from repro.core import sweep as _sweep
 from repro.core.graph import Problem
 from repro.core.solver import (MincutResult, ProblemHandle, Solver,
@@ -76,11 +77,9 @@ class BatchedSolver:
         self.config = config or _sweep.SweepConfig()
         self._solver = Solver(SolverOptions.from_sweep_config(
             self.config, num_regions=num_regions, check=check))
-        # fail fast on configurations the batched driver does not take
-        if not self.config.parallel or self.config.use_boundary_relabel:
-            raise ValueError(
-                "BatchedSolver runs parallel sweeps without the "
-                "boundary-relabel heuristic; use solve_mincut for those")
+        # fail fast on configurations the batched executor does not take
+        # (UnsupportedFeatureError is a ValueError, as this raise always was)
+        _executor.BatchedExecutor.validate(self.config)
         self.num_regions = num_regions
         self.check = check
 

@@ -22,10 +22,11 @@ leading instance axis B:
   ``sweep.solve`` on the unpacked problem (asserted in
   tests/test_batch.py).
 
-Compilation is keyed by ``(BatchMeta, SweepConfig)`` — both hashable
-statics of the jitted ``_run_batched_sweeps`` — so any batch landing in a
-previously seen shape bucket reuses the executable with zero retracing
-(``trace_count()`` exposes the retrace counter for benchmarks/tests).
+Compilation is keyed by ``(BatchMeta, SweepConfig)`` — the hashable
+fields of the frozen ``executor.BatchedExecutor`` that is the jit static
+of the generic device chunk — so any batch landing in a previously seen
+shape bucket reuses the executable with zero retracing (``trace_count()``
+exposes the retrace counter for benchmarks/tests).
 
 Batched solving is intentionally scoped to the serving configuration:
 parallel sweeps (Alg. 2) with the optional global-gap / partial-discharge
@@ -43,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import executor as _executor
 from repro.core.ard import ard_discharge_batched
 from repro.core.graph import BatchMeta, BatchState, PackedBatch
 from repro.core.labels import GAP_HIST_CAP, gap_new_labels
@@ -59,6 +61,13 @@ _TRACE_COUNT = 0
 
 def trace_count() -> int:
     return _TRACE_COUNT
+
+
+def _bump_trace() -> None:
+    """Called from inside traced code (the generic executor device chunk):
+    runs once per trace, never on cached invocations."""
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1
 
 
 @dataclass
@@ -201,68 +210,26 @@ def _parallel_sweep_batch(bmeta: BatchMeta, cfg: SweepConfig,
     return new, iters, res.engine_launches
 
 
-@partial(jax.jit, static_argnums=(0, 1))
-def _run_batched_sweeps(bmeta: BatchMeta, cfg: SweepConfig,
-                        state: BatchState, carry, limit: jax.Array):
-    """Advance every instance up to its per-instance sweep ``limit`` [B].
-
-    The batched mirror of ``sweep._run_device_sweeps``: one
-    ``lax.while_loop`` trip is one complete parallel sweep of every
-    still-running instance.  ``carry`` = (sweeps [B], engine_iters [B],
-    engine_launches, n_act [B]).  Frozen instances (converged or out of
-    budget) are excluded by per-instance selects — and their excess is
-    zeroed on the way into the discharge, so their regions cost the
-    engine's O(1) early exit inside the shared launch.
-    """
-    global _TRACE_COUNT
-    _TRACE_COUNT += 1
-    ard = cfg.method == "ard"
-    d_inf = state.d_inf_ard if ard else state.d_inf_prd
-
-    def cond(c):
-        _state, sweeps, _it, _ln, n_act = c
-        return ((sweeps < limit) & (n_act > 0)).any()
-
-    def body(c):
-        st, sweeps, it, ln, n_act = c
-        run = (sweeps < limit) & (n_act > 0)                  # [B]
-        st_in = st.replace(
-            excess=jnp.where(run[:, None, None], st.excess, 0))
-        new, dit, dln = _parallel_sweep_batch(bmeta, cfg, st_in, sweeps, run)
-        w3 = run[:, None, None, None]
-        w2 = run[:, None, None]
-        st = st.replace(
-            cf=jnp.where(w3, new.cf, st.cf),
-            sink_cf=jnp.where(w2, new.sink_cf, st.sink_cf),
-            excess=jnp.where(w2, new.excess, st.excess),
-            d=jnp.where(w2, new.d, st.d),
-            flow_to_t=jnp.where(run, new.flow_to_t, st.flow_to_t))
-        n_act = num_active_batch(st, d_inf)
-        return (st, sweeps + run.astype(_I32),
-                it + jnp.where(run, dit, 0), ln + dln, n_act)
-
-    out = jax.lax.while_loop(cond, body, (state, *carry))
-    return out[0], out[1:]
-
-
 def solve_batch(packed: PackedBatch, cfg: SweepConfig | None = None):
     """Solve every instance of a packed bucket; returns (BatchState, stats).
 
-    The batched mirror of ``sweep.solve`` in its device-resident form: the
-    host is re-entered once per ``cfg.host_sync_every`` sweeps (default:
-    once per solve).  Per-instance flow, labels, sweep counts and engine
-    iteration counts are bit-identical to solving each instance alone.
+    The batched mirror of ``sweep.solve`` in its device-resident form —
+    ``executor.BatchedExecutor`` through the same generic
+    ``executor.run_device`` loop as the local driver, with per-instance
+    sweep budgets and convergence flags in the carry: one
+    ``lax.while_loop`` trip is one complete parallel sweep of every
+    still-running instance; frozen instances (converged or out of budget)
+    are excluded by per-instance selects, with excess zeroed on the way
+    into the discharge so their regions cost the engine's O(1) early exit
+    inside the shared launch.  The host is re-entered once per
+    ``cfg.host_sync_every`` sweeps (default: once per solve).
+    Per-instance flow, labels, sweep counts and engine iteration counts
+    are bit-identical to solving each instance alone.
     """
     cfg = cfg or SweepConfig()
-    if not cfg.parallel:
-        raise ValueError("batched solving runs parallel sweeps (Alg. 2); "
-                         "use sweep.solve for sequential sweeps")
-    if cfg.use_boundary_relabel:
-        raise ValueError("boundary-relabel is not supported in batched "
-                         "solving; use the single-instance driver")
+    _executor.BatchedExecutor.validate(cfg)
     bmeta, state = packed.meta, packed.state
     B = bmeta.num_instances
-    ard = cfg.method == "ard"
 
     limit = np.zeros(B, np.int64)
     for b, meta in enumerate(packed.metas):
@@ -271,23 +238,11 @@ def solve_batch(packed: PackedBatch, cfg: SweepConfig | None = None):
             else min(cfg.max_sweeps, bound)
     limit = np.minimum(limit, np.iinfo(np.int32).max).astype(np.int32)
 
-    d_inf = state.d_inf_ard if ard else state.d_inf_prd
-    zb = jnp.zeros((B,), _I32)
-    carry = (zb, zb, jnp.zeros((), _I32), num_active_batch(state, d_inf))
-    stats = BatchStats(sweeps=np.zeros(B, np.int64),
-                       engine_iters=np.zeros(B, np.int64))
-    done = 0
-    while True:
-        lim = limit if cfg.host_sync_every is None \
-            else np.minimum(limit, done + cfg.host_sync_every)
-        state, carry = _run_batched_sweeps(
-            bmeta, cfg, state, carry, jnp.asarray(lim, _I32))
-        sweeps, iters, launches, n_act = jax.device_get(carry)
-        stats.host_syncs += 1
-        done = int(sweeps.max(initial=0))
-        if not ((n_act > 0) & (sweeps < limit)).any():
-            break
-    stats.sweeps = np.asarray(sweeps, np.int64)
-    stats.engine_iters = np.asarray(iters, np.int64)
-    stats.engine_launches = int(launches)
-    return state, stats
+    ex = _executor.BatchedExecutor(bmeta, cfg)
+    state, host, syncs = _executor.run_device(
+        ex, state, limit, cfg.host_sync_every)
+    sweeps, iters, launches, _n_act = host
+    return state, BatchStats(
+        sweeps=np.asarray(sweeps, np.int64),
+        engine_iters=np.asarray(iters, np.int64),
+        engine_launches=int(launches), host_syncs=syncs)

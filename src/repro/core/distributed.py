@@ -15,8 +15,10 @@ else.  Region discharges themselves contain no collectives (they are the
 paper's independent region computations), so compute/communication overlap
 is naturally available to the scheduler.
 
-The sweep driver (host loop) stays in core/sweep.py; this module provides
-the sharded one-sweep program plus spec builders for the multi-pod dry-run.
+This module provides the sharded one-sweep program plus spec builders for
+the multi-pod dry-run; the solve loop itself is the generic region-executor
+loop of ``core.executor`` (``ShardedExecutor`` + ``run_host``/
+``run_device``), shared with the local and batched drivers.
 """
 
 from __future__ import annotations
@@ -57,6 +59,7 @@ def _axis_size(a):
     except AttributeError:
         return jax.lax.psum(1, a)
 
+from repro.core import executor as _executor
 from repro.core import heuristics
 from repro.core.ard import ard_discharge_batched
 from repro.core.graph import FlowState, GraphMeta, INF_LABEL
@@ -73,6 +76,11 @@ _TRACE_COUNT = 0
 
 def trace_count() -> int:
     return _TRACE_COUNT
+
+
+def _bump_trace() -> None:
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1
 
 
 def region_axis_sharding(mesh: Mesh, axes) -> dict:
@@ -198,12 +206,18 @@ def _one_sweep_local(meta: GraphMeta, cfg: SweepConfig, axes,
 
     flow_to_t = state.flow_to_t + jax.lax.psum(res.sink_pushed.sum(), axes)
 
-    # ---- global gap heuristic on boundary labels (psum histogram) ----
+    # ---- global gap heuristic (psum histogram) ----
+    # the sharded mirror of labels.gap_new_labels: ARD histograms boundary
+    # labels only (Sec. 5.3), PRD all vertices — identical member sets and
+    # scan range to the local driver's heuristic, so labels stay bit-equal
     d_local = new_d_local
-    if cfg.use_global_gap and cfg.method == "ard":
-        d_inf = meta.d_inf_ard
+    if cfg.use_global_gap:
+        ard = cfg.method == "ard"
+        d_inf = meta.d_inf_ard if ard else meta.d_inf_prd
         cap = min(d_inf + 1, GAP_HIST_CAP)
-        member = state.vmask & (d_local < d_inf) & state.is_boundary
+        member = state.vmask & (d_local < d_inf)
+        if ard:
+            member = member & state.is_boundary
         vals = jnp.where(member, d_local, 0).reshape(-1)
         hist = jnp.zeros((cap,), _I32).at[jnp.clip(vals, 0, cap - 1)].add(
             member.reshape(-1).astype(_I32))
@@ -272,29 +286,15 @@ def make_sharded_solve(meta: GraphMeta, mesh: Mesh, cfg: SweepConfig,
     spec = region_axis_sharding(mesh, axes)
     in_specs = (FlowState(**spec), P(), P())
     out_specs = (FlowState(**spec), P(), P())
-    d_inf = meta.d_inf_ard if cfg.method == "ard" else meta.d_inf_prd
+    ex = _executor.ShardedExecutor(meta, cfg, tuple(axes), exchange)
 
     def chunk(state: FlowState, start_idx, limit):
-        def count_active(state):
-            act = ((state.excess > 0) & (state.d < d_inf)
-                   & state.vmask).sum()
-            return jax.lax.psum(act, axes).astype(_I32)
-
-        def cond(c):
-            _state, idx, n_act = c
-            # (idx == start_idx) keeps the legacy host-loop semantics on an
-            # already-converged input: one (no-op) sweep still runs, so both
-            # drivers report identical sweep counts in every case
-            return (idx < limit) & ((n_act > 0) | (idx == start_idx))
-
-        def body(c):
-            state, idx, _ = c
-            state, n_act = _one_sweep_local(meta, cfg, axes, state, idx,
-                                            exchange)
-            return state, idx + 1, n_act
-
-        init = (state, start_idx, count_active(state))
-        return jax.lax.while_loop(cond, body, init)
+        # the generic executor loop, per shard: the executor's psum'd
+        # active count keeps the predicate uniform across shards
+        state, carry = _executor.while_sweeps(
+            ex, state, ex.loop_carry(state, start_idx), limit)
+        idx, _start, n_act = carry
+        return state, idx, n_act
 
     fn = shard_map(chunk, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
     return jax.jit(fn)
@@ -338,6 +338,7 @@ def solve_sharded(meta: GraphMeta, state: FlowState, mesh: Mesh,
     warm re-solves in particular — reuse them.
     """
     cfg = cfg or SweepConfig()
+    _executor.ShardedExecutor.validate(cfg)
     axes = tuple(axes) if not isinstance(axes, str) else (axes,)
     if device_resident is None:
         device_resident = cfg.device_resident
@@ -348,30 +349,26 @@ def solve_sharded(meta: GraphMeta, state: FlowState, mesh: Mesh,
     bound = (2 * meta.num_boundary ** 2 + 1 if cfg.method == "ard"
              else 2 * meta.num_vertices ** 2)
     limit = max_sweeps if max_sweeps is not None else bound
-    host_syncs = 0
+    ex = _executor.ShardedExecutor(meta, cfg, axes, exchange)
 
     if device_resident:
         run = make_sharded_solve(meta, mesh, cfg, axes, exchange=exchange)
-        sweeps = 0
-        while True:
-            cap = limit if host_sync_every is None \
-                else min(limit, sweeps + host_sync_every)
-            state, idx, n_active = run(state, jnp.asarray(sweeps, _I32),
-                                       jnp.asarray(cap, _I32))
-            sweeps, n_active = (int(x) for x in jax.device_get(
-                (idx, n_active)))
-            host_syncs += 1
-            if n_active == 0 or sweeps >= limit:
-                break
-        return (state, sweeps, host_syncs) if return_stats \
-            else (state, sweeps)
+
+        def chunk(state, carry, cap):
+            state, idx, n_act = run(state, jnp.asarray(carry[0], _I32), cap)
+            return state, (idx, n_act)
+
+        state, host, host_syncs = _executor.run_device(
+            ex, state, limit, host_sync_every, chunk=chunk)
+        return (state, int(host[0]), host_syncs) if return_stats \
+            else (state, int(host[0]))
 
     sweep_fn = make_sharded_sweep(meta, mesh, cfg, axes, exchange=exchange)
-    sweeps = 0
-    while sweeps < limit:
-        state, n_active = sweep_fn(state, jnp.asarray(sweeps, _I32))
-        sweeps += 1
-        host_syncs += 1
-        if int(n_active) == 0:
-            break
+
+    def one(state, idx):
+        state, n_active = sweep_fn(state, jnp.asarray(idx, _I32))
+        return state, (n_active,)
+
+    state, _trace, _pre, host_syncs, sweeps = _executor.run_host(
+        ex, state, limit, sweep=one)
     return (state, sweeps, host_syncs) if return_stats else (state, sweeps)

@@ -52,6 +52,7 @@ import numpy as np
 
 from repro.core import batch as _batch
 from repro.core import distributed as _distributed
+from repro.core import executor as _executor
 from repro.core import graph as _graph
 from repro.core import labels as _labels
 from repro.core import partition as _partition
@@ -436,10 +437,7 @@ class Solver:
         (``SweepStats.scope == "batch"``).
         """
         cfg = self.options.sweep_config()
-        if not cfg.parallel or cfg.use_boundary_relabel:
-            raise ValueError(
-                "solve_many runs parallel sweeps without the "
-                "boundary-relabel heuristic; use handle.solve() for those")
+        _executor.BatchedExecutor.validate(cfg)
         handles: list[ProblemHandle] = []
         for i, it in enumerate(items):
             if isinstance(it, ProblemHandle):

@@ -27,11 +27,12 @@ inside one ``lax.while_loop``, syncing to the host once per
 discharge through the *batched* operators (grid-over-regions kernel: one
 launch covers all K regions) instead of vmapping the per-region path.
 
-``core.batch`` lifts the device-resident driver over a leading *instance*
-axis (``_run_batched_sweeps`` mirrors ``_run_device_sweeps`` with
-per-instance convergence flags); a packed batch of problems then shares
-one ``grid=(B, K)`` launch stream per sweep, with per-instance results
-bit-identical to this module's drivers.
+Both drivers are thin composition over the generic region-executor loop
+(``core.executor``): ``solve`` instantiates ``executor.LocalExecutor``
+over this module's sweep bodies and hands it to ``executor.run_host`` /
+``executor.run_device`` — the same loop that runs the batched
+(``core.batch``) and sharded (``core.distributed``) executors, so the
+convergence/statistics logic exists exactly once.
 """
 
 from __future__ import annotations
@@ -44,6 +45,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core import executor as _executor
 from repro.core import heuristics
 from repro.core.ard import ard_discharge_batched, ard_discharge_one
 from repro.core.engine import ENGINE_BACKENDS
@@ -63,6 +65,13 @@ _TRACE_COUNT = 0
 
 def trace_count() -> int:
     return _TRACE_COUNT
+
+
+def _bump_trace() -> None:
+    """Called from inside traced code (the generic executor device chunk):
+    runs once per trace, never on cached invocations."""
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1
 
 
 @dataclass(frozen=True)
@@ -341,54 +350,18 @@ def _page_and_msg_bytes(meta: GraphMeta, state: FlowState):
     return page_bytes, 8 * meta.num_cross_arcs
 
 
-@partial(jax.jit, static_argnums=(0, 1))
-def _run_device_sweeps(meta: GraphMeta, cfg: SweepConfig, state: FlowState,
-                       carry, limit):
-    """Advance the solve up to ``limit`` total sweeps entirely on device.
-
-    ``carry`` = (sweep_idx, engine_iters, engine_launches,
-    regions_discharged, flow_ring [R], active_ring [R], n_active) — the
-    device-resident mirror of the host loop's ``SweepStats`` accumulation.
-    One trip of the ``lax.while_loop`` is one complete sweep (discharge →
-    fusion → heuristics → convergence count), identical math to the
-    host-loop driver, so the final state and every counter are bit-equal.
-    """
-    global _TRACE_COUNT
-    _TRACE_COUNT += 1
-    R = cfg.stats_ring_size
-
-    def cond(c):
-        _state, idx, it, ln, dc, fr, ar, n_act = c
-        return (idx < limit) & (n_act > 0)
-
-    def body(c):
-        state, idx, it, ln, dc, fr, ar, n_act = c
-        ar = ar.at[idx % R].set(n_act)
-        if cfg.parallel:
-            state, dit, dln = parallel_sweep(meta, state, cfg, idx)
-            ddc = _I32(meta.num_regions)
-        else:
-            state, dit, dln, ddc = sequential_sweep(meta, state, cfg, idx)
-        n_act = num_active(meta, state, cfg).astype(_I32)
-        fr = fr.at[idx % R].set(state.flow_to_t)
-        return (state, idx + 1, it + dit, ln + dln, dc + ddc, fr, ar, n_act)
-
-    out = jax.lax.while_loop(cond, body, (state, *carry))
-    return out[0], out[1:]
-
-
 def _solve_device_resident(meta: GraphMeta, state: FlowState,
-                           cfg: SweepConfig):
+                           cfg: SweepConfig, ex):
     """Device-resident solve: one kernel-program chain per host sync.
 
     The whole sweep loop — discharge, fusion, gap heuristic, convergence
-    check and statistics accumulation — runs inside ``lax.while_loop`` on
-    device; the host is re-entered once per ``cfg.host_sync_every`` sweeps
-    (default: only at convergence or the sweep cap, i.e. exactly one
-    ``device_get`` per solve).  Bit-exact with the host loop on state and
-    counters; the flow/active curves live in fixed-size device rings, so
-    only the last ``stats_ring_size`` sweeps of the curves survive very
-    long solves.
+    check and statistics accumulation — runs inside the generic
+    ``executor.run_device`` loop; the host is re-entered once per
+    ``cfg.host_sync_every`` sweeps (default: only at convergence or the
+    sweep cap, i.e. exactly one ``device_get`` per solve).  Bit-exact with
+    the host loop on state and counters; the flow/active curves live in
+    fixed-size device rings, so only the last ``stats_ring_size`` sweeps
+    of the curves survive very long solves.
     """
     stats = SweepStats()
     bound = sweep_bound(meta, cfg)
@@ -396,21 +369,11 @@ def _solve_device_resident(meta: GraphMeta, state: FlowState,
     R = cfg.stats_ring_size
     page_bytes, msg_bytes = _page_and_msg_bytes(meta, state)
 
-    z = jnp.zeros((), _I32)
-    ring = jnp.zeros((R,), _I32)
-    carry = (z, z, z, z, ring, ring,
-             num_active(meta, state, cfg).astype(_I32))
-    done = 0
-    while True:
-        limit = max_sweeps if cfg.host_sync_every is None \
-            else min(max_sweeps, done + cfg.host_sync_every)
-        state, carry = _run_device_sweeps(meta, cfg, state, carry,
-                                          jnp.asarray(limit, _I32))
-        idx, it, ln, dc, fr, ar, n_act = jax.device_get(carry)
-        stats.host_syncs += 1
-        done = int(idx)
-        if int(n_act) == 0 or done >= max_sweeps:
-            break
+    state, host, syncs = _executor.run_device(
+        ex, state, max_sweeps, cfg.host_sync_every)
+    idx, it, ln, dc, fr, ar, n_act = host
+    stats.host_syncs = syncs
+    done = int(idx)
 
     stats.sweeps = done
     stats.engine_iters = int(it)
@@ -428,7 +391,7 @@ def _solve_device_resident(meta: GraphMeta, state: FlowState,
 
 
 def solve(meta: GraphMeta, state: FlowState, cfg: SweepConfig | None = None,
-          *, warm: bool = False):
+          *, warm: bool = False, on_sweep=None):
     """Run sweeps until no active vertex remains (maximum preflow reached).
 
     ``warm`` — continue from the given state *as is*: its preflow (``cf``/
@@ -440,54 +403,50 @@ def solve(meta: GraphMeta, state: FlowState, cfg: SweepConfig | None = None,
     are (re-)initialized to the paper's ``Init`` — idempotent with
     ``graph.init_labels``, so pre-initialized callers are unaffected.
 
-    Returns (state, SweepStats).  Two drivers, bit-identical results:
+    ``on_sweep(state, sweeps_done)`` — optional host-loop hook called at
+    every sweep boundary (tests use it to check the preflow/labeling
+    invariants mid-solve); incompatible with ``device_resident`` (there is
+    no host boundary to call it from).
 
-    * host loop (default) — each sweep is one jitted device program with
-      one device->host sync after it; the paper's statistics (sweeps, I/O
-      bytes) are accumulated between programs, exactly like the streaming
-      solver accounts disk I/O between region loads;
-    * ``cfg.device_resident`` — the loop itself moves into a
-      ``lax.while_loop``; the host is re-entered once per
+    Returns (state, SweepStats).  Two drivers, bit-identical results, both
+    thin composition over the generic executor loop (``core.executor``):
+
+    * host loop (default) — ``executor.run_host``: each sweep is one
+      jitted device program with one device->host sync after it; the
+      paper's statistics (sweeps, I/O bytes) are accumulated between
+      programs, exactly like the streaming solver accounts disk I/O
+      between region loads;
+    * ``cfg.device_resident`` — ``executor.run_device``: the loop itself
+      moves into a ``lax.while_loop``; the host is re-entered once per
       ``cfg.host_sync_every`` sweeps (default: once per solve).
     """
     cfg = cfg or SweepConfig()
+    _executor.LocalExecutor.validate(cfg)
+    ex = _executor.LocalExecutor(meta, cfg)
     if not warm:
         state = state.replace(d=jnp.zeros_like(state.d))
     if cfg.device_resident:
-        return _solve_device_resident(meta, state, cfg)
+        if on_sweep is not None:
+            raise ValueError("on_sweep needs the host loop; it cannot fire "
+                             "inside the device-resident lax.while_loop")
+        return _solve_device_resident(meta, state, cfg, ex)
     stats = SweepStats()
     bound = sweep_bound(meta, cfg)
     max_sweeps = cfg.max_sweeps if cfg.max_sweeps is not None else bound
     page_bytes, msg_bytes = _page_and_msg_bytes(meta, state)
 
-    sweep_idx = 0
-    n_act = int(num_active(meta, state, cfg))
-    stats.host_syncs += 1
-    while sweep_idx < max_sweeps:
-        stats.active_curve.append(n_act)
-        if n_act == 0:
-            break
-        if cfg.parallel:
-            state, iters, launches = parallel_sweep(
-                meta, state, cfg, jnp.asarray(sweep_idx, _I32))
-            disc = _I32(meta.num_regions)
-        else:
-            state, iters, launches, disc = sequential_sweep(
-                meta, state, cfg, jnp.asarray(sweep_idx, _I32))
-        # all per-sweep device stats in one device->host transfer (a single
-        # sync point per sweep instead of one int(...) per statistic)
-        n_act, flow, it, ln, dc = (int(x) for x in jax.device_get(
-            (num_active(meta, state, cfg), state.flow_to_t, iters, launches,
-             disc)))
-        stats.host_syncs += 1
-        stats.sweeps += 1
+    state, trace, active_pre, syncs, sweeps = _executor.run_host(
+        ex, state, max_sweeps, on_sweep=on_sweep)
+    stats.host_syncs = syncs
+    stats.sweeps = sweeps
+    stats.active_curve = active_pre
+    for n_act, flow, it, ln, dc in trace:
         stats.engine_iters += it
         stats.engine_launches += ln
         stats.regions_discharged += dc
         stats.page_bytes += dc * page_bytes
         stats.boundary_bytes += msg_bytes
         stats.flow_curve.append(flow)
-        sweep_idx += 1
     return state, stats
 
 

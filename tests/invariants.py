@@ -1,0 +1,120 @@
+"""Reusable preflow/labeling invariant checkers (test fixture module).
+
+The properties the paper's correctness and sweep-bound proofs rest on
+(Statements 1/9, eqs. (9)/(10)), factored out of the per-operator tests so
+they can be asserted on ANY mid-solve ``FlowState`` — in particular at
+every sweep boundary through ``sweep.solve``'s ``on_sweep`` hook (see
+test_executor_conformance.py) and inside the hypothesis property tests.
+
+State-level checkers (vectorized over the whole [K, V(, E)] state):
+
+* :func:`assert_valid_preflow`      — residuals/excess non-negative.
+* :func:`assert_valid_labeling`     — d() is a valid distance labeling of
+  the residual network: every residual arc (u, v) satisfies
+  ``d(u) <= d(v) + w`` with w = 0 for ARD intra-region arcs, 1 for ARD
+  cross arcs, 1 for every PRD arc; sink-residual vertices are bounded by
+  the terminal distance (0 for ARD, 1 for PRD), all capped at d_inf.
+* :func:`assert_flow_conservation`  — excess mass + delivered flow is the
+  invariant ``total0`` computed from the entry state.
+
+Region-level checker (scalar loops — an independent re-implementation the
+discharge-operator tests deliberately keep separate from the vectorized
+solver code):
+
+* :func:`assert_region_labeling_valid` — the same validity condition on
+  one region's [V, E] view with ghost labels, used by
+  test_discharge_invariants.py.
+"""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.graph import intra_mask
+from repro.core.labels import gather_ghost_labels
+
+
+def preflow_total(state) -> int:
+    """The conserved quantity: live excess + flow already delivered to t."""
+    return int(jnp.sum(jnp.where(state.vmask, state.excess, 0))) + \
+        int(state.flow_to_t)
+
+
+def assert_valid_preflow(meta, state, where=""):
+    """Residuals and excess of a preflow are non-negative everywhere."""
+    cf = np.asarray(state.cf)
+    sink_cf = np.asarray(state.sink_cf)
+    excess = np.asarray(state.excess)
+    vm = np.asarray(state.vmask)
+    assert (cf >= 0).all(), f"negative residual {where}"
+    assert (sink_cf >= 0).all(), f"negative sink residual {where}"
+    assert (excess[vm] >= 0).all(), f"negative excess {where}"
+
+
+def assert_valid_labeling(meta, state, *, ard: bool, where=""):
+    """Paper eqs. (9)/(10): d() lower-bounds residual distance-to-sink.
+
+    ARD labels count boundary crossings (intra arcs cost 0, cross arcs 1,
+    the sink is at distance 0); PRD labels count hops (every arc costs 1,
+    the sink is one hop away).  Vertices at the ceiling d_inf are exempt
+    (they are declared unreachable), as are arcs into ghosts already at
+    the ceiling — ``d(u) <= d_inf <= ghost`` holds trivially there.
+    """
+    ghost_d = gather_ghost_labels(state)
+    intra = intra_mask(state)
+    d_inf = meta.d_inf_ard if ard else meta.d_inf_prd
+    d = state.d
+    du = jnp.broadcast_to(d[:, :, None], state.cf.shape)
+    resid = (state.cf > 0) & state.emask
+    at_cap = du >= d_inf
+    intra_w = 0 if ard else 1
+    ok_intra = ~resid | ~intra | (du <= ghost_d + intra_w) | at_cap
+    cross = state.emask & ~intra
+    ok_cross = ~resid | ~cross | (du <= ghost_d + 1) | at_cap
+    sink_w = 0 if ard else 1
+    ok_sink = (state.sink_cf == 0) | (d <= sink_w) | (d >= d_inf) | \
+        ~state.vmask
+    assert bool(jnp.all(ok_intra)), f"intra-arc validity broken {where}"
+    assert bool(jnp.all(ok_cross)), f"cross-arc validity broken {where}"
+    assert bool(jnp.all(ok_sink)), f"sink validity broken {where}"
+
+
+def assert_flow_conservation(meta, state, total0: int, where=""):
+    """No flow mass appears or vanishes: excess + flow_to_t == total0."""
+    total = preflow_total(state)
+    assert total == total0, \
+        f"flow mass not conserved {where}: {total} != {total0}"
+
+
+def assert_region_labeling_valid(d, cf, sink_cf, *, intra, emask, vmask,
+                                 nbr_local, ghost, d_inf, ard: bool):
+    """Validity on one region's [V, E] view, by scalar loops.
+
+    The discharge-operator tests use this as an independent oracle for the
+    condition the vectorized :func:`assert_valid_labeling` checks on whole
+    states: residual intra arc (u, v) => d(u) <= d(v) + w_intra, residual
+    cross arc => d(u) <= ghost + 1, sink-residual => d(u) <= sink bound.
+    """
+    d = np.asarray(d)
+    cf = np.asarray(cf)
+    intra = np.asarray(intra)
+    emask = np.asarray(emask)
+    vmask = np.asarray(vmask)
+    nbr = np.asarray(nbr_local)
+    ghost = np.asarray(ghost)
+    intra_w = 0 if ard else 1
+    V, E = cf.shape
+    for u in range(V):
+        if not vmask[u] or d[u] >= d_inf:
+            continue
+        for e in range(E):
+            if not emask[u, e] or cf[u, e] <= 0:
+                continue
+            if intra[u, e]:
+                assert d[u] <= d[nbr[u, e]] + intra_w, (u, e)
+            elif ghost[u, e] < d_inf:
+                assert d[u] <= ghost[u, e] + 1, (u, e)
+    sink_w = 0 if ard else 1
+    sink_cf = np.asarray(sink_cf)
+    ok = (sink_cf == 0) | (d <= sink_w) | (d >= d_inf) | ~vmask
+    assert ok.all(), "sink validity"

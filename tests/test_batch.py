@@ -1,12 +1,12 @@
-"""Batched multi-instance solving vs the single-instance driver.
+"""Pinned regressions of the batched multi-instance driver.
 
-The acceptance bar of the batched refactor: a mixed-shape batch solved
-through ``solve_mincut_batch`` must be **bit-exact per instance** with
-``solve_mincut`` on the same problem — flow value, labels, sweep count
-and engine iteration count — across ard/prd × xla/pallas, while the
-batch shares one launch/sync stream (far fewer dispatches than the
-sequential loop) and a second batch landing in a known shape bucket
-reuses the compiled solve with zero retracing.
+The batched-vs-single bit-exactness MATRIX (ard/prd × engine backend,
+plus the shared launch/sync stream accounting) lives in
+tests/test_executor_conformance.py.  This file keeps the batch-specific
+edge cases: heuristic variants flowing through the packed state, the
+per-instance ``max_sweeps`` budget and ``host_sync_every`` hatch,
+shape-bucket packing/padding, the zero-retrace compile cache, and the
+fail-fast config validation.
 """
 
 import dataclasses
@@ -31,45 +31,6 @@ def _mixed_batch():
     parts = [grid_partition((8, 8), (2, 2)), grid_partition((8, 8), (2, 2)),
              None, grid_partition((10, 10), (2, 2))]
     return probs, parts
-
-
-CONFIGS = [
-    SweepConfig(method="ard"),
-    SweepConfig(method="prd"),
-    SweepConfig(method="ard", engine_backend="pallas", engine_chunk_iters=8),
-    SweepConfig(method="prd", engine_backend="pallas", engine_chunk_iters=8),
-]
-CONFIG_IDS = ["ard-xla", "prd-xla", "ard-pallas-fused", "prd-pallas-fused"]
-
-
-@pytest.mark.parametrize("cfg", CONFIGS, ids=CONFIG_IDS)
-def test_batch_bitexact_vs_single(cfg):
-    probs, parts = _mixed_batch()
-    singles = [solve_mincut(p, part=pt, num_regions=4, config=cfg)
-               for p, pt in zip(probs, parts)]
-    solver = BatchedSolver(cfg, num_regions=4)
-    batched = solver.solve(probs, parts)
-    for i, (s, b) in enumerate(zip(singles, batched)):
-        want, _ = maxflow_oracle(probs[i])
-        assert b.flow_value == s.flow_value == want, i
-        np.testing.assert_array_equal(np.asarray(s.state.d),
-                                      np.asarray(b.state.d), err_msg=str(i))
-        np.testing.assert_array_equal(np.asarray(s.state.cf),
-                                      np.asarray(b.state.cf), err_msg=str(i))
-        np.testing.assert_array_equal(s.source_side, b.source_side)
-        assert b.stats.sweeps == s.stats.sweeps, i
-        assert b.stats.engine_iters == s.stats.engine_iters, i
-    # the batch shares one launch stream: on the fused pallas path (real
-    # kernel dispatches) strictly fewer than the sequential loop; on xla
-    # "launches" counts traced compute bodies, which bit-exactness pins to
-    # exactly the sequential total
-    batch_launches = sum(bs.engine_launches
-                         for bs in solver.last_batch_stats)
-    seq_launches = sum(s.stats.engine_launches for s in singles)
-    if cfg.engine_backend == "pallas" and cfg.engine_chunk_iters:
-        assert batch_launches < seq_launches
-    else:
-        assert batch_launches == seq_launches
 
 
 def test_batch_heuristic_variants_match_single():

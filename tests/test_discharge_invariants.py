@@ -1,6 +1,9 @@
 """Statement 9 (ARD) / Statement 1 (PRD) discharge properties, checked
 directly on the discharge operators — these are the properties the
-2|B|^2+1 and O(n^2) sweep-bound proofs rest on."""
+2|B|^2+1 and O(n^2) sweep-bound proofs rest on.  The labeling-validity
+condition itself lives in tests/invariants.py
+(``assert_region_labeling_valid``), shared with the conformance suite's
+state-level checkers."""
 
 import numpy as np
 import pytest
@@ -8,6 +11,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+import invariants
 from repro.core.ard import ard_discharge_one
 from repro.core.graph import build, init_labels, intra_mask
 from repro.core.labels import gather_ghost_labels, region_relabel
@@ -52,31 +56,17 @@ def test_ard_discharge_properties(seed):
         np.asarray(v["vmask"])].all()
 
     # 3. validity in the region network: residual intra arc (u,v) =>
-    #    d'(u) <= d'(v); residual cross arc => d'(u) <= d(ghost) + 1
-    d = np.asarray(res.d)
-    cf = np.asarray(res.cf)
-    intra = np.asarray(v["intra"])
-    emask = np.asarray(v["emask"])
-    nbr = np.asarray(v["nbr_local"])
-    ghost = np.asarray(v["ghost"])
-    V, E = cf.shape
-    for u in range(V):
-        if not bool(np.asarray(v["vmask"])[u]) or d[u] >= meta.d_inf_ard:
-            continue
-        for e in range(E):
-            if not emask[u, e] or cf[u, e] <= 0:
-                continue
-            if intra[u, e]:
-                assert d[u] <= d[nbr[u, e]], (u, e)
-            elif ghost[u, e] < meta.d_inf_ard:
-                assert d[u] <= ghost[u, e] + 1, (u, e)
-    # sink validity
-    sink_cf = np.asarray(res.sink_cf)
-    ok = (sink_cf == 0) | (d <= 0) | ~np.asarray(v["vmask"])
-    assert ok.all()
+    #    d'(u) <= d'(v); residual cross arc => d'(u) <= d(ghost) + 1;
+    #    sink-residual => d'(u) <= 0
+    invariants.assert_region_labeling_valid(
+        res.d, res.cf, res.sink_cf, intra=v["intra"], emask=v["emask"],
+        vmask=v["vmask"], nbr_local=v["nbr_local"], ghost=v["ghost"],
+        d_inf=meta.d_inf_ard, ard=True)
 
     # 4. flow direction: cross pushes only into ghosts with label < d'(u)...
     #    out_push(u, e) > 0 => d'(u) > d(ghost(e))
+    d = np.asarray(res.d)
+    ghost = np.asarray(v["ghost"])
     out = np.asarray(res.out_push)
     for u, e in zip(*np.nonzero(out > 0)):
         assert d[u] > ghost[u, e]
@@ -104,19 +94,9 @@ def test_prd_discharge_properties(seed):
         (np.asarray(res.d) < meta.d_inf_prd) & vm
     assert not active.any()
     assert (np.asarray(res.d) >= np.asarray(v["d"]))[vm].all()
-    # validity (PRD): residual arc (u,v) => d'(u) <= d'(v)+1
-    d = np.asarray(res.d)
-    cf = np.asarray(res.cf)
-    intra = np.asarray(v["intra"])
-    nbr = np.asarray(v["nbr_local"])
-    ghost = np.asarray(v["ghost"])
-    emask = np.asarray(v["emask"])
-    V, E = cf.shape
-    for u in range(V):
-        if not vm[u]:
-            continue
-        for e in range(E):
-            if not emask[u, e] or cf[u, e] <= 0:
-                continue
-            dv = d[nbr[u, e]] if intra[u, e] else ghost[u, e]
-            assert d[u] <= dv + 1
+    # validity (PRD): residual arc (u,v) => d'(u) <= d'(v)+1, and
+    # sink-residual => d'(u) <= 1
+    invariants.assert_region_labeling_valid(
+        res.d, res.cf, res.sink_cf, intra=v["intra"], emask=v["emask"],
+        vmask=v["vmask"], nbr_local=v["nbr_local"], ghost=v["ghost"],
+        d_inf=meta.d_inf_prd, ard=False)
