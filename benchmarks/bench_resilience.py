@@ -1,0 +1,222 @@
+"""Resilience overhead benchmark: what fault tolerance costs, what a
+resume saves.
+
+Two questions, answered per instance x route x cadence:
+
+  * ``overhead_pct`` — wall-time cost of capturing sweep-boundary
+    checkpoints during a solve, vs the identical un-checkpointed solve
+    (one host fetch + one atomic npz publish per boundary).  The
+    acceptance bar: at cadence >= 5 sweeps the overhead stays under 10%
+    of wall (asserted here for the full run's headline rows).
+  * ``resume_savings_pct`` — wall time saved by resuming from a mid-solve
+    checkpoint (at roughly half the sweeps) instead of re-solving cold:
+    the value a preempted worker recovers.  The resumed flow is asserted
+    bit-equal to the cold solve's before any row is emitted.
+
+Routes: the host loop (a checkpoint opportunity at every sweep boundary)
+and the device-resident driver (boundaries at ``host_sync_every``).
+Results go to ``BENCH_resilience.json``; on this CPU-only container the
+absolute times measure correctness-path overhead, not TPU speed (the
+JSON records the platform).
+
+    PYTHONPATH=src python benchmarks/bench_resilience.py [--quick]
+        [--smoke] [--out BENCH_resilience.json]
+
+``--smoke`` runs a tiny instance through both routes: checkpoints appear
+on disk, the resumed solve matches the uninterrupted one and the
+Edmonds-Karp oracle bit-exactly — the CI guard for the resilience
+plumbing (wall-clock assertions need the full run's instance sizes).
+
+Also exposes the ``run(emit, quick)`` contract of benchmarks/run.py.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import numpy as np
+
+from benchmarks.common import emit_csv  # noqa: E402
+
+REPEATS = 3
+
+
+def _routes():
+    from repro.core.sweep import SweepConfig
+
+    yield "host", SweepConfig(method="ard")
+    yield "device-sync5", SweepConfig(method="ard", device_resident=True,
+                                      host_sync_every=5)
+
+
+def _instances(quick: bool):
+    from repro.core import grid_partition
+    from repro.data.grids import synthetic_grid
+
+    g = 32 if quick else 64
+    yield (f"syn{g}", synthetic_grid(g, g, connectivity=8, strength=150,
+                                     seed=0),
+           grid_partition((g, g), (2, 2)))
+
+
+def _median_wall(fn, repeats: int = REPEATS) -> float:
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def _bench(ilabel, prob, part, rlabel, cfg, cadence: int, workdir: Path):
+    from repro.core import build, init_labels
+    from repro.core import resilience as res
+    from repro.core.sweep import solve
+
+    meta, state, _ = build(prob, part)
+    st0 = init_labels(meta, state)
+
+    base_st, base_stats = solve(meta, st0, cfg)     # warm-up jit + baseline
+    plain_s = _median_wall(lambda: solve(meta, st0, cfg))
+
+    def checkpointed(d):
+        return solve(meta, st0, cfg, checkpoint=res.CheckpointPolicy(
+            directory=d, every=cadence))
+
+    # fresh dir per repeat: every run pays the full publish stream
+    def one_ck():
+        with tempfile.TemporaryDirectory(dir=workdir) as d:
+            checkpointed(Path(d) / "ck")
+
+    ck_s = _median_wall(one_ck)
+
+    ckdir = workdir / f"{ilabel}_{rlabel}_c{cadence}"
+    _st, _stats = checkpointed(ckdir)
+    steps = sorted(int(p.name[5:]) for p in ckdir.iterdir()
+                   if p.is_dir() and not p.name.endswith(".tmp"))
+    assert steps, "no checkpoint published"
+
+    # resume-vs-cold: continue from the boundary nearest half the sweeps
+    mid = min(steps, key=lambda s: abs(s - base_stats.sweeps / 2))
+    ck = res.load_checkpoint(ckdir, mid)
+    st_r, stats_r = solve(meta, st0, cfg, resume_from=ck)
+    assert int(st_r.flow_to_t) == int(base_st.flow_to_t)
+    assert stats_r.sweeps == base_stats.sweeps
+    np.testing.assert_array_equal(np.asarray(st_r.d), np.asarray(base_st.d))
+    resume_s = _median_wall(lambda: solve(meta, st0, cfg, resume_from=ck))
+
+    overhead = 100.0 * (ck_s - plain_s) / plain_s
+    return dict(
+        instance=ilabel, route=rlabel, cadence=cadence,
+        sweeps=base_stats.sweeps, checkpoints=len(steps),
+        flow=int(base_st.flow_to_t),
+        plain_s=round(plain_s, 4), checkpointed_s=round(ck_s, 4),
+        overhead_pct=round(overhead, 2),
+        resume_from_sweep=mid,
+        cold_s=round(plain_s, 4), resume_s=round(resume_s, 4),
+        resume_savings_pct=round(100.0 * (1 - resume_s / plain_s), 2),
+        resume_bit_exact=True,
+    )
+
+
+def collect(quick: bool = False) -> dict:
+    import jax
+
+    rows = []
+    with tempfile.TemporaryDirectory(prefix="bench_resilience_") as wd:
+        for ilabel, prob, part in _instances(quick):
+            for rlabel, cfg in _routes():
+                for cadence in (1, 5):
+                    if rlabel != "host" and cadence != 5:
+                        continue      # device boundaries sit at sync5
+                    rows.append(_bench(ilabel, prob, part, rlabel, cfg,
+                                       cadence, Path(wd)))
+    if not quick:
+        for row in rows:
+            if row["cadence"] >= 5:   # the acceptance bar (full sizes only)
+                assert row["overhead_pct"] < 10.0, row
+    return dict(
+        bench="resilience",
+        platform=jax.default_backend(),
+        jax_version=jax.__version__,
+        repeats=REPEATS,
+        results=rows,
+    )
+
+
+def smoke() -> None:
+    """CI guard: both routes checkpoint, resume bit-exactly, and match the
+    Edmonds-Karp oracle on a tiny instance."""
+    from repro.core import build, grid_partition, init_labels
+    from repro.core import resilience as res
+    from repro.core.sweep import solve
+    from repro.data.grids import synthetic_grid
+    from repro.kernels.ref import maxflow_oracle
+
+    prob = synthetic_grid(10, 10, connectivity=8, strength=150, seed=0)
+    part = grid_partition((10, 10), (2, 2))
+    want, _ = maxflow_oracle(prob)
+    meta, state, _ = build(prob, np.asarray(part))
+    st0 = init_labels(meta, state)
+    with tempfile.TemporaryDirectory() as wd:
+        for rlabel, cfg in _routes():
+            every = 1 if rlabel == "host" else 5
+            ckdir = Path(wd) / rlabel
+            base_st, base_stats = solve(meta, st0, cfg)
+            solve(meta, st0, cfg, checkpoint=res.CheckpointPolicy(
+                directory=ckdir, every=every))
+            latest = res.latest_checkpoint(ckdir)
+            assert latest is not None
+            st_r, stats_r = solve(meta, st0, cfg, resume_from=ckdir)
+            assert int(st_r.flow_to_t) == int(base_st.flow_to_t) == want
+            assert stats_r.sweeps == base_stats.sweeps
+            np.testing.assert_array_equal(np.asarray(st_r.d),
+                                          np.asarray(base_st.d))
+            print(f"smoke ok: {rlabel} flow={want} "
+                  f"sweeps={base_stats.sweeps} "
+                  f"latest_checkpoint={latest.sweeps}")
+    print("smoke passed: both routes checkpoint to disk and resume "
+          "bit-exactly to the oracle flow")
+
+
+def run(emit=emit_csv, quick: bool = False) -> None:
+    data = collect(quick=quick)
+    for row in data["results"]:
+        emit(f"resilience/{row['route']}/c{row['cadence']}/"
+             f"{row['instance']}",
+             row["checkpointed_s"] * 1e6,
+             f"overhead_pct={row['overhead_pct']};"
+             f"resume_savings_pct={row['resume_savings_pct']};"
+             f"checkpoints={row['checkpoints']}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-instance checkpoint/resume oracle check "
+                         "(CI), no JSON output")
+    ap.add_argument("--out", default=str(Path(__file__).resolve().parents[1]
+                                         / "BENCH_resilience.json"))
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+        return
+    data = collect(quick=args.quick)
+    Path(args.out).write_text(json.dumps(data, indent=2) + "\n")
+    print(f"wrote {args.out}")
+    for row in data["results"]:
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -27,14 +27,15 @@ def main() -> None:
 
     from benchmarks import (bench_batch, bench_competitions,
                             bench_engine_backend, bench_lm,
-                            bench_sweep_driver, bench_synthetic,
-                            bench_warmstart)
+                            bench_resilience, bench_sweep_driver,
+                            bench_synthetic, bench_warmstart)
 
     mods = [("synthetic", bench_synthetic),
             ("engine_backend", bench_engine_backend),
             ("sweep_driver", bench_sweep_driver),
             ("batch", bench_batch),
             ("warmstart", bench_warmstart),
+            ("resilience", bench_resilience),
             ("competitions", bench_competitions),
             ("lm", bench_lm)]
     print("name,us_per_call,derived")

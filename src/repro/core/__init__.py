@@ -18,6 +18,14 @@ Public surface:
                                               BatchedExecutor,
                                               ShardedExecutor)
   region_reduction                          — Alg. 5 preprocessing
+  SolveSupervisor, CheckpointPolicy,
+  FaultPlan, SolveCheckpoint                — resilience layer: sweep-
+                                              boundary checkpoint/resume,
+                                              supervised retry with fault
+                                              injection, degradation ladder
+  validate_problem, CertificateError,
+  NonConvergence                            — structured input validation
+                                              and solve diagnostics
 """
 
 from repro.core.api import (BatchCacheInfo, BatchedSolver, MincutResult,
@@ -27,8 +35,18 @@ from repro.core.executor import (BatchedExecutor, Capabilities,
                                  ShardedExecutor, UnsupportedFeatureError)
 from repro.core.graph import (BatchMeta, BatchState, FlowState, GraphMeta,
                               GraphUpdate, Layout, PackedBatch, Problem,
-                              apply_update, bucket_shape_for, build,
-                              init_labels, pack_built, pack_instances)
+                              ProblemValidationError, apply_update,
+                              bucket_shape_for, build, init_labels,
+                              pack_built, pack_instances, validate_problem)
+from repro.core.invariants import (CertificateError, NonConvergence,
+                                   Violation, invariant_report)
+from repro.core.resilience import (CheckpointMismatchError, CheckpointPolicy,
+                                   FaultPlan, InjectedFault, PreemptionError,
+                                   RetryPolicy, SolveCheckpoint,
+                                   SolveSupervisor, SupervisorReport,
+                                   VmemOverflowError, fault_injection,
+                                   latest_checkpoint, load_checkpoint,
+                                   save_checkpoint)
 from repro.core.partition import bfs_partition, block_partition, grid_partition
 from repro.core.reduction import region_reduction
 from repro.core.solver import (ProblemHandle, Solver, SolverCacheInfo,
@@ -37,15 +55,21 @@ from repro.core.sweep import SweepConfig, SweepStats, cut_value, extract_cut, so
 
 __all__ = [
     "BatchCacheInfo", "BatchMeta", "BatchState", "BatchedExecutor",
-    "BatchedSolver", "Capabilities",
-    "FlowState", "GraphMeta", "GraphUpdate", "Layout", "LocalExecutor",
-    "MincutResult",
-    "PackedBatch", "Problem", "ProblemHandle", "RegionExecutor",
-    "ShardedExecutor", "Solver", "SolverCacheInfo",
-    "SolverOptions", "SweepConfig", "SweepStats",
-    "UnsupportedFeatureError", "apply_update",
+    "BatchedSolver", "Capabilities", "CertificateError",
+    "CheckpointMismatchError", "CheckpointPolicy", "FaultPlan",
+    "FlowState", "GraphMeta", "GraphUpdate", "InjectedFault", "Layout",
+    "LocalExecutor", "MincutResult", "NonConvergence",
+    "PackedBatch", "PreemptionError", "Problem", "ProblemHandle",
+    "ProblemValidationError", "RegionExecutor", "RetryPolicy",
+    "ShardedExecutor", "SolveCheckpoint", "SolveSupervisor", "Solver",
+    "SolverCacheInfo", "SolverOptions", "SupervisorReport", "SweepConfig",
+    "SweepStats", "UnsupportedFeatureError", "Violation",
+    "VmemOverflowError", "apply_update",
     "bfs_partition", "block_partition", "bucket_shape_for",
-    "build", "cut_value", "extract_cut", "grid_partition", "init_labels",
+    "build", "cut_value", "extract_cut", "fault_injection",
+    "grid_partition", "init_labels", "invariant_report",
+    "latest_checkpoint", "load_checkpoint",
     "pack_built", "pack_instances",
-    "region_reduction", "solve", "solve_mincut", "solve_mincut_batch",
+    "region_reduction", "save_checkpoint", "solve", "solve_mincut",
+    "solve_mincut_batch", "validate_problem",
 ]

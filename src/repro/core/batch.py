@@ -45,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import executor as _executor
+from repro.core import resilience as _res
 from repro.core.ard import ard_discharge_batched
 from repro.core.graph import BatchMeta, BatchState, PackedBatch
 from repro.core.labels import GAP_HIST_CAP, gap_new_labels
@@ -87,6 +88,9 @@ class BatchStats:
     engine_iters: np.ndarray
     engine_launches: int = 0
     host_syncs: int = 0
+    converged: np.ndarray | None = None   # bool[B]: instance reached zero
+    #                                       active vertices within budget
+    degraded: list = dataclasses.field(default_factory=list)
 
 
 def _ghost_labels(state: BatchState) -> jax.Array:
@@ -210,7 +214,8 @@ def _parallel_sweep_batch(bmeta: BatchMeta, cfg: SweepConfig,
     return new, iters, res.engine_launches
 
 
-def solve_batch(packed: PackedBatch, cfg: SweepConfig | None = None):
+def solve_batch(packed: PackedBatch, cfg: SweepConfig | None = None, *,
+                checkpoint=None, resume_from=None, salt: str = ""):
     """Solve every instance of a packed bucket; returns (BatchState, stats).
 
     The batched mirror of ``sweep.solve`` in its device-resident form —
@@ -225,6 +230,13 @@ def solve_batch(packed: PackedBatch, cfg: SweepConfig | None = None):
     ``cfg.host_sync_every`` sweeps (default: once per solve).
     Per-instance flow, labels, sweep counts and engine iteration counts
     are bit-identical to solving each instance alone.
+
+    ``checkpoint``/``resume_from`` — sweep-boundary checkpointing exactly
+    as in ``sweep.solve``, captured at the ``host_sync_every`` boundaries;
+    the whole bucket is one checkpoint (per-instance sweeps/iters arrays
+    ride in the payload), fingerprinted over the bucket shape AND every
+    member instance's ``GraphMeta``, so a resume must re-pack the same
+    instances in the same order.
     """
     cfg = cfg or SweepConfig()
     _executor.BatchedExecutor.validate(cfg)
@@ -239,10 +251,46 @@ def solve_batch(packed: PackedBatch, cfg: SweepConfig | None = None):
     limit = np.minimum(limit, np.iinfo(np.int32).max).astype(np.int32)
 
     ex = _executor.BatchedExecutor(bmeta, cfg)
+
+    fp = _res.solve_fingerprint(
+        bmeta, cfg, salt + "|" + ";".join(repr(m) for m in packed.metas))
+    ckpt = _res.resolve_resume(resume_from, fp)
+    carry0 = None
+    seed_syncs = 0
+    if ckpt is not None:
+        state = _res.restore_state(state, ckpt.payload)
+        seed_syncs = int(ckpt.stats.get("host_syncs", 0))
+        carry0 = (jnp.asarray(ckpt.payload["sweeps"], _I32),
+                  jnp.asarray(ckpt.payload["engine_iters"], _I32),
+                  jnp.asarray(int(ckpt.stats["engine_launches"]), _I32),
+                  jnp.asarray(ckpt.payload["n_act"], _I32))
+
+    on_sync = None
+    if checkpoint is not None:
+        last_saved = [ckpt.sweeps if ckpt is not None else 0]
+
+        def on_sync(st, host, syncs):
+            done, running = ex.progress(host, limit)
+            if running and done - last_saved[0] < checkpoint.every:
+                return
+            sweeps, iters, launches, n_act = host
+            payload = _res.state_payload(st)
+            payload["sweeps"] = np.asarray(sweeps, np.int32)
+            payload["engine_iters"] = np.asarray(iters, np.int32)
+            payload["n_act"] = np.asarray(n_act, np.int32)
+            _res.save_checkpoint(checkpoint.directory, _res.SolveCheckpoint(
+                fingerprint=fp, route="batch", sweeps=done, payload=payload,
+                stats={"engine_launches": int(launches),
+                       "host_syncs": seed_syncs + syncs},
+                flow_offset=checkpoint.flow_offset))
+            last_saved[0] = done
+
     state, host, syncs = _executor.run_device(
-        ex, state, limit, cfg.host_sync_every)
-    sweeps, iters, launches, _n_act = host
+        ex, state, limit, cfg.host_sync_every, carry0=carry0,
+        on_sync=on_sync)
+    sweeps, iters, launches, n_act = host
     return state, BatchStats(
         sweeps=np.asarray(sweeps, np.int64),
         engine_iters=np.asarray(iters, np.int64),
-        engine_launches=int(launches), host_syncs=syncs)
+        engine_launches=int(launches), host_syncs=seed_syncs + syncs,
+        converged=np.asarray(n_act) == 0)

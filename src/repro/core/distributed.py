@@ -61,6 +61,7 @@ def _axis_size(a):
 
 from repro.core import executor as _executor
 from repro.core import heuristics
+from repro.core import resilience as _res
 from repro.core.ard import ard_discharge_batched
 from repro.core.graph import FlowState, GraphMeta, INF_LABEL
 from repro.core.labels import GAP_HIST_CAP
@@ -323,7 +324,8 @@ def solve_sharded(meta: GraphMeta, state: FlowState, mesh: Mesh,
                   max_sweeps: int | None = None, exchange: str = "full",
                   device_resident: bool | None = None,
                   host_sync_every: int | None = None,
-                  return_stats: bool = False):
+                  return_stats: bool = False,
+                  checkpoint=None, resume_from=None, salt: str = ""):
     """Sharded sweep loop (device-resident state; regions over the mesh).
 
     Default driver: one jitted SPMD sweep program + one host sync per
@@ -336,6 +338,14 @@ def solve_sharded(meta: GraphMeta, state: FlowState, mesh: Mesh,
     front-end's route).  The compiled SPMD programs are memoized on
     (meta, mesh, cfg, axes, exchange), so repeated solves — a session's
     warm re-solves in particular — reuse them.
+
+    ``checkpoint``/``resume_from``/``salt`` — sweep-boundary
+    checkpointing exactly as in ``sweep.solve``: the host driver captures
+    at every sweep boundary under the ``checkpoint.every`` cadence, the
+    device-resident driver at its ``host_sync_every`` boundaries; the
+    payload is the fully-gathered flow state (one ``device_get``), so a
+    resume may re-land on a different mesh (elastic) — the re-entry
+    ``device_put`` re-shards it.
     """
     cfg = cfg or SweepConfig()
     _executor.ShardedExecutor.validate(cfg)
@@ -345,11 +355,30 @@ def solve_sharded(meta: GraphMeta, state: FlowState, mesh: Mesh,
     if host_sync_every is None:
         host_sync_every = cfg.host_sync_every
     shardings = flowstate_shardings(mesh, axes)
+    if checkpoint is not None:
+        salt = checkpoint.salt
+    fp = _res.solve_fingerprint(meta, cfg, salt)
+    ckpt = _res.resolve_resume(resume_from, fp)
+    start = 0
+    seed_syncs = 0
+    if ckpt is not None:
+        state = _res.restore_state(state, ckpt.payload)
+        start = ckpt.sweeps
+        seed_syncs = int(ckpt.stats.get("host_syncs", 0))
     state = jax.device_put(state, shardings)
     bound = (2 * meta.num_boundary ** 2 + 1 if cfg.method == "ard"
              else 2 * meta.num_vertices ** 2)
     limit = max_sweeps if max_sweeps is not None else bound
     ex = _executor.ShardedExecutor(meta, cfg, axes, exchange)
+
+    def save(st, sweeps_done, n_act, syncs):
+        payload = _res.state_payload(st)
+        payload["n_act"] = np.asarray(n_act, np.int32)
+        _res.save_checkpoint(checkpoint.directory, _res.SolveCheckpoint(
+            fingerprint=fp, route="sharded", sweeps=sweeps_done,
+            payload=payload,
+            stats={"sweeps": sweeps_done, "host_syncs": seed_syncs + syncs},
+            flow_offset=checkpoint.flow_offset))
 
     if device_resident:
         run = make_sharded_solve(meta, mesh, cfg, axes, exchange=exchange)
@@ -358,10 +387,27 @@ def solve_sharded(meta: GraphMeta, state: FlowState, mesh: Mesh,
             state, idx, n_act = run(state, jnp.asarray(carry[0], _I32), cap)
             return state, (idx, n_act)
 
+        carry0 = None
+        if ckpt is not None:
+            carry0 = (jnp.asarray(start, _I32),
+                      jnp.asarray(int(ckpt.payload["n_act"]), _I32))
+
+        on_sync = None
+        if checkpoint is not None:
+            last_saved = [start]
+
+            def on_sync(st, host, syncs):
+                done, running = ex.progress(host, limit)
+                if running and done - last_saved[0] < checkpoint.every:
+                    return
+                save(st, done, host[-1], syncs)
+                last_saved[0] = done
+
         state, host, host_syncs = _executor.run_device(
-            ex, state, limit, host_sync_every, chunk=chunk)
-        return (state, int(host[0]), host_syncs) if return_stats \
-            else (state, int(host[0]))
+            ex, state, limit, host_sync_every, chunk=chunk, carry0=carry0,
+            on_sync=on_sync)
+        return (state, int(host[0]), seed_syncs + host_syncs) \
+            if return_stats else (state, int(host[0]))
 
     sweep_fn = make_sharded_sweep(meta, mesh, cfg, axes, exchange=exchange)
 
@@ -369,6 +415,18 @@ def solve_sharded(meta: GraphMeta, state: FlowState, mesh: Mesh,
         state, n_active = sweep_fn(state, jnp.asarray(idx, _I32))
         return state, (n_active,)
 
-    state, _trace, _pre, host_syncs, sweeps = _executor.run_host(
-        ex, state, limit, sweep=one)
-    return (state, sweeps, host_syncs) if return_stats else (state, sweeps)
+    on_obs = None
+    last_saved = [start]
+    if checkpoint is not None:
+        def on_obs(st, idx, trace, active_pre):
+            if idx - last_saved[0] < checkpoint.every:
+                return
+            save(st, idx, trace[-1][0], len(trace))
+            last_saved[0] = idx
+
+    state, trace, _pre, host_syncs, sweeps = _executor.run_host(
+        ex, state, limit, sweep=one, start=start, on_obs=on_obs)
+    if checkpoint is not None and sweeps > last_saved[0] and trace:
+        save(state, sweeps, trace[-1][0], len(trace))
+    return (state, sweeps, seed_syncs + host_syncs) if return_stats \
+        else (state, sweeps)

@@ -63,6 +63,36 @@ _I32 = jnp.int32
 
 
 # --------------------------------------------------------------------------
+# test-only fault hook (core.resilience.FaultPlan)
+# --------------------------------------------------------------------------
+# Every generic driver fires the installed hook at its host boundaries —
+# after each sweep in run_host, after each device_get in run_device — so
+# the SAME deterministic fault matrix (raise at sweep k, corrupt labels,
+# preemption, VMEM overflow) exercises every executor route.  The hook may
+# raise (the injected failure) or return a replacement state (corruption).
+# Production solves never install one; install via
+# ``resilience.fault_injection`` (a context manager that restores it).
+
+_FAULT_HOOK: Callable | None = None
+
+
+def set_fault_hook(hook: Callable | None) -> Callable | None:
+    """Install ``hook(route, state, sweeps_done)``; returns the previous
+    hook so callers (the ``fault_injection`` context manager) can restore
+    it.  ``route`` is ``"host"`` or ``"device"``."""
+    global _FAULT_HOOK
+    prev, _FAULT_HOOK = _FAULT_HOOK, hook
+    return prev
+
+
+def _fire_fault_hook(route: str, state, sweeps_done: int):
+    if _FAULT_HOOK is None:
+        return state
+    out = _FAULT_HOOK(route, state, sweeps_done)
+    return state if out is None else out
+
+
+# --------------------------------------------------------------------------
 # capability flags + the one consistent error surface
 # --------------------------------------------------------------------------
 
@@ -229,7 +259,8 @@ def _device_chunk(ex: RegionExecutor, state, carry, limit):
 
 
 def run_device(ex: RegionExecutor, state, limit, host_sync_every,
-               chunk: Callable | None = None):
+               chunk: Callable | None = None, carry0=None,
+               on_sync: Callable | None = None):
     """Device-resident driver: the loop lives in ``lax.while_loop``; the
     host is re-entered once per ``host_sync_every`` sweeps (None: once per
     solve).  Returns ``(state, final_host_carry, host_syncs)``.
@@ -237,13 +268,20 @@ def run_device(ex: RegionExecutor, state, limit, host_sync_every,
     ``limit`` — total sweep budget: a python int, or a per-instance
     ``np.int32[B]`` for the batched executor.  ``chunk`` overrides the
     generic jitted chunk (the sharded route passes its memoized
-    mesh-bound SPMD program).
+    mesh-bound SPMD program).  ``carry0`` overrides ``ex.init_carry`` —
+    the checkpoint-resume entry: a carry restored from a snapshot
+    continues counters/rings (and the sweep index the executors thread
+    through ``carry[0]``) exactly where the interrupted solve stopped.
+    ``on_sync(state, host_carry, host_syncs)`` — optional hook fired at
+    every host-sync boundary (after the ``device_get``), the
+    checkpoint-capture point of the device-resident routes.
     """
     if chunk is None:
         chunk = partial(_device_chunk, ex)
-    carry = ex.init_carry(state)
+    carry = ex.init_carry(state) if carry0 is None else carry0
     syncs = 0
-    done = 0
+    done = 0 if carry0 is None \
+        else ex.progress(jax.device_get(carry), limit)[0]
     while True:
         cap = limit if host_sync_every is None \
             else np.minimum(limit, done + host_sync_every)
@@ -251,6 +289,9 @@ def run_device(ex: RegionExecutor, state, limit, host_sync_every,
         host = jax.device_get(carry)
         syncs += 1
         done, running = ex.progress(host, limit)
+        if on_sync is not None:
+            on_sync(state, host, syncs)
+        state = _fire_fault_hook("device", state, done)
         if not running:
             break
     return state, host, syncs
@@ -258,19 +299,27 @@ def run_device(ex: RegionExecutor, state, limit, host_sync_every,
 
 def run_host(ex: RegionExecutor, state, limit,
              sweep: Callable | None = None,
-             on_sweep: Callable | None = None):
+             on_sweep: Callable | None = None,
+             start: int = 0,
+             on_obs: Callable | None = None):
     """Host-loop driver: one traced program + one host sync per sweep.
 
     ``on_sweep(state, sweeps_done)`` — optional hook called at every sweep
     boundary (after the sweep's device program, before the next), the
     attachment point of the conformance suite's mid-solve invariant
     checker.  ``sweep`` overrides ``ex.sweep_host`` (the sharded route
-    passes its memoized mesh-bound program).
+    passes its memoized mesh-bound program).  ``start`` — first sweep
+    index (checkpoint resume: the loop continues at the interrupted
+    solve's absolute sweep count).  ``on_obs(state, sweeps_done, trace,
+    active_pre)`` — optional hook fired after every sweep's fetch with the
+    LIVE observation lists, the checkpoint-capture point of the host
+    route (it sees this incarnation's full accounting so far).
 
     Returns ``(state, trace, active_pre, host_syncs, sweeps)`` where
-    ``trace`` is the list of fetched per-sweep observations and
+    ``trace`` is the list of fetched per-sweep observations,
     ``active_pre`` the pre-sweep active counts (the host-loop
-    ``active_curve``, only populated for ``entry_check`` executors).
+    ``active_curve``, only populated for ``entry_check`` executors) and
+    ``sweeps`` the absolute sweep index reached (counts from ``start``).
     """
     if sweep is None:
         sweep = ex.sweep_host
@@ -281,7 +330,7 @@ def run_host(ex: RegionExecutor, state, limit,
     if ex.entry_check:
         n_act = int(jax.device_get(ex.num_active(state)))
         syncs += 1
-    idx = 0
+    idx = start
     while idx < limit:
         if ex.entry_check:
             active_pre.append(n_act)
@@ -295,6 +344,9 @@ def run_host(ex: RegionExecutor, state, limit,
         n_act = host_obs[0]
         if on_sweep is not None:
             on_sweep(state, idx)
+        if on_obs is not None:
+            on_obs(state, idx, trace, active_pre)
+        state = _fire_fault_hook("host", state, idx)
         if not ex.entry_check and n_act == 0:
             break
     return state, trace, active_pre, syncs, idx

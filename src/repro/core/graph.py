@@ -123,6 +123,85 @@ def _check_problem(p: Problem) -> None:
         assert (p.edges[:, 0] != p.edges[:, 1]).all(), "self loops not allowed"
 
 
+class ProblemValidationError(ValueError):
+    """A ``Problem`` carries capacities the int32 solver cannot run safely.
+
+    Raised by :func:`validate_problem` — the typed front door for
+    negative/overflow-risk inputs; the bare ``_check_problem`` asserts
+    stay as the internal (post-validation) sanity net inside ``build``.
+    """
+
+
+def validate_problem(p: Problem, *, context: str = "problem") -> None:
+    """Reject negative and overflow-risk capacities before they reach the
+    int32 flow arithmetic.
+
+    The solver's sentinels (``INF_CAP = INF_LABEL = 2**30``) rely on int32
+    sums never overflowing (see the module header): per undirected edge
+    the two directed capacities share one residual budget
+    (``cf(u,v) + cf(v,u)`` is invariant under pushes), per vertex
+    ``excess + sink_cf`` rides the same bound, the total source mass
+    bounds every accumulated excess and ``flow_to_t``, and the cut-cost
+    certificate sums capacities across the cut.  Checks (all sums in
+    int64):
+
+    * shapes consistent, edge endpoints in range, no self loops;
+    * every capacity/terminal >= 0;
+    * per edge: ``cap_fwd + cap_bwd < INF_CAP``;
+    * per vertex: ``excess + sink_cap < INF_CAP``;
+    * ``sum(excess) < INF_CAP`` (bounds excess accumulation, flow_to_t);
+    * ``sum(excess) + sum(sink_cap) + sum(caps) < 2**31`` (bounds the
+      cut-cost certificate reduction).
+
+    Raises :class:`ProblemValidationError` (a ``ValueError``) naming the
+    first offending quantity.  ``context`` labels the error source
+    ("prepare", "update", a DIMACS path, ...).
+    """
+    n, m = p.num_vertices, len(p.edges)
+
+    def fail(msg: str):
+        raise ProblemValidationError(f"invalid {context}: {msg}")
+
+    if p.edges.shape != (m, 2):
+        fail(f"edges shape {p.edges.shape} != ({m}, 2)")
+    if p.cap_fwd.shape != (m,) or p.cap_bwd.shape != (m,):
+        fail(f"edge-capacity shapes {p.cap_fwd.shape}/{p.cap_bwd.shape} "
+             f"!= ({m},)")
+    if p.excess.shape != (n,) or p.sink_cap.shape != (n,):
+        fail(f"terminal shapes {p.excess.shape}/{p.sink_cap.shape} != ({n},)")
+    if m:
+        if p.edges.min() < 0 or p.edges.max() >= n:
+            fail("edge endpoint outside [0, num_vertices)")
+        if (p.edges[:, 0] == p.edges[:, 1]).any():
+            fail("self loop")
+    for name, a in (("cap_fwd", p.cap_fwd), ("cap_bwd", p.cap_bwd),
+                    ("excess", p.excess), ("sink_cap", p.sink_cap)):
+        a = np.asarray(a)
+        if a.size and int(a.min()) < 0:
+            fail(f"negative {name} (min {int(a.min())}) at index "
+                 f"{int(np.argmin(a))}")
+    inf = int(INF_CAP)
+    pair = p.cap_fwd.astype(np.int64) + p.cap_bwd.astype(np.int64)
+    if m and int(pair.max()) >= inf:
+        i = int(np.argmax(pair))
+        fail(f"edge {i}: cap_fwd + cap_bwd = {int(pair[i])} >= INF_CAP "
+             f"(2^30) — the shared residual budget of one edge overflows")
+    term = p.excess.astype(np.int64) + p.sink_cap.astype(np.int64)
+    if n and int(term.max()) >= inf:
+        i = int(np.argmax(term))
+        fail(f"vertex {i}: excess + sink_cap = {int(term[i])} >= INF_CAP "
+             f"(2^30)")
+    total_excess = int(p.excess.astype(np.int64).sum())
+    if total_excess >= inf:
+        fail(f"sum(excess) = {total_excess} >= INF_CAP (2^30) — "
+             f"accumulated excess / flow_to_t can overflow int32")
+    total = (total_excess + int(p.sink_cap.astype(np.int64).sum())
+             + int(pair.sum()))
+    if total >= 2**31:
+        fail(f"total capacity mass {total} >= 2^31 — the int32 cut-cost "
+             f"certificate reduction can overflow")
+
+
 @dataclass(frozen=True)
 class Layout:
     """Host-side mapping between flat vertex ids and (region, local) slots.

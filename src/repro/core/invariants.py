@@ -1,0 +1,197 @@
+"""Preflow/labeling invariant checkers and structured solve diagnostics.
+
+The properties the paper's correctness and sweep-bound proofs rest on
+(Statements 1/9, eqs. (9)/(10)), promoted from the test fixture module
+(``tests/invariants.py``, now a thin assert wrapper over this one) so the
+*solver itself* can report them: a solve that stops at ``max_sweeps`` or
+fails the cut==flow certificate attaches a :class:`NonConvergence` report
+(``MincutResult.diagnosis``) listing exactly which invariants the final
+state violates, instead of dying on a bare assert.
+
+Checkers return a list of :class:`Violation` records (empty = the
+invariant holds), so callers choose between reporting and asserting:
+
+* :func:`check_valid_preflow`   — residuals/excess non-negative.
+* :func:`check_valid_labeling`  — d() is a valid distance labeling of the
+  residual network: every residual arc (u, v) satisfies
+  ``d(u) <= d(v) + w`` with w = 0 for ARD intra-region arcs, 1 for ARD
+  cross arcs, 1 for every PRD arc; sink-residual vertices are bounded by
+  the terminal distance (0 for ARD, 1 for PRD), all capped at d_inf.
+* :func:`check_flow_conservation` — excess mass + delivered flow equals
+  the conserved total of the entry state.
+* :func:`invariant_report`      — all of the above in one list.
+
+``CertificateError`` is the typed replacement for the historical bare
+``assert cost == flow`` in the result assembly: it still IS an
+``AssertionError`` (existing ``except AssertionError`` handlers keep
+working) but carries the structured report on ``.diagnosis``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.graph import intra_mask
+from repro.core.labels import gather_ghost_labels
+
+
+@dataclass
+class Violation:
+    """One broken invariant: which property, how many entries, evidence."""
+
+    kind: str       # "negative_residual" | "intra_arc_validity" | ...
+    count: int      # number of offending entries (0 for scalar properties)
+    detail: str     # human-readable evidence (first offenders, totals)
+
+
+def preflow_total(state) -> int:
+    """The conserved quantity: live excess + flow already delivered to t."""
+    return int(jnp.sum(jnp.where(state.vmask, state.excess, 0))) + \
+        int(state.flow_to_t)
+
+
+def _bad(kind: str, mask: np.ndarray, detail: str) -> list[Violation]:
+    n = int(np.count_nonzero(mask))
+    if n == 0:
+        return []
+    first = np.argwhere(mask)[:3].tolist()
+    return [Violation(kind=kind, count=n, detail=f"{detail}; first at {first}")]
+
+
+def check_valid_preflow(meta, state) -> list[Violation]:
+    """Residuals and excess of a preflow are non-negative everywhere."""
+    cf = np.asarray(state.cf)
+    sink_cf = np.asarray(state.sink_cf)
+    excess = np.asarray(state.excess)
+    vm = np.asarray(state.vmask)
+    out: list[Violation] = []
+    out += _bad("negative_residual", cf < 0, "cf < 0")
+    out += _bad("negative_sink_residual", sink_cf < 0, "sink_cf < 0")
+    out += _bad("negative_excess", (excess < 0) & vm, "excess < 0")
+    return out
+
+
+def check_valid_labeling(meta, state, *, ard: bool) -> list[Violation]:
+    """Paper eqs. (9)/(10): d() lower-bounds residual distance-to-sink.
+
+    ARD labels count boundary crossings (intra arcs cost 0, cross arcs 1,
+    the sink is at distance 0); PRD labels count hops (every arc costs 1,
+    the sink is one hop away).  Vertices at the ceiling d_inf are exempt
+    (they are declared unreachable), as are arcs into ghosts already at
+    the ceiling — ``d(u) <= d_inf <= ghost`` holds trivially there.
+    """
+    ghost_d = gather_ghost_labels(state)
+    intra = intra_mask(state)
+    d_inf = meta.d_inf_ard if ard else meta.d_inf_prd
+    d = state.d
+    du = jnp.broadcast_to(d[:, :, None], state.cf.shape)
+    resid = (state.cf > 0) & state.emask
+    at_cap = du >= d_inf
+    intra_w = 0 if ard else 1
+    bad_intra = resid & intra & (du > ghost_d + intra_w) & ~at_cap
+    cross = state.emask & ~intra
+    bad_cross = resid & cross & (du > ghost_d + 1) & ~at_cap
+    sink_w = 0 if ard else 1
+    bad_sink = (state.sink_cf > 0) & (d > sink_w) & (d < d_inf) & state.vmask
+    out: list[Violation] = []
+    out += _bad("intra_arc_validity", np.asarray(bad_intra),
+                f"residual intra arc with d(u) > d(v) + {intra_w}")
+    out += _bad("cross_arc_validity", np.asarray(bad_cross),
+                "residual cross arc with d(u) > ghost + 1")
+    out += _bad("sink_validity", np.asarray(bad_sink),
+                f"sink-residual vertex with d > {sink_w}")
+    return out
+
+
+def check_flow_conservation(meta, state, total0: int) -> list[Violation]:
+    """No flow mass appears or vanishes: excess + flow_to_t == total0."""
+    total = preflow_total(state)
+    if total == total0:
+        return []
+    return [Violation(kind="flow_conservation", count=0,
+                      detail=f"excess + flow_to_t = {total} != {total0}")]
+
+
+def invariant_report(meta, state, *, ard: bool,
+                     total0: int | None = None) -> list[Violation]:
+    """Every state-level invariant in one pass (empty list = all hold)."""
+    out = check_valid_preflow(meta, state)
+    out += check_valid_labeling(meta, state, ard=ard)
+    if total0 is not None:
+        out += check_flow_conservation(meta, state, total0)
+    return out
+
+
+# --------------------------------------------------------------------------
+# structured solve diagnostics
+# --------------------------------------------------------------------------
+
+@dataclass
+class NonConvergence:
+    """Structured report attached to a solve that cannot certify optimality.
+
+    ``reason`` — ``"max_sweeps"`` (the sweep budget ran out with active
+    vertices left: the preflow is valid but possibly non-maximum) or
+    ``"certificate"`` (the solve claims convergence but the independently
+    computed cut cost differs from the flow value: an internal-consistency
+    failure, e.g. state corrupted mid-solve).  ``violations`` lists which
+    preflow/labeling invariants the final state breaks — an intact
+    ``max_sweeps`` stop reports none; a corrupted state names the broken
+    property.
+    """
+
+    reason: str                      # "max_sweeps" | "certificate"
+    sweeps: int
+    max_sweeps: int | None
+    active_vertices: int
+    flow_value: int
+    cut_cost: int | None = None
+    violations: list[Violation] = field(default_factory=list)
+
+    def summary(self) -> str:
+        head = (f"non-convergence ({self.reason}): sweeps={self.sweeps}"
+                f"/{self.max_sweeps}, active={self.active_vertices}, "
+                f"flow={self.flow_value}")
+        if self.cut_cost is not None:
+            head += f", cut_cost={self.cut_cost}"
+        if self.violations:
+            head += "; broken invariants: " + ", ".join(
+                f"{v.kind} (x{v.count})" for v in self.violations)
+        return head
+
+
+class CertificateError(AssertionError):
+    """The cut==flow certificate failed on a solve that claims convergence.
+
+    Subclasses ``AssertionError`` (the historical raise of ``check=True``)
+    so existing handlers keep working; carries the structured
+    :class:`NonConvergence` report on ``.diagnosis``.
+    """
+
+    def __init__(self, message: str, diagnosis: NonConvergence):
+        self.diagnosis = diagnosis
+        super().__init__(f"{message}\n  {diagnosis.summary()}")
+
+
+def diagnose(meta, state, *, ard: bool, reason: str, sweeps: int,
+             max_sweeps: int | None, flow_value: int,
+             cut_cost: int | None = None,
+             total0: int | None = None) -> NonConvergence:
+    """Assemble a :class:`NonConvergence` report for a finished state."""
+    d_inf = meta.d_inf_ard if ard else meta.d_inf_prd
+    active = int(jnp.asarray(state.active(d_inf)).sum())
+    return NonConvergence(
+        reason=reason, sweeps=sweeps, max_sweeps=max_sweeps,
+        active_vertices=active, flow_value=flow_value, cut_cost=cut_cost,
+        violations=invariant_report(meta, state, ard=ard, total0=total0))
+
+
+__all__ = [
+    "CertificateError", "NonConvergence", "Violation",
+    "check_flow_conservation", "check_valid_labeling",
+    "check_valid_preflow", "diagnose", "invariant_report", "preflow_total",
+]

@@ -45,7 +45,9 @@ updates), ``"reset"`` starts from the cold ``Init`` labels.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from dataclasses import dataclass
+from pathlib import Path
 
 import jax.numpy as jnp
 import numpy as np
@@ -54,8 +56,10 @@ from repro.core import batch as _batch
 from repro.core import distributed as _distributed
 from repro.core import executor as _executor
 from repro.core import graph as _graph
+from repro.core import invariants as _inv
 from repro.core import labels as _labels
 from repro.core import partition as _partition
+from repro.core import resilience as _res
 from repro.core import sweep as _sweep
 from repro.core.graph import (FlowState, GraphMeta, GraphUpdate, Layout,
                               Problem, _round_pow2)
@@ -69,6 +73,13 @@ class MincutResult:
     meta: GraphMeta
     state: FlowState
     layout: Layout
+    converged: bool = True          # False: max_sweeps ran out with active
+    #                                 vertices left — flow_value is a valid
+    #                                 preflow's, possibly below the maximum,
+    #                                 and the cut certificate was NOT checked
+    diagnosis: _inv.NonConvergence | None = None
+    #                                 structured report when not converged
+    #                                 (which invariants hold, what stopped)
 
 
 @dataclass(frozen=True)
@@ -153,7 +164,8 @@ class SolverCacheInfo:
 
 def _finish(meta: GraphMeta, state0: FlowState, state: FlowState,
             layout: Layout, stats: _sweep.SweepStats, check: bool,
-            offset: int = 0) -> MincutResult:
+            offset: int = 0, *, converged: bool = True, ard: bool = True,
+            max_sweeps: int | None = None) -> MincutResult:
     """Extract the cut and package a result (shared by every route).
 
     ``offset`` — accumulated flow-value offset of the handle's
@@ -164,16 +176,35 @@ def _finish(meta: GraphMeta, state0: FlowState, state: FlowState,
     ``check`` verifies that the cut cost in the (current, un-reparameter-
     ized) initial network equals that value — an extra device fetch plus
     an O(n*E) host reduction, so serving paths may disable it.
+
+    A solve that stopped at ``max_sweeps`` (``converged=False``) returns a
+    structured result — ``MincutResult.converged=False`` plus a
+    ``NonConvergence`` diagnosis naming the active-vertex count and any
+    broken invariants — and SKIPS the certificate (a non-maximum preflow's
+    cut cost legitimately differs from its flow).  A converged solve whose
+    certificate fails raises the typed ``CertificateError`` (an
+    ``AssertionError``, as the historical bare assert was) carrying the
+    same diagnosis on ``.diagnosis``.
     """
     sink_side = _sweep.extract_cut(meta, state)
     flow = int(state.flow_to_t) - offset
-    if check:
+    diagnosis = None
+    if not converged:
+        diagnosis = _inv.diagnose(
+            meta, state, ard=ard, reason="max_sweeps", sweeps=stats.sweeps,
+            max_sweeps=max_sweeps, flow_value=flow)
+    elif check:
         cost = int(_sweep.cut_value(meta, state0, sink_side))
-        assert cost == flow, (
-            f"internal error: cut cost {cost} != max preflow {flow}")
+        if cost != flow:
+            raise _inv.CertificateError(
+                f"internal error: cut cost {cost} != max preflow {flow}",
+                _inv.diagnose(meta, state, ard=ard, reason="certificate",
+                              sweeps=stats.sweeps, max_sweeps=max_sweeps,
+                              flow_value=flow, cut_cost=cost))
     source_flat = ~layout.to_flat(np.asarray(sink_side))
     return MincutResult(flow_value=flow, source_side=source_flat,
-                        stats=stats, meta=meta, state=state, layout=layout)
+                        stats=stats, meta=meta, state=state, layout=layout,
+                        converged=converged, diagnosis=diagnosis)
 
 
 def _pad_i32(a: np.ndarray, size: int) -> jnp.ndarray:
@@ -255,8 +286,15 @@ class ProblemHandle:
             else np.array(sink_cap, np.int32)
         assert new_fwd.shape == (m,) and new_bwd.shape == (m,)
         assert new_exc.shape == (n,) and new_snk.shape == (n,)
-        assert (new_fwd >= 0).all() and (new_bwd >= 0).all()
-        assert (new_exc >= 0).all() and (new_snk >= 0).all()
+        newp = dataclasses.replace(p, cap_fwd=new_fwd, cap_bwd=new_bwd,
+                                   excess=new_exc, sink_cap=new_snk)
+        if self.solver.options.check:
+            # reject negative / overflow-risk capacities before they land
+            # on device (opt-out: SolverOptions.check=False serving paths)
+            _graph.validate_problem(newp, context="update")
+        else:
+            assert (new_fwd >= 0).all() and (new_bwd >= 0).all()
+            assert (new_exc >= 0).all() and (new_snk >= 0).all()
 
         d_fwd = new_fwd.astype(np.int64) - p.cap_fwd
         d_bwd = new_bwd.astype(np.int64) - p.cap_bwd
@@ -288,9 +326,7 @@ class ProblemHandle:
         self._dirty = True
         self._grew = self._grew | grew
         self._flow_offset = self._flow_offset + doff
-        self.problem = dataclasses.replace(
-            p, cap_fwd=new_fwd, cap_bwd=new_bwd, excess=new_exc,
-            sink_cap=new_snk)
+        self.problem = newp
         return self
 
     def reset(self) -> "ProblemHandle":
@@ -325,7 +361,15 @@ class ProblemHandle:
                 self.meta, st, self.solver.options.method == "ard")
         return st                     # "keep", or labels provably valid
 
-    def solve(self, *, mesh=None, axes=("regions",)) -> MincutResult:
+    def _layout_salt(self) -> str:
+        """Fingerprint salt binding checkpoints to THIS partition — two
+        same-shaped problems with different region assignments must not
+        cross-resume."""
+        return hashlib.sha256(
+            np.ascontiguousarray(self.part).tobytes()).hexdigest()[:16]
+
+    def solve(self, *, mesh=None, axes=("regions",), checkpoint=None,
+              resume_from=None) -> MincutResult:
         """Solve (or warm re-solve) the prepared problem.
 
         Routes on the session options: host-loop or device-resident sweep
@@ -333,30 +377,69 @@ class ProblemHandle:
         given.  Cold solves start from the paper's ``Init``; warm solves
         continue from the resident preflow with labels per
         ``SolverOptions.warm_labels``.
+
+        ``checkpoint`` — a ``resilience.CheckpointPolicy`` or a directory
+        path: capture resumable sweep-boundary checkpoints (the handle
+        stamps its layout digest and warm-start flow offset into them).
+        ``resume_from`` — a ``SolveCheckpoint`` or checkpoint directory:
+        continue an interrupted solve bit-exactly; the checkpoint's flow
+        offset is adopted (authoritative for a cross-process resume).
+
+        Kernel lowering/VMEM failures degrade the engine configuration
+        one ladder rung at a time (pallas-fused -> xla-fused ->
+        xla-unfused, ``resilience.degrade_config``) and re-run — every
+        rung is bit-exact, and each degradation is recorded in
+        ``stats.degraded``, never silent.
         """
         opts = self.solver.options
         cfg = opts.sweep_config()
+        salt = self._layout_salt()
+        if isinstance(checkpoint, (str, Path)):
+            checkpoint = _res.CheckpointPolicy(directory=checkpoint)
+        ckpt_obj = resume_from
+        if isinstance(ckpt_obj, (str, Path)):
+            ckpt_obj = _res.load_checkpoint(ckpt_obj)
+        if ckpt_obj is not None:
+            # the checkpoint's bookkeeping is authoritative across processes
+            self._flow_offset = jnp.asarray(ckpt_obj.flow_offset, jnp.int32)
+        if checkpoint is not None:
+            checkpoint = dataclasses.replace(
+                checkpoint, salt=salt, flow_offset=int(self._flow_offset))
         before = self.solver._trace_total()  # before _entry_state: the
         #                 warm-labels relabel program's trace must count
         st_in = self._entry_state()
-        if mesh is not None:
-            st, sweeps, syncs = _distributed.solve_sharded(
-                self.meta, st_in, mesh, cfg, axes=tuple(axes),
-                exchange=opts.exchange, return_stats=True)
-            _pb, msg_bytes = _sweep._page_and_msg_bytes(self.meta, st)
-            stats = _sweep.SweepStats(
-                sweeps=sweeps, engine_iters=None, engine_launches=None,
-                host_syncs=syncs, boundary_bytes=sweeps * msg_bytes,
-                page_bytes=None, regions_discharged=None)
-        else:
-            st, stats = _sweep.solve(self.meta, st_in, cfg, warm=True)
+        d_inf = (self.meta.d_inf_ard if opts.method == "ard"
+                 else self.meta.d_inf_prd)
+
+        def run(c):
+            if mesh is not None:
+                st, sweeps, syncs = _distributed.solve_sharded(
+                    self.meta, st_in, mesh, c, axes=tuple(axes),
+                    exchange=opts.exchange, return_stats=True,
+                    checkpoint=checkpoint, resume_from=ckpt_obj, salt=salt)
+                _pb, msg_bytes = _sweep._page_and_msg_bytes(self.meta, st)
+                stats = _sweep.SweepStats(
+                    sweeps=sweeps, engine_iters=None, engine_launches=None,
+                    host_syncs=syncs, boundary_bytes=sweeps * msg_bytes,
+                    page_bytes=None, regions_discharged=None,
+                    converged=int(st.active(d_inf).sum()) == 0)
+                return st, stats
+            return _sweep.solve(self.meta, st_in, c, warm=True,
+                                checkpoint=checkpoint, resume_from=ckpt_obj,
+                                salt=salt)
+
+        notes: list[str] = []
+        st, stats = _res.run_with_degradation(run, cfg, notes)
+        stats.degraded = notes + stats.degraded
         self.solver._note(before)
         self.state = st
         self.warm = True
         self._dirty = False
         self._grew = jnp.zeros((), bool)
         return _finish(self.meta, self.state0, st, self.layout, stats,
-                       opts.check, offset=int(self._flow_offset))
+                       opts.check, offset=int(self._flow_offset),
+                       converged=stats.converged, ard=opts.method == "ard",
+                       max_sweeps=cfg.max_sweeps)
 
 
 class Solver:
@@ -412,6 +495,11 @@ class Solver:
         into ``options.num_regions`` regions (the paper's fallback
         partitioner, as before).
         """
+        if self.options.check:
+            # fail fast on malformed input (negative capacities, int32
+            # overflow risk vs INF_CAP) before any device work; serving
+            # paths opt out with SolverOptions.check=False
+            _graph.validate_problem(problem, context="problem")
         if part is None:
             part = _partition.block_partition(problem.num_vertices,
                                               self.options.num_regions)
@@ -424,7 +512,8 @@ class Solver:
         """One-shot convenience: ``prepare(problem, part).solve()``."""
         return self.prepare(problem, part).solve(mesh=mesh)
 
-    def solve_many(self, items, parts=None) -> list[MincutResult]:
+    def solve_many(self, items, parts=None, *, checkpoint=None,
+                   resume_from=None) -> list[MincutResult]:
         """Solve a fleet through the shape-bucketed batched driver.
 
         ``items`` — ``ProblemHandle``s of this session and/or raw
@@ -435,9 +524,16 @@ class Solver:
         to ``handle.solve()`` on the same state; ``engine_launches``/
         ``host_syncs`` in the returned stats are global to each batch
         (``SweepStats.scope == "batch"``).
+
+        ``checkpoint``/``resume_from`` — sweep-boundary checkpointing as
+        in ``handle.solve``, restricted to fleets that pack into ONE shape
+        bucket (one checkpoint stream per solve; re-pack the same items in
+        the same order to resume).
         """
         cfg = self.options.sweep_config()
         _executor.BatchedExecutor.validate(cfg)
+        if isinstance(checkpoint, (str, Path)):
+            checkpoint = _res.CheckpointPolicy(directory=checkpoint)
         handles: list[ProblemHandle] = []
         for i, it in enumerate(items):
             if isinstance(it, ProblemHandle):
@@ -455,10 +551,21 @@ class Solver:
         builds = [(i, h.meta, h._entry_state(), h.layout, h.state0)
                   for i, h in enumerate(handles)]
         packs = _graph.pack_built(builds)
+        if (checkpoint is not None or resume_from is not None) \
+                and len(packs) != 1:
+            raise ValueError(
+                f"checkpointed solve_many needs a single shape bucket "
+                f"(one checkpoint stream per solve); these items pack "
+                f"into {len(packs)} buckets")
+        salt = hashlib.sha256(b"".join(
+            np.ascontiguousarray(h.part).tobytes()
+            for h in handles)).hexdigest()[:16]
         results: list[MincutResult | None] = [None] * len(handles)
         self.last_batch_stats = []
         for packed in packs:
-            bstate, bstats = _batch.solve_batch(packed, cfg)
+            bstate, bstats = _batch.solve_batch(
+                packed, cfg, checkpoint=checkpoint, resume_from=resume_from,
+                salt=salt)
             self._note(before)
             before = self._trace_total()
             self.last_batch_stats.append(bstats)
@@ -476,6 +583,8 @@ class Solver:
                 sweeps = int(bstats.sweeps[b])
                 page_bytes, msg_bytes = _sweep._page_and_msg_bytes(
                     meta, h.state0)
+                converged = bool(bstats.converged[b]) \
+                    if bstats.converged is not None else True
                 stats = _sweep.SweepStats(
                     sweeps=sweeps,
                     engine_iters=int(bstats.engine_iters[b]),
@@ -484,12 +593,14 @@ class Solver:
                     boundary_bytes=sweeps * msg_bytes,
                     page_bytes=sweeps * meta.num_regions * page_bytes,
                     regions_discharged=sweeps * meta.num_regions,
-                    scope="batch")
+                    scope="batch", converged=converged)
                 h.state = st
                 h.warm = True
                 h._dirty = False
                 h._grew = jnp.zeros((), bool)
                 results[idx] = _finish(
                     meta, h.state0, st, h.layout, stats, self.options.check,
-                    offset=int(h._flow_offset))
+                    offset=int(h._flow_offset), converged=converged,
+                    ard=self.options.method == "ard",
+                    max_sweeps=cfg.max_sweeps)
         return results

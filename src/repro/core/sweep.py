@@ -44,9 +44,11 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import executor as _executor
 from repro.core import heuristics
+from repro.core import resilience as _res
 from repro.core.ard import ard_discharge_batched, ard_discharge_one
 from repro.core.engine import ENGINE_BACKENDS
 from repro.core.graph import FlowState, GraphMeta, intra_mask
@@ -161,6 +163,27 @@ class SweepStats:
     flow_curve: list = dataclasses.field(default_factory=list)
     active_curve: list = dataclasses.field(default_factory=list)
     scope: str = "instance"      # "instance" | "batch" (see class docstring)
+    converged: bool = True       # False: stopped at max_sweeps with active
+    #                              vertices left (see MincutResult.diagnosis)
+    degraded: list = dataclasses.field(default_factory=list)
+    #                              engine degradations taken mid-solve
+    #                              (resilience ladder rungs, static VMEM
+    #                              fallbacks) — never silent
+
+
+_STAT_KEYS = ("sweeps", "engine_iters", "engine_launches", "host_syncs",
+              "boundary_bytes", "page_bytes", "regions_discharged",
+              "flow_curve", "active_curve", "converged", "degraded")
+
+
+def stats_to_dict(stats: SweepStats) -> dict:
+    """JSON-serializable accounting snapshot (checkpoint manifests)."""
+    return {k: getattr(stats, k) for k in _STAT_KEYS}
+
+
+def stats_from_dict(d: dict) -> SweepStats:
+    """Inverse of :func:`stats_to_dict` (tolerates missing keys)."""
+    return SweepStats(**{k: d[k] for k in _STAT_KEYS if k in d})
 
 
 def _d_inf(meta: GraphMeta, cfg: SweepConfig) -> int:
@@ -350,8 +373,38 @@ def _page_and_msg_bytes(meta: GraphMeta, state: FlowState):
     return page_bytes, 8 * meta.num_cross_arcs
 
 
+def _device_stats(host, syncs, max_sweeps, R, page_bytes, msg_bytes,
+                  seed_syncs=0):
+    """SweepStats from a fetched device-resident carry.
+
+    The carry holds ABSOLUTE counters (a checkpoint-resumed ``carry0``
+    seeds them with the interrupted solve's values), so the reconstruction
+    is complete without seed accumulation; only ``host_syncs`` counts per
+    incarnation and needs the checkpoint's total added.
+    """
+    idx, it, ln, dc, fr, ar, n_act = host
+    stats = SweepStats()
+    done = int(idx)
+    stats.host_syncs = seed_syncs + syncs
+    stats.sweeps = done
+    stats.engine_iters = int(it)
+    stats.engine_launches = int(ln)
+    stats.regions_discharged = int(dc)
+    stats.page_bytes = int(dc) * page_bytes
+    stats.boundary_bytes = done * msg_bytes
+    first = max(0, done - R)
+    stats.flow_curve = [int(fr[j % R]) for j in range(first, done)]
+    stats.active_curve = [int(ar[j % R]) for j in range(first, done)]
+    stats.converged = int(n_act) == 0
+    if int(n_act) == 0 and done < max_sweeps:
+        stats.active_curve.append(int(n_act))   # the terminal 0 the host
+        #                                         loop records on its exit
+    return stats
+
+
 def _solve_device_resident(meta: GraphMeta, state: FlowState,
-                           cfg: SweepConfig, ex):
+                           cfg: SweepConfig, ex, *, fp: str = "",
+                           checkpoint=None, ckpt=None):
     """Device-resident solve: one kernel-program chain per host sync.
 
     The whole sweep loop — discharge, fusion, gap heuristic, convergence
@@ -362,36 +415,78 @@ def _solve_device_resident(meta: GraphMeta, state: FlowState,
     the host loop on state and counters; the flow/active curves live in
     fixed-size device rings, so only the last ``stats_ring_size`` sweeps
     of the curves survive very long solves.
+
+    Checkpoints (``checkpoint``: a ``resilience.CheckpointPolicy``) are
+    captured at the host-sync boundaries — the only host re-entry this
+    driver has, so ``cfg.host_sync_every`` bounds the checkpoint cadence
+    from below.  ``ckpt`` (a verified ``resilience.SolveCheckpoint``)
+    resumes: counters and curve rings are rebuilt into the loop carry, so
+    the continued solve is bit-exact with an uninterrupted one.
     """
-    stats = SweepStats()
     bound = sweep_bound(meta, cfg)
     max_sweeps = cfg.max_sweeps if cfg.max_sweeps is not None else bound
     R = cfg.stats_ring_size
     page_bytes, msg_bytes = _page_and_msg_bytes(meta, state)
 
-    state, host, syncs = _executor.run_device(
-        ex, state, max_sweeps, cfg.host_sync_every)
-    idx, it, ln, dc, fr, ar, n_act = host
-    stats.host_syncs = syncs
-    done = int(idx)
+    carry0 = None
+    seed_syncs = 0
+    degraded: list = []
+    if ckpt is not None:
+        state = _res.restore_state(state, ckpt.payload)
+        seed = stats_from_dict(ckpt.stats)
+        seed_syncs = seed.host_syncs
+        degraded = list(seed.degraded)
+        done0 = seed.sweeps
+        # rebuild the curve rings: ring slot j % R holds sweep j's value
+        # for the last min(done0, R) sweeps (older slots are never read);
+        # the active curve is trimmed to the flow curve's length to drop
+        # the terminal 0 a converged checkpoint may carry
+        flow_curve = seed.flow_curve
+        active_curve = seed.active_curve[:len(flow_curve)]
+        first = max(0, done0 - R)
+        fr = np.zeros((R,), np.int32)
+        ar = np.zeros((R,), np.int32)
+        for j in range(first, done0):
+            fr[j % R] = flow_curve[j - first]
+            ar[j % R] = active_curve[j - first]
+        carry0 = (jnp.asarray(done0, _I32),
+                  jnp.asarray(seed.engine_iters, _I32),
+                  jnp.asarray(seed.engine_launches, _I32),
+                  jnp.asarray(seed.regions_discharged, _I32),
+                  jnp.asarray(fr), jnp.asarray(ar),
+                  jnp.asarray(int(ckpt.payload["n_act"]), _I32))
 
-    stats.sweeps = done
-    stats.engine_iters = int(it)
-    stats.engine_launches = int(ln)
-    stats.regions_discharged = int(dc)
-    stats.page_bytes = int(dc) * page_bytes
-    stats.boundary_bytes = done * msg_bytes
-    first = max(0, done - R)
-    stats.flow_curve = [int(fr[j % R]) for j in range(first, done)]
-    stats.active_curve = [int(ar[j % R]) for j in range(first, done)]
-    if int(n_act) == 0 and done < max_sweeps:
-        stats.active_curve.append(int(n_act))   # the terminal 0 the host
-        #                                         loop records on its exit
+    on_sync = None
+    if checkpoint is not None:
+        last_saved = [ckpt.sweeps if ckpt is not None else 0]
+
+        def on_sync(st, host, syncs):
+            done, running = ex.progress(host, max_sweeps)
+            if running and done - last_saved[0] < checkpoint.every:
+                return
+            stats = _device_stats(host, syncs, max_sweeps, R, page_bytes,
+                                  msg_bytes, seed_syncs=seed_syncs)
+            stats.degraded = list(degraded)
+            payload = _res.state_payload(st)
+            payload["n_act"] = np.asarray(host[-1], np.int32)
+            _res.save_checkpoint(checkpoint.directory, _res.SolveCheckpoint(
+                fingerprint=fp, route="device", sweeps=done,
+                payload=payload, stats=stats_to_dict(stats),
+                flow_offset=checkpoint.flow_offset))
+            last_saved[0] = done
+
+    state, host, syncs = _executor.run_device(
+        ex, state, max_sweeps, cfg.host_sync_every, carry0=carry0,
+        on_sync=on_sync)
+    stats = _device_stats(host, syncs, max_sweeps, R, page_bytes, msg_bytes,
+                          seed_syncs=seed_syncs)
+    stats.degraded = list(degraded)
     return state, stats
 
 
 def solve(meta: GraphMeta, state: FlowState, cfg: SweepConfig | None = None,
-          *, warm: bool = False, on_sweep=None):
+          *, warm: bool = False, on_sweep=None, checkpoint=None,
+          resume_from=None, salt: str = ""):
     """Run sweeps until no active vertex remains (maximum preflow reached).
 
     ``warm`` — continue from the given state *as is*: its preflow (``cf``/
@@ -408,14 +503,29 @@ def solve(meta: GraphMeta, state: FlowState, cfg: SweepConfig | None = None,
     invariants mid-solve); incompatible with ``device_resident`` (there is
     no host boundary to call it from).
 
+    ``checkpoint`` — a ``resilience.CheckpointPolicy``: capture a
+    resumable ``SolveCheckpoint`` atomically on disk at sweep boundaries
+    (host loop: every ``checkpoint.every`` sweeps + the final boundary;
+    device-resident: at the ``host_sync_every`` boundaries under the same
+    cadence).  ``resume_from`` — a ``SolveCheckpoint`` or a checkpoint
+    directory (latest wins): continue the interrupted solve BIT-EXACTLY —
+    flow, labels, sweeps and engine counters match the uninterrupted run
+    (``host_syncs`` honestly counts both incarnations' syncs).  A
+    checkpoint from different math (method/heuristics/layout) is rejected
+    with ``CheckpointMismatchError``; engine-backend and driver knobs are
+    deliberately NOT part of the identity (every route/rung is
+    bit-identical), so cross-driver resume is allowed.  ``salt`` — extra
+    fingerprint input (the session front-end's layout digest); a given
+    ``checkpoint.salt`` wins.
+
     Returns (state, SweepStats).  Two drivers, bit-identical results, both
     thin composition over the generic executor loop (``core.executor``):
 
     * host loop (default) — ``executor.run_host``: each sweep is one
-      jitted device program with one device->host sync after it; the
-      paper's statistics (sweeps, I/O bytes) are accumulated between
-      programs, exactly like the streaming solver accounts disk I/O
-      between region loads;
+      jitted device program with one host sync after it; the paper's
+      statistics (sweeps, I/O bytes) are accumulated between programs,
+      exactly like the streaming solver accounts disk I/O between region
+      loads;
     * ``cfg.device_resident`` — ``executor.run_device``: the loop itself
       moves into a ``lax.while_loop``; the host is re-entered once per
       ``cfg.host_sync_every`` sweeps (default: once per solve).
@@ -423,30 +533,95 @@ def solve(meta: GraphMeta, state: FlowState, cfg: SweepConfig | None = None,
     cfg = cfg or SweepConfig()
     _executor.LocalExecutor.validate(cfg)
     ex = _executor.LocalExecutor(meta, cfg)
-    if not warm:
+    if checkpoint is not None:
+        salt = checkpoint.salt
+    fp = _res.solve_fingerprint(meta, cfg, salt)
+    ckpt = _res.resolve_resume(resume_from, fp)
+    if ckpt is None and not warm:
         state = state.replace(d=jnp.zeros_like(state.d))
     if cfg.device_resident:
         if on_sweep is not None:
             raise ValueError("on_sweep needs the host loop; it cannot fire "
                              "inside the device-resident lax.while_loop")
-        return _solve_device_resident(meta, state, cfg, ex)
-    stats = SweepStats()
+        state, stats = _solve_device_resident(
+            meta, state, cfg, ex, fp=fp, checkpoint=checkpoint, ckpt=ckpt)
+    else:
+        state, stats = _solve_host(
+            meta, state, cfg, ex, on_sweep=on_sweep, fp=fp,
+            checkpoint=checkpoint, ckpt=ckpt)
+    note = _res.vmem_fallback_note(cfg, state.cf.shape[1], state.cf.shape[2])
+    if note is not None and note not in stats.degraded:
+        stats.degraded.append(note)
+    return state, stats
+
+
+def _solve_host(meta: GraphMeta, state: FlowState, cfg: SweepConfig, ex, *,
+                on_sweep=None, fp: str = "", checkpoint=None, ckpt=None):
+    """Host-loop solve with checkpoint capture at every sweep boundary."""
     bound = sweep_bound(meta, cfg)
     max_sweeps = cfg.max_sweeps if cfg.max_sweeps is not None else bound
     page_bytes, msg_bytes = _page_and_msg_bytes(meta, state)
 
+    seed = None
+    start = 0
+    if ckpt is not None:
+        state = _res.restore_state(state, ckpt.payload)
+        seed = stats_from_dict(ckpt.stats)
+        # drop the terminal 0 a converged checkpoint may carry in its
+        # active curve — the resumed loop's entry check re-records it
+        seed.active_curve = seed.active_curve[:len(seed.flow_curve)]
+        start = ckpt.sweeps
+
+    def build(trace, active_pre, syncs, sweeps):
+        """Accumulated stats = checkpoint seed + this incarnation's trace."""
+        stats = SweepStats() if seed is None else stats_from_dict(
+            stats_to_dict(seed))
+        stats.host_syncs += syncs
+        stats.sweeps = sweeps
+        stats.active_curve = stats.active_curve + active_pre
+        stats.flow_curve = list(stats.flow_curve)
+        stats.degraded = list(stats.degraded)
+        for n_act, flow, it, ln, dc in trace:
+            stats.engine_iters += it
+            stats.engine_launches += ln
+            stats.regions_discharged += dc
+            stats.page_bytes += dc * page_bytes
+            stats.boundary_bytes += msg_bytes
+            stats.flow_curve.append(flow)
+        return stats
+
+    on_obs = None
+    last_saved = [start]
+    if checkpoint is not None:
+        def on_obs(st, idx, trace, active_pre):
+            if idx - last_saved[0] < checkpoint.every:
+                return
+            _save_host_ckpt(st, idx, trace, active_pre)
+
+        def _save_host_ckpt(st, idx, trace, active_pre):
+            # syncs so far this incarnation: 1 entry check + 1 per sweep
+            stats = build(trace, active_pre, 1 + len(trace), idx)
+            stats.converged = bool(trace and trace[-1][0] == 0)
+            payload = _res.state_payload(st)
+            payload["n_act"] = np.asarray(
+                trace[-1][0] if trace else 0, np.int32)
+            _res.save_checkpoint(checkpoint.directory, _res.SolveCheckpoint(
+                fingerprint=fp, route="host", sweeps=idx, payload=payload,
+                stats=stats_to_dict(stats),
+                flow_offset=checkpoint.flow_offset))
+            last_saved[0] = idx
+
     state, trace, active_pre, syncs, sweeps = _executor.run_host(
-        ex, state, max_sweeps, on_sweep=on_sweep)
-    stats.host_syncs = syncs
-    stats.sweeps = sweeps
-    stats.active_curve = active_pre
-    for n_act, flow, it, ln, dc in trace:
-        stats.engine_iters += it
-        stats.engine_launches += ln
-        stats.regions_discharged += dc
-        stats.page_bytes += dc * page_bytes
-        stats.boundary_bytes += msg_bytes
-        stats.flow_curve.append(flow)
+        ex, state, max_sweeps, on_sweep=on_sweep, start=start, on_obs=on_obs)
+    stats = build(trace, active_pre, syncs, sweeps)
+    if trace:
+        stats.converged = trace[-1][0] == 0
+    elif active_pre:
+        stats.converged = active_pre[-1] == 0
+    elif seed is not None:
+        stats.converged = bool(seed.converged)
+    if checkpoint is not None and sweeps > last_saved[0]:
+        _save_host_ckpt(state, sweeps, trace, active_pre)
     return state, stats
 
 

@@ -30,7 +30,7 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.core.graph import Problem
+from repro.core.graph import Problem, validate_problem
 
 
 def read_dimacs(source) -> Problem:
@@ -114,11 +114,15 @@ def read_dimacs(source) -> Problem:
                     ("source-arc", excess), ("sink-arc", sink_cap)):
         assert a.size == 0 or a.max(initial=0) <= np.iinfo(np.int32).max, \
             f"{name} capacity overflows int32"
-    return Problem(num_vertices=n, edges=edges,
-                   cap_fwd=cap_fwd.astype(np.int32),
-                   cap_bwd=cap_bwd.astype(np.int32),
-                   excess=excess.astype(np.int32),
-                   sink_cap=sink_cap.astype(np.int32))
+    problem = Problem(num_vertices=n, edges=edges,
+                      cap_fwd=cap_fwd.astype(np.int32),
+                      cap_bwd=cap_bwd.astype(np.int32),
+                      excess=excess.astype(np.int32),
+                      sink_cap=sink_cap.astype(np.int32))
+    # structured rejection of overflow-risk inputs (capacity sums nearing
+    # INF_CAP would corrupt the solver's int32 arithmetic mid-solve)
+    validate_problem(problem, context="DIMACS input")
+    return problem
 
 
 def write_dimacs(problem: Problem, dest=None) -> str:

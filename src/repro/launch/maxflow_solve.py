@@ -30,6 +30,12 @@ network on device; the solve continues from the warm preflow):
 
 Prints per-re-solve sweeps/launches and the session's compile-cache
 hits/misses (steady state: zero retraces per cycle).
+
+Fault tolerance: ``--checkpoint-dir DIR [--checkpoint-every N]`` captures
+resumable sweep-boundary checkpoints during the solve; ``--resume``
+continues bit-exactly from the latest one after a kill/preemption
+(``repro.core.resilience``; exercised end-to-end by
+tools/kill_resume_smoke.py).
 """
 
 from __future__ import annotations
@@ -88,6 +94,18 @@ def main():
     ap.add_argument("--perturb", type=float, default=0.01, metavar="P",
                     help="fraction of edges re-randomized per re-solve "
                          "(default 0.01)")
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="capture resumable sweep-boundary checkpoints "
+                         "under DIR (atomic write-then-rename snapshots; "
+                         "see repro.core.resilience)")
+    ap.add_argument("--checkpoint-every", type=int, default=5, metavar="N",
+                    help="checkpoint cadence in sweeps (default 5; the "
+                         "device-resident routes capture at their "
+                         "--host-sync-every boundaries)")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue bit-exactly from the latest checkpoint "
+                         "in --checkpoint-dir when one exists (the "
+                         "restart-after-preemption path)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -104,10 +122,29 @@ def main():
                       device_resident=args.device_resident,
                       host_sync_every=args.host_sync_every)
 
+    checkpoint = resume_from = None
+    if args.resume and not args.checkpoint_dir:
+        ap.error("--resume needs --checkpoint-dir")
+    if args.checkpoint_dir:
+        from repro.core import resilience as _res
+
+        checkpoint = _res.CheckpointPolicy(directory=args.checkpoint_dir,
+                                           every=args.checkpoint_every)
+        if args.resume and _res.snapshot_latest(args.checkpoint_dir) \
+                is not None:
+            resume_from = args.checkpoint_dir
+            print(f"[maxflow] resuming from checkpoint sweep "
+                  f"{_res.snapshot_latest(args.checkpoint_dir)} "
+                  f"under {args.checkpoint_dir}")
+
     if args.batch:
         if args.resolve:
             ap.error("--resolve works on a single prepared instance; "
                      "it cannot be combined with --batch")
+        if args.checkpoint_dir:
+            ap.error("--checkpoint-dir on the batch route goes through "
+                     "Solver.solve_many(checkpoint=...); the CLI wires "
+                     "the single-instance routes only")
         import re
         from pathlib import Path
 
@@ -169,7 +206,8 @@ def main():
         mesh = jax.make_mesh((n_dev,), ("regions",))
 
     t0 = time.time()
-    res = handle.solve(mesh=mesh)
+    res = handle.solve(mesh=mesh, checkpoint=checkpoint,
+                       resume_from=resume_from)
     route = (f"sharded x{len(jax.devices())}" if args.sharded
              else f"device_resident={cfg.device_resident}")
     print(f"[maxflow] {args.method} parallel={cfg.parallel} {route}: "

@@ -1,134 +1,55 @@
-"""Sharded, manifest-based checkpointing with atomic publish and elastic
-restore.
+"""Sharded, manifest-based checkpointing — thin wrapper over the shared
+atomic-snapshot utility in ``repro.core.resilience``.
+
+Historically this module owned the write-to-temp-then-rename snapshot
+implementation; the robustness PR promoted that machinery into
+``core/resilience.py`` (where the solver's sweep-boundary checkpoints
+also use it) and this module now delegates, keeping the training-side
+API (``save``/``latest_step``/``restore``/``manifest_of``) stable for
+the fault-tolerant training driver (train/fault.py).
 
 Layout (one directory per step):
 
-    <dir>/step_000100.tmp/...      while writing
-    <dir>/step_000100/manifest.json
-    <dir>/step_000100/arr_00000.npz ...
+    <dir>/step_00000100.tmp/...      while writing
+    <dir>/step_00000100/manifest.json
+    <dir>/step_00000100/arrays.npz
 
-Every leaf of the state pytree is saved as float/int arrays in .npz chunks
-together with a manifest recording tree structure, dtypes, shapes and the
-mesh it was saved under.  Restore is *elastic*: arrays are re-laid-out onto
-the target mesh via ``jax.device_put`` with the new shardings, so a
-checkpoint taken on an N-device mesh restores onto any other mesh whose
-axis sizes divide the array dimensions (scale up, scale down, or reshape
-the mesh).  The publish step is an atomic ``rename`` — a crashed writer
-never corrupts the latest checkpoint, which is the property the
-fault-tolerant driver (train/fault.py) relies on.
-
-In a true multi-host deployment each host writes only the shards it owns
-(addressable_shards) with the same manifest/rename protocol; this container
-is single-process so arrays are fully addressable.
+Restore is *elastic*: arrays are re-laid-out onto the target mesh via
+``jax.device_put`` with the new shardings, so a checkpoint taken on an
+N-device mesh restores onto any other mesh whose axis sizes divide the
+array dimensions.  The publish step is an atomic ``rename`` — a crashed
+writer never corrupts the latest checkpoint.
 """
 
 from __future__ import annotations
 
-import json
-import os
-import shutil
 from pathlib import Path
 from typing import Any
 
-import jax
-import numpy as np
+from repro.core.resilience import (
+    MANIFEST,
+    snapshot_latest,
+    snapshot_manifest,
+    snapshot_restore,
+    snapshot_save,
+)
 
-MANIFEST = "manifest.json"
-
-
-def _flatten_with_paths(tree):
-    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
-    out = []
-    for kp, leaf in flat:
-        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
-                        for k in kp)
-        out.append((path, leaf))
-    return out
+__all__ = ["MANIFEST", "save", "latest_step", "restore", "manifest_of"]
 
 
 def save(directory: str | Path, step: int, state: Any,
          extra: dict | None = None) -> Path:
-    directory = Path(directory)
-    directory.mkdir(parents=True, exist_ok=True)
-    final = directory / f"step_{step:08d}"
-    tmp = directory / f"step_{step:08d}.tmp"
-    if tmp.exists():
-        shutil.rmtree(tmp)
-    tmp.mkdir(parents=True)
-
-    leaves = _flatten_with_paths(state)
-    manifest = {"step": step, "leaves": [], "extra": extra or {}}
-    arrays = {}
-    for i, (path, leaf) in enumerate(leaves):
-        arr = np.asarray(jax.device_get(leaf))
-        key = f"a{i:05d}"
-        # bf16 has no numpy dtype: store raw uint16 view + dtype tag
-        dtype = str(leaf.dtype)
-        if dtype == "bfloat16":
-            arr = arr.view(np.uint16)
-        arrays[key] = arr
-        manifest["leaves"].append(
-            {"path": path, "key": key, "dtype": dtype,
-             "shape": list(arr.shape)})
-    np.savez(tmp / "arrays.npz", **arrays)
-    (tmp / MANIFEST).write_text(json.dumps(manifest, indent=1))
-    if final.exists():
-        shutil.rmtree(final)
-    os.rename(tmp, final)                      # atomic publish
-    return final
+    return snapshot_save(directory, step, state, extra=extra)
 
 
 def latest_step(directory: str | Path) -> int | None:
-    directory = Path(directory)
-    if not directory.exists():
-        return None
-    steps = []
-    for p in directory.iterdir():
-        if p.is_dir() and p.name.startswith("step_") \
-                and not p.name.endswith(".tmp") \
-                and (p / MANIFEST).exists():
-            steps.append(int(p.name[5:]))
-    return max(steps) if steps else None
+    return snapshot_latest(directory)
 
 
 def restore(directory: str | Path, step: int, like: Any,
             shardings: Any | None = None) -> Any:
-    """Restore into the structure of ``like`` (a pytree of arrays or
-    ShapeDtypeStructs).  ``shardings`` (same structure) re-lays the arrays
-    onto the *current* mesh — the elastic path.
-    """
-    import ml_dtypes
-
-    path = Path(directory) / f"step_{step:08d}"
-    manifest = json.loads((path / MANIFEST).read_text())
-    data = np.load(path / "arrays.npz")
-    by_path = {}
-    for leaf in manifest["leaves"]:
-        arr = data[leaf["key"]]
-        if leaf["dtype"] == "bfloat16":
-            arr = arr.view(ml_dtypes.bfloat16)
-        by_path[leaf["path"]] = arr
-
-    like_leaves = _flatten_with_paths(like)
-    treedef = jax.tree_util.tree_structure(like)
-    shard_leaves = (jax.tree_util.tree_leaves(shardings)
-                    if shardings is not None else [None] * len(like_leaves))
-    out = []
-    for (lpath, lleaf), sh in zip(like_leaves, shard_leaves):
-        if lpath not in by_path:
-            raise KeyError(f"checkpoint missing leaf {lpath!r}")
-        arr = by_path[lpath]
-        if tuple(arr.shape) != tuple(lleaf.shape):
-            raise ValueError(
-                f"shape mismatch for {lpath}: ckpt {arr.shape} "
-                f"vs state {lleaf.shape}")
-        if sh is not None:
-            out.append(jax.device_put(arr, sh))
-        else:
-            out.append(jax.numpy.asarray(arr))
-    return jax.tree_util.tree_unflatten(treedef, out)
+    return snapshot_restore(directory, step, like, shardings=shardings)
 
 
 def manifest_of(directory: str | Path, step: int) -> dict:
-    return json.loads(
-        (Path(directory) / f"step_{step:08d}" / MANIFEST).read_text())
+    return snapshot_manifest(directory, step)

@@ -1,89 +1,43 @@
-"""Reusable preflow/labeling invariant checkers (test fixture module).
+"""Assert-style invariant checkers (test fixture module).
 
-The properties the paper's correctness and sweep-bound proofs rest on
-(Statements 1/9, eqs. (9)/(10)), factored out of the per-operator tests so
-they can be asserted on ANY mid-solve ``FlowState`` — in particular at
-every sweep boundary through ``sweep.solve``'s ``on_sweep`` hook (see
-test_executor_conformance.py) and inside the hypothesis property tests.
+The state-level checkers were promoted into ``repro.core.invariants`` in
+the robustness PR so the solver can *report* violations structurally
+(``MincutResult.diagnosis``); this module keeps the historical assert
+surface the tests call — each ``assert_*`` delegates to the corresponding
+report-returning ``check_*`` and fails with the violation summary.
 
-State-level checkers (vectorized over the whole [K, V(, E)] state):
-
-* :func:`assert_valid_preflow`      — residuals/excess non-negative.
-* :func:`assert_valid_labeling`     — d() is a valid distance labeling of
-  the residual network: every residual arc (u, v) satisfies
-  ``d(u) <= d(v) + w`` with w = 0 for ARD intra-region arcs, 1 for ARD
-  cross arcs, 1 for every PRD arc; sink-residual vertices are bounded by
-  the terminal distance (0 for ARD, 1 for PRD), all capped at d_inf.
-* :func:`assert_flow_conservation`  — excess mass + delivered flow is the
-  invariant ``total0`` computed from the entry state.
-
-Region-level checker (scalar loops — an independent re-implementation the
-discharge-operator tests deliberately keep separate from the vectorized
-solver code):
-
-* :func:`assert_region_labeling_valid` — the same validity condition on
-  one region's [V, E] view with ghost labels, used by
-  test_discharge_invariants.py.
+The region-level scalar-loop checker
+(:func:`assert_region_labeling_valid`) stays here on purpose: it is an
+*independent re-implementation* of the validity condition used as an
+oracle by the discharge-operator tests, and folding it into the solver
+package would make the oracle share code with the thing it checks.
 """
 
 import numpy as np
 
-import jax.numpy as jnp
-
-from repro.core.graph import intra_mask
-from repro.core.labels import gather_ghost_labels
+from repro.core import invariants as _inv
+from repro.core.invariants import preflow_total  # re-export  # noqa: F401
 
 
-def preflow_total(state) -> int:
-    """The conserved quantity: live excess + flow already delivered to t."""
-    return int(jnp.sum(jnp.where(state.vmask, state.excess, 0))) + \
-        int(state.flow_to_t)
+def _fail(violations, where: str):
+    assert not violations, \
+        f"invariants broken {where}: " + "; ".join(
+            f"{v.kind} (x{v.count}): {v.detail}" for v in violations)
 
 
 def assert_valid_preflow(meta, state, where=""):
     """Residuals and excess of a preflow are non-negative everywhere."""
-    cf = np.asarray(state.cf)
-    sink_cf = np.asarray(state.sink_cf)
-    excess = np.asarray(state.excess)
-    vm = np.asarray(state.vmask)
-    assert (cf >= 0).all(), f"negative residual {where}"
-    assert (sink_cf >= 0).all(), f"negative sink residual {where}"
-    assert (excess[vm] >= 0).all(), f"negative excess {where}"
+    _fail(_inv.check_valid_preflow(meta, state), where)
 
 
 def assert_valid_labeling(meta, state, *, ard: bool, where=""):
-    """Paper eqs. (9)/(10): d() lower-bounds residual distance-to-sink.
-
-    ARD labels count boundary crossings (intra arcs cost 0, cross arcs 1,
-    the sink is at distance 0); PRD labels count hops (every arc costs 1,
-    the sink is one hop away).  Vertices at the ceiling d_inf are exempt
-    (they are declared unreachable), as are arcs into ghosts already at
-    the ceiling — ``d(u) <= d_inf <= ghost`` holds trivially there.
-    """
-    ghost_d = gather_ghost_labels(state)
-    intra = intra_mask(state)
-    d_inf = meta.d_inf_ard if ard else meta.d_inf_prd
-    d = state.d
-    du = jnp.broadcast_to(d[:, :, None], state.cf.shape)
-    resid = (state.cf > 0) & state.emask
-    at_cap = du >= d_inf
-    intra_w = 0 if ard else 1
-    ok_intra = ~resid | ~intra | (du <= ghost_d + intra_w) | at_cap
-    cross = state.emask & ~intra
-    ok_cross = ~resid | ~cross | (du <= ghost_d + 1) | at_cap
-    sink_w = 0 if ard else 1
-    ok_sink = (state.sink_cf == 0) | (d <= sink_w) | (d >= d_inf) | \
-        ~state.vmask
-    assert bool(jnp.all(ok_intra)), f"intra-arc validity broken {where}"
-    assert bool(jnp.all(ok_cross)), f"cross-arc validity broken {where}"
-    assert bool(jnp.all(ok_sink)), f"sink validity broken {where}"
+    """Paper eqs. (9)/(10): d() lower-bounds residual distance-to-sink."""
+    _fail(_inv.check_valid_labeling(meta, state, ard=ard), where)
 
 
 def assert_flow_conservation(meta, state, total0: int, where=""):
     """No flow mass appears or vanishes: excess + flow_to_t == total0."""
-    total = preflow_total(state)
-    assert total == total0, \
-        f"flow mass not conserved {where}: {total} != {total0}"
+    _fail(_inv.check_flow_conservation(meta, state, total0), where)
 
 
 def assert_region_labeling_valid(d, cf, sink_cf, *, intra, emask, vmask,
@@ -91,9 +45,9 @@ def assert_region_labeling_valid(d, cf, sink_cf, *, intra, emask, vmask,
     """Validity on one region's [V, E] view, by scalar loops.
 
     The discharge-operator tests use this as an independent oracle for the
-    condition the vectorized :func:`assert_valid_labeling` checks on whole
-    states: residual intra arc (u, v) => d(u) <= d(v) + w_intra, residual
-    cross arc => d(u) <= ghost + 1, sink-residual => d(u) <= sink bound.
+    condition the vectorized checkers verify on whole states: residual
+    intra arc (u, v) => d(u) <= d(v) + w_intra, residual cross arc =>
+    d(u) <= ghost + 1, sink-residual => d(u) <= sink bound.
     """
     d = np.asarray(d)
     cf = np.asarray(cf)

@@ -1,0 +1,123 @@
+"""Kill-and-resume smoke: a REAL process death, not a simulated one.
+
+The in-process fault matrix (tests/test_resilience.py) injects exceptions;
+this script closes the remaining gap in the deployment story by SIGKILLing
+a checkpointing solve mid-sweep — no cleanup handlers, no atexit, exactly
+what a preempted worker looks like — and then resuming from whatever the
+dead process managed to publish:
+
+1. the parent solves the instance uninterrupted (the baseline);
+2. a child process runs the same solve with sweep-boundary checkpoints
+   and ``os.kill(getpid(), SIGKILL)`` at sweep K (installed through the
+   executor fault hook, which fires AFTER the boundary's checkpoint);
+3. the parent asserts the child died on SIGKILL, that the latest published
+   checkpoint is a mid-solve boundary, resumes from it, and asserts the
+   result is BIT-EXACT against the baseline (flow, labels, residuals,
+   sweep count, engine iterations, curves).
+
+The atomic write-to-temp-then-rename snapshot protocol is what makes step
+3 safe: a snapshot the child was writing when it died is a ``.tmp`` dir
+the resume never sees.
+
+Usage (CI: the ``resilience`` job):
+
+    PYTHONPATH=src python tools/kill_resume_smoke.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+KILL_AT = 3
+
+
+def _built():
+    import numpy as np
+
+    from repro.core import build, grid_partition
+    from repro.data.grids import synthetic_grid
+
+    p = synthetic_grid(10, 10, connectivity=8, strength=150, seed=0)
+    part = np.asarray(grid_partition((10, 10), (2, 2)))
+    meta, state, _ = build(p, part)
+    return meta, state
+
+
+def child(ckdir: str) -> None:
+    """Checkpoint every boundary; die hard at sweep KILL_AT."""
+    from repro.core import executor, init_labels, resilience
+    from repro.core.sweep import SweepConfig, solve
+
+    def die(route, state, sweeps_done):
+        if sweeps_done >= KILL_AT:
+            os.kill(os.getpid(), signal.SIGKILL)   # no goodbye
+
+    executor.set_fault_hook(die)
+    meta, state = _built()
+    solve(meta, init_labels(meta, state), SweepConfig(method="ard"),
+          checkpoint=resilience.CheckpointPolicy(directory=ckdir, every=1))
+    raise SystemExit("unreachable: the solve outlived its kill sweep")
+
+
+def parent(ckdir: str) -> None:
+    import numpy as np
+
+    from repro.core import init_labels, resilience
+    from repro.core.sweep import SweepConfig, solve
+
+    meta, state = _built()
+    cfg = SweepConfig(method="ard")
+    base_st, base_stats = solve(meta, init_labels(meta, state), cfg)
+    assert base_stats.sweeps > KILL_AT, \
+        f"instance converges in {base_stats.sweeps} sweeps; nothing to kill"
+
+    proc = subprocess.run(
+        [sys.executable, __file__, "--child", ckdir],
+        env={**os.environ, "JAX_PLATFORMS": "cpu"},
+        capture_output=True, text=True, timeout=600)
+    assert proc.returncode == -signal.SIGKILL, (
+        f"child exited {proc.returncode}, wanted SIGKILL "
+        f"({-signal.SIGKILL})\n--- child stderr ---\n{proc.stderr}")
+
+    latest = resilience.latest_checkpoint(ckdir)
+    assert latest is not None, "the killed child published no checkpoint"
+    assert latest.sweeps == KILL_AT, \
+        f"latest checkpoint at sweep {latest.sweeps}, wanted {KILL_AT}"
+    print(f"[kill-resume] child SIGKILLed; latest checkpoint at sweep "
+          f"{latest.sweeps}/{base_stats.sweeps}")
+
+    st, stats = solve(meta, init_labels(meta, state), cfg,
+                      resume_from=ckdir)
+    np.testing.assert_array_equal(np.asarray(st.d), np.asarray(base_st.d))
+    np.testing.assert_array_equal(np.asarray(st.cf), np.asarray(base_st.cf))
+    assert int(st.flow_to_t) == int(base_st.flow_to_t)
+    for k in ("sweeps", "engine_iters", "engine_launches", "flow_curve",
+              "active_curve", "converged"):
+        assert getattr(stats, k) == getattr(base_stats, k), k
+    print(f"[kill-resume] resumed {latest.sweeps} -> {stats.sweeps} "
+          f"sweeps: flow={int(st.flow_to_t)} — bit-exact vs uninterrupted. "
+          f"OK")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--child", default=None, metavar="CKDIR",
+                    help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    if args.child:
+        child(args.child)
+    else:
+        with tempfile.TemporaryDirectory(prefix="kill_resume_") as d:
+            parent(str(Path(d) / "ck"))
+
+
+if __name__ == "__main__":
+    main()
