@@ -1,0 +1,221 @@
+"""Serving-tier benchmark: throughput and tail latency under offered load.
+
+The service question the robustness layer must answer: what happens when
+offered load crosses capacity?  Below capacity the bounded queue never
+fills (sheds == 0, p99 ~ service time); above it, admission control
+sheds the overflow with typed ``ServiceOverloaded`` errors while the p99
+of ADMITTED requests stays bounded by the queue depth — the service
+degrades by shedding, never by queueing unboundedly or falling over.
+
+Method: calibrate the sustainable completion rate with a compiled-warm
+burst, then replay paced request streams (25% carrying tight deadlines)
+at offered loads below (0.5x) and above (3x) that rate, plus a stream
+with a kernel fault injected mid-way (the degradation ladder + breaker
+absorb it without failing in-flight requests).  Asserted on every run:
+
+  * below capacity: ``sheds == 0``;
+  * above capacity: ``sheds > 0``, ``max_queue_depth <= max_queue`` and
+    ``p99 <= BOUND_SLACK * (max_queue + max_batch) / sustainable`` (the
+    structural queue-delay bound, with CPU-jitter slack);
+  * fault stream: every request resolves (result or typed error),
+    ``failed == 0``, ``degradations >= 1``.
+
+Results go to ``BENCH_service.json``; on this CPU-only container the
+absolute rates measure correctness-path behavior, not TPU speed (the
+JSON records the platform).
+
+    PYTHONPATH=src python benchmarks/bench_service.py [--quick]
+        [--smoke] [--out BENCH_service.json]
+
+``--smoke`` runs the same three scenarios at tiny N with the same
+assertions — the CI guard for the serving tier.
+
+Also exposes the ``run(emit, quick)`` contract of benchmarks/run.py.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.common import emit_csv  # noqa: E402
+
+TIGHT_FRAC = 0.25        # fraction of requests with tight deadlines
+TIGHT_TIMEOUT = 0.002    # s — well under a CPU solve: guaranteed misses
+#                          when the queue backs up
+BOUND_SLACK = 5.0        # CPU-jitter slack on the structural p99 bound
+OVER_FACTOR = 3.0        # above-capacity offered-load multiple — enough
+#                          excess rate to overflow the queue within even
+#                          the smoke-sized stream
+
+
+def _service(max_queue=4, max_batch=2, pallas=False, threshold=3):
+    from repro.core.solver import SolverOptions
+    from repro.serve import MaxflowService, ServiceConfig
+
+    opts = SolverOptions(num_regions=4, check=True,
+                         engine_backend="pallas" if pallas else "xla",
+                         engine_chunk_iters=8 if pallas else None)
+    return MaxflowService(opts, ServiceConfig(
+        max_queue=max_queue, max_batch=max_batch, sync_every=2,
+        breaker_threshold=threshold))
+
+
+def _requests(n: int, tight: bool):
+    from repro.data.grids import synthetic_grid
+    from repro.serve import SolveRequest
+
+    shapes = [(6, 6), (8, 8)]
+    out = []
+    for i in range(n):
+        h, w = shapes[i % len(shapes)]
+        timeout = TIGHT_TIMEOUT \
+            if tight and (i % int(1 / TIGHT_FRAC)) == 0 else None
+        out.append(SolveRequest(problem=synthetic_grid(h, w, seed=i % 8),
+                                timeout=timeout, tenant=f"t{i % 2}"))
+    return out
+
+
+def _calibrate(n: int) -> float:
+    """Sustainable completion rate (req/s) of a compiled-warm burst."""
+    from repro.serve import replay_stream
+
+    for attempt in range(2):          # first pass pays compiles; time 2nd
+        svc = _service(max_queue=n)
+        t0 = time.perf_counter()
+        replay_stream(svc, _requests(n, tight=False))
+        elapsed = time.perf_counter() - t0
+    assert svc.stats.completed == n and svc.stats.sheds == 0
+    return n / elapsed
+
+
+def _replay(n: int, rate: float, *, pallas=False, fault=False,
+            threshold=3) -> dict:
+    import contextlib
+
+    from repro.core import FaultPlan, fault_injection
+    from repro.serve import ServiceError, replay_stream
+
+    svc = _service(pallas=pallas, threshold=threshold)
+    reqs = _requests(n, tight=True)
+    ctx = fault_injection(FaultPlan(
+        "vmem_overflow", at_sweep=1, times=1, route="device")) \
+        if fault else contextlib.nullcontext()
+    t0 = time.perf_counter()
+    with ctx:
+        tickets = replay_stream(svc, reqs, rate=rate)
+    elapsed = time.perf_counter() - t0
+    for t in tickets:                 # liveness: every request resolved,
+        assert t.done                 # errors all typed
+        assert t.error is None or isinstance(t.error, ServiceError)
+    s = svc.stats
+    assert s.completed + s.deadline_misses + s.sheds + s.failed == n
+    assert svc.healthy()
+    q = s.latency_quantiles()
+    return dict(
+        requests=n, offered_rate=round(rate, 2),
+        completed=s.completed, sheds=s.sheds,
+        deadline_misses=s.deadline_misses, failed=s.failed,
+        faults=s.faults, degradations=s.degradations,
+        breaker_trips=s.breaker_trips,
+        max_queue_depth=s.max_queue_depth,
+        queue_bound=svc.config.max_queue,
+        p50_s=round(q["p50"], 4), p99_s=round(q["p99"], 4),
+        throughput=round(s.completed / elapsed, 2),
+        elapsed_s=round(elapsed, 3),
+    )
+
+
+def _scenarios(n: int, sustainable: float):
+    cfg = _service().config
+    bound = BOUND_SLACK * (cfg.max_queue + cfg.max_batch) / sustainable
+
+    below = _replay(n, 0.5 * sustainable)
+    assert below["sheds"] == 0, \
+        f"shed below capacity: {below}"
+
+    above = _replay(n, OVER_FACTOR * sustainable)
+    assert above["sheds"] > 0, \
+        f"no shedding at {OVER_FACTOR}x capacity: {above}"
+    assert above["max_queue_depth"] <= above["queue_bound"], above
+    assert above["p99_s"] <= bound, \
+        f"p99 {above['p99_s']}s above structural bound {bound:.3f}s"
+
+    faulted = _replay(n, OVER_FACTOR * sustainable, pallas=True, fault=True,
+                      threshold=1)
+    assert faulted["failed"] == 0, \
+        f"kernel fault failed in-flight requests: {faulted}"
+    assert faulted["faults"] >= 1 and faulted["degradations"] >= 1, faulted
+
+    below["scenario"], above["scenario"] = "below_capacity", "above_capacity"
+    faulted["scenario"] = "above_capacity_vmem_fault"
+    above["p99_bound_s"] = round(bound, 4)
+    return [below, above, faulted]
+
+
+def collect(quick: bool = False) -> dict:
+    import jax
+
+    n = 24 if quick else 64
+    sustainable = _calibrate(16 if quick else 32)
+    rows = _scenarios(n, sustainable)
+    return dict(
+        bench="service",
+        platform=jax.default_backend(),
+        jax_version=jax.__version__,
+        sustainable_rate=round(sustainable, 2),
+        tight_deadline_frac=TIGHT_FRAC,
+        results=rows,
+    )
+
+
+def smoke() -> None:
+    """CI guard: the three scenarios at tiny N, same assertions."""
+    sustainable = _calibrate(8)
+    rows = _scenarios(16, sustainable)
+    for row in rows:
+        print(f"smoke ok: {row['scenario']} completed={row['completed']} "
+              f"sheds={row['sheds']} misses={row['deadline_misses']} "
+              f"failed={row['failed']} p99={row['p99_s']}s "
+              f"qmax={row['max_queue_depth']}/{row['queue_bound']}")
+    print("smoke passed: bounded below/above capacity, kernel fault "
+          "degraded without failing in-flight requests")
+
+
+def run(emit=emit_csv, quick: bool = False) -> None:
+    data = collect(quick=quick)
+    for row in data["results"]:
+        emit(f"service/{row['scenario']}",
+             row["p99_s"] * 1e6,
+             f"throughput={row['throughput']};sheds={row['sheds']};"
+             f"misses={row['deadline_misses']};"
+             f"qmax={row['max_queue_depth']}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny three-scenario run with the same "
+                         "assertions (CI), no JSON output")
+    ap.add_argument("--out", default=str(Path(__file__).resolve().parents[1]
+                                         / "BENCH_service.json"))
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+        return
+    data = collect(quick=args.quick)
+    Path(args.out).write_text(json.dumps(data, indent=2) + "\n")
+    print(f"wrote {args.out}")
+    for row in data["results"]:
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -27,8 +27,9 @@ def main() -> None:
 
     from benchmarks import (bench_batch, bench_competitions,
                             bench_engine_backend, bench_lm,
-                            bench_resilience, bench_sweep_driver,
-                            bench_synthetic, bench_warmstart)
+                            bench_resilience, bench_service,
+                            bench_sweep_driver, bench_synthetic,
+                            bench_warmstart)
 
     mods = [("synthetic", bench_synthetic),
             ("engine_backend", bench_engine_backend),
@@ -36,6 +37,7 @@ def main() -> None:
             ("batch", bench_batch),
             ("warmstart", bench_warmstart),
             ("resilience", bench_resilience),
+            ("service", bench_service),
             ("competitions", bench_competitions),
             ("lm", bench_lm)]
     print("name,us_per_call,derived")

@@ -325,7 +325,8 @@ def solve_sharded(meta: GraphMeta, state: FlowState, mesh: Mesh,
                   device_resident: bool | None = None,
                   host_sync_every: int | None = None,
                   return_stats: bool = False,
-                  checkpoint=None, resume_from=None, salt: str = ""):
+                  checkpoint=None, resume_from=None, salt: str = "",
+                  on_sweep=None):
     """Sharded sweep loop (device-resident state; regions over the mesh).
 
     Default driver: one jitted SPMD sweep program + one host sync per
@@ -345,7 +346,14 @@ def solve_sharded(meta: GraphMeta, state: FlowState, mesh: Mesh,
     device-resident driver at its ``host_sync_every`` boundaries; the
     payload is the fully-gathered flow state (one ``device_get``), so a
     resume may re-land on a different mesh (elastic) — the re-entry
-    ``device_put`` re-shards it.
+    ``device_put`` re-shards it.  A checkpoint taken at a CONVERGED final
+    boundary short-circuits: the finished result returns without
+    re-entering the sweep loop (the sharded loop's converged-entry
+    semantics would otherwise burn one no-op sweep).
+
+    ``on_sweep(state, sweeps_done)`` — optional sweep-boundary hook, as in
+    ``sweep.solve``: every sweep boundary on the host driver, the
+    ``host_sync_every`` boundaries on the device-resident driver.
     """
     cfg = cfg or SweepConfig()
     _executor.ShardedExecutor.validate(cfg)
@@ -366,6 +374,13 @@ def solve_sharded(meta: GraphMeta, state: FlowState, mesh: Mesh,
         start = ckpt.sweeps
         seed_syncs = int(ckpt.stats.get("host_syncs", 0))
     state = jax.device_put(state, shardings)
+    if ckpt is not None and _res.checkpoint_converged(ckpt):
+        # a converged final-boundary checkpoint: the solve is already
+        # finished — re-entering the loop would run one no-op sweep, since
+        # the sharded loop keeps the legacy converged-entry semantics
+        # (ShardedExecutor.keep_running's ``idx == start`` term)
+        return (state, start, seed_syncs) if return_stats \
+            else (state, start)
     bound = (2 * meta.num_boundary ** 2 + 1 if cfg.method == "ard"
              else 2 * meta.num_vertices ** 2)
     limit = max_sweeps if max_sweeps is not None else bound
@@ -392,16 +407,25 @@ def solve_sharded(meta: GraphMeta, state: FlowState, mesh: Mesh,
             carry0 = (jnp.asarray(start, _I32),
                       jnp.asarray(int(ckpt.payload["n_act"]), _I32))
 
-        on_sync = None
+        ckpt_sync = None
         if checkpoint is not None:
             last_saved = [start]
 
-            def on_sync(st, host, syncs):
+            def ckpt_sync(st, host, syncs):
                 done, running = ex.progress(host, limit)
                 if running and done - last_saved[0] < checkpoint.every:
                     return
                 save(st, done, host[-1], syncs)
                 last_saved[0] = done
+
+        on_sync = ckpt_sync
+        if on_sweep is not None:
+            # checkpoint first: a hook that aborts the solve (deadline
+            # enforcement) leaves the boundary durably checkpointed
+            def on_sync(st, host, syncs):
+                if ckpt_sync is not None:
+                    ckpt_sync(st, host, syncs)
+                on_sweep(st, int(host[0]))
 
         state, host, host_syncs = _executor.run_device(
             ex, state, limit, host_sync_every, chunk=chunk, carry0=carry0,
@@ -425,7 +449,8 @@ def solve_sharded(meta: GraphMeta, state: FlowState, mesh: Mesh,
             last_saved[0] = idx
 
     state, trace, _pre, host_syncs, sweeps = _executor.run_host(
-        ex, state, limit, sweep=one, start=start, on_obs=on_obs)
+        ex, state, limit, sweep=one, start=start, on_obs=on_obs,
+        on_sweep=on_sweep)
     if checkpoint is not None and sweeps > last_saved[0] and trace:
         save(state, sweeps, trace[-1][0], len(trace))
     return (state, sweeps, seed_syncs + host_syncs) if return_stats \

@@ -258,6 +258,21 @@ def _device_chunk(ex: RegionExecutor, state, carry, limit):
     return while_sweeps(ex, state, carry, limit)
 
 
+@partial(jax.jit, static_argnums=(0,))
+def _slot_swap(ex: "BatchedExecutor", state, carry, slot, inst):
+    """Swap one instance into slot ``slot`` of a live batch (see
+    ``BatchedExecutor.swap_slot``).  One compiled program per bucket shape,
+    reused for every admission into that bucket."""
+    ex.note_trace()
+    state = jax.tree_util.tree_map(
+        lambda dst, src: dst.at[slot].set(src[0]), state, inst)
+    sweeps, iters, launches, _ = carry
+    zero = jnp.zeros((), _I32)
+    sweeps = sweeps.at[slot].set(zero)
+    iters = iters.at[slot].set(zero)
+    return state, (sweeps, iters, launches, ex.num_active(state))
+
+
 def run_device(ex: RegionExecutor, state, limit, host_sync_every,
                chunk: Callable | None = None, carry0=None,
                on_sync: Callable | None = None):
@@ -342,10 +357,13 @@ def run_host(ex: RegionExecutor, state, limit,
         idx += 1
         trace.append(host_obs)
         n_act = host_obs[0]
-        if on_sweep is not None:
-            on_sweep(state, idx)
+        # on_obs (the checkpoint capture) before on_sweep: a hook that
+        # aborts the solve (deadline enforcement) leaves the boundary
+        # durably checkpointed
         if on_obs is not None:
             on_obs(state, idx, trace, active_pre)
+        if on_sweep is not None:
+            on_sweep(state, idx)
         state = _fire_fault_hook("host", state, idx)
         if not ex.entry_check and n_act == 0:
             break
@@ -505,6 +523,25 @@ class BatchedExecutor(RegionExecutor):
         raise UnsupportedFeatureError(
             self.name, "host_loop",
             "the batched driver is device-resident by construction")
+
+    # -- continuous batching -------------------------------------------------
+
+    def swap_slot(self, state, carry, slot, inst_state):
+        """Admit one instance into bucket slot ``slot`` of a live batch.
+
+        ``inst_state`` — a ``BatchState`` with instance axis B == 1 and the
+        same (K, V, E, X) bucket dims (``graph.pack_built`` on one build):
+        every field (topology, cross tables, per-instance ceilings, flow
+        state) is written into slot ``slot``, and the carry's per-instance
+        counters for that slot reset to zero, with ``n_active`` recomputed
+        so the slot's run flag (``sweeps < limit & n_act > 0``) turns live
+        on the next chunk.  The previous occupant is overwritten — the
+        caller (the serving tier's continuous-batching loop) only swaps
+        into slots whose instance has been harvested or cancelled.  Returns
+        ``(state, carry)``; one compiled swap program per bucket shape.
+        """
+        return _slot_swap(self, state, carry, jnp.asarray(slot, _I32),
+                          inst_state)
 
 
 @dataclass(frozen=True)

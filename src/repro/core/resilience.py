@@ -411,6 +411,24 @@ def latest_checkpoint(directory: str | Path) -> SolveCheckpoint | None:
     return None if step is None else load_checkpoint(directory, step)
 
 
+def checkpoint_converged(ckpt: SolveCheckpoint) -> bool:
+    """True when the checkpoint was captured at a CONVERGED final boundary.
+
+    The payload's ``n_act`` loop-carry records the active-vertex count at
+    the boundary (per instance on the batched route): all-zero means the
+    maximum preflow was already reached and there is nothing left to
+    sweep, so a resume can return the restored state directly instead of
+    re-entering the sweep loop (the sharded loop's converged-entry
+    semantics would otherwise burn one no-op sweep).  A checkpoint without
+    the carry (foreign/legacy payloads) conservatively counts as not
+    converged.
+    """
+    n_act = ckpt.payload.get("n_act")
+    if n_act is None:
+        return False
+    return bool((np.asarray(n_act) == 0).all())
+
+
 def resolve_resume(resume_from, fingerprint: str) -> SolveCheckpoint | None:
     """Normalize a route's ``resume_from`` argument and verify identity.
 
@@ -613,7 +631,8 @@ __all__ = [
     "CheckpointMismatchError", "CheckpointPolicy", "FaultPlan",
     "InjectedFault", "KERNEL_LADDER", "PreemptionError", "RetryPolicy",
     "SolveCheckpoint", "SolveSupervisor", "SupervisorReport",
-    "VmemOverflowError", "config_rung", "degrade_config",
+    "VmemOverflowError", "checkpoint_converged", "config_rung",
+    "degrade_config",
     "fault_injection", "is_kernel_failure", "latest_checkpoint",
     "load_checkpoint", "resolve_resume", "restore_state",
     "run_with_degradation", "save_checkpoint", "snapshot_latest",

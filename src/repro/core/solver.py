@@ -369,7 +369,7 @@ class ProblemHandle:
             np.ascontiguousarray(self.part).tobytes()).hexdigest()[:16]
 
     def solve(self, *, mesh=None, axes=("regions",), checkpoint=None,
-              resume_from=None) -> MincutResult:
+              resume_from=None, on_sweep=None) -> MincutResult:
         """Solve (or warm re-solve) the prepared problem.
 
         Routes on the session options: host-loop or device-resident sweep
@@ -390,6 +390,11 @@ class ProblemHandle:
         xla-unfused, ``resilience.degrade_config``) and re-run — every
         rung is bit-exact, and each degradation is recorded in
         ``stats.degraded``, never silent.
+
+        ``on_sweep(state, sweeps_done)`` — optional sweep-boundary hook
+        (fires at every boundary on the host loop, at the
+        ``host_sync_every`` boundaries on the device-resident and sharded
+        drivers) — the serving tier's deadline-enforcement point.
         """
         opts = self.solver.options
         cfg = opts.sweep_config()
@@ -416,7 +421,8 @@ class ProblemHandle:
                 st, sweeps, syncs = _distributed.solve_sharded(
                     self.meta, st_in, mesh, c, axes=tuple(axes),
                     exchange=opts.exchange, return_stats=True,
-                    checkpoint=checkpoint, resume_from=ckpt_obj, salt=salt)
+                    checkpoint=checkpoint, resume_from=ckpt_obj, salt=salt,
+                    on_sweep=on_sweep)
                 _pb, msg_bytes = _sweep._page_and_msg_bytes(self.meta, st)
                 stats = _sweep.SweepStats(
                     sweeps=sweeps, engine_iters=None, engine_launches=None,
@@ -426,7 +432,7 @@ class ProblemHandle:
                 return st, stats
             return _sweep.solve(self.meta, st_in, c, warm=True,
                                 checkpoint=checkpoint, resume_from=ckpt_obj,
-                                salt=salt)
+                                salt=salt, on_sweep=on_sweep)
 
         notes: list[str] = []
         st, stats = _res.run_with_degradation(run, cfg, notes)

@@ -404,7 +404,7 @@ def _device_stats(host, syncs, max_sweeps, R, page_bytes, msg_bytes,
 
 def _solve_device_resident(meta: GraphMeta, state: FlowState,
                            cfg: SweepConfig, ex, *, fp: str = "",
-                           checkpoint=None, ckpt=None):
+                           checkpoint=None, ckpt=None, on_sweep=None):
     """Device-resident solve: one kernel-program chain per host sync.
 
     The whole sweep loop — discharge, fusion, gap heuristic, convergence
@@ -456,11 +456,11 @@ def _solve_device_resident(meta: GraphMeta, state: FlowState,
                   jnp.asarray(fr), jnp.asarray(ar),
                   jnp.asarray(int(ckpt.payload["n_act"]), _I32))
 
-    on_sync = None
+    ckpt_sync = None
     if checkpoint is not None:
         last_saved = [ckpt.sweeps if ckpt is not None else 0]
 
-        def on_sync(st, host, syncs):
+        def ckpt_sync(st, host, syncs):
             done, running = ex.progress(host, max_sweeps)
             if running and done - last_saved[0] < checkpoint.every:
                 return
@@ -474,6 +474,18 @@ def _solve_device_resident(meta: GraphMeta, state: FlowState,
                 payload=payload, stats=stats_to_dict(stats),
                 flow_offset=checkpoint.flow_offset))
             last_saved[0] = done
+
+    on_sync = ckpt_sync
+    if on_sweep is not None:
+        # the device route's sweep-boundary hook fires at the
+        # host_sync_every boundaries — the only host re-entries it has;
+        # the checkpoint capture runs FIRST so a hook that aborts the
+        # solve (the serving tier's deadline enforcement) leaves the
+        # boundary durably checkpointed
+        def on_sync(st, host, syncs):
+            if ckpt_sync is not None:
+                ckpt_sync(st, host, syncs)
+            on_sweep(st, int(host[0]))
 
     state, host, syncs = _executor.run_device(
         ex, state, max_sweeps, cfg.host_sync_every, carry0=carry0,
@@ -498,10 +510,13 @@ def solve(meta: GraphMeta, state: FlowState, cfg: SweepConfig | None = None,
     are (re-)initialized to the paper's ``Init`` — idempotent with
     ``graph.init_labels``, so pre-initialized callers are unaffected.
 
-    ``on_sweep(state, sweeps_done)`` — optional host-loop hook called at
-    every sweep boundary (tests use it to check the preflow/labeling
-    invariants mid-solve); incompatible with ``device_resident`` (there is
-    no host boundary to call it from).
+    ``on_sweep(state, sweeps_done)`` — optional sweep-boundary hook (tests
+    use it to check the preflow/labeling invariants mid-solve; the serving
+    tier enforces request deadlines with it).  On the host loop it fires
+    at every sweep boundary; on the device-resident driver at the
+    ``host_sync_every`` boundaries (the only host re-entries it has —
+    requesting it with ``host_sync_every=None`` is an error, since the
+    hook could never fire before the solve completes).
 
     ``checkpoint`` — a ``resilience.CheckpointPolicy``: capture a
     resumable ``SolveCheckpoint`` atomically on disk at sweep boundaries
@@ -540,11 +555,15 @@ def solve(meta: GraphMeta, state: FlowState, cfg: SweepConfig | None = None,
     if ckpt is None and not warm:
         state = state.replace(d=jnp.zeros_like(state.d))
     if cfg.device_resident:
-        if on_sweep is not None:
-            raise ValueError("on_sweep needs the host loop; it cannot fire "
-                             "inside the device-resident lax.while_loop")
+        if on_sweep is not None and cfg.host_sync_every is None:
+            raise ValueError(
+                "on_sweep needs a host boundary to fire from; the "
+                "device-resident driver only has them at host_sync_every "
+                "boundaries (set cfg.host_sync_every), not inside the "
+                "lax.while_loop")
         state, stats = _solve_device_resident(
-            meta, state, cfg, ex, fp=fp, checkpoint=checkpoint, ckpt=ckpt)
+            meta, state, cfg, ex, fp=fp, checkpoint=checkpoint, ckpt=ckpt,
+            on_sweep=on_sweep)
     else:
         state, stats = _solve_host(
             meta, state, cfg, ex, on_sweep=on_sweep, fp=fp,

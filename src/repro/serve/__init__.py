@@ -1,0 +1,31 @@
+"""The serving tier: a robust continuous-batching maxflow service.
+
+Public surface:
+
+* :class:`~repro.serve.service.MaxflowService` — the admission-controlled,
+  continuously batched, circuit-broken service loop;
+* :class:`~repro.serve.service.SolveRequest` /
+  :class:`~repro.serve.service.Ticket` /
+  :class:`~repro.serve.service.ServiceConfig` — its request surface;
+* :func:`~repro.serve.service.solve_with_deadline` — the single-handle
+  deadline route;
+* :func:`~repro.serve.service.replay_stream` — the bench/CLI driver;
+* the typed error taxonomy (:mod:`repro.serve.errors`) and the
+  :class:`~repro.serve.stats.ServiceStats` report.
+
+See the "Serving tier" section of docs/ARCHITECTURE.md.
+"""
+
+from .breaker import BreakerBoard, CircuitBreaker
+from .errors import (ERROR_TAXONOMY, DeadlineExceeded, RequestFailed,
+                     ServiceClosed, ServiceError, ServiceOverloaded)
+from .service import (MaxflowService, ServiceConfig, SolveRequest, Ticket,
+                      replay_stream, solve_with_deadline)
+from .stats import ServiceStats
+
+__all__ = [
+    "BreakerBoard", "CircuitBreaker", "DeadlineExceeded", "ERROR_TAXONOMY",
+    "MaxflowService", "RequestFailed", "ServiceClosed", "ServiceConfig",
+    "ServiceError", "ServiceOverloaded", "ServiceStats", "SolveRequest",
+    "Ticket", "replay_stream", "solve_with_deadline",
+]

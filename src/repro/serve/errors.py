@@ -1,0 +1,123 @@
+"""Typed error taxonomy of the serving tier.
+
+Robustness-first serving means every request resolves to either a
+``MincutResult`` or ONE of these typed outcomes — never a bare exception
+escaping the service loop, never a silently dropped request.  The
+taxonomy is deliberately small and machine-readable: each error carries a
+stable ``code`` (the wire/metric label), the ``request_id`` it resolves,
+and the structured fields a client needs to react (retry-after on
+overload, sweeps-completed diagnostics on a missed deadline).
+
+``ERROR_TAXONOMY`` is the table the docs render and the tests assert
+against; ``ServiceError.retriable`` tells a client whether resubmitting
+the same request can succeed (overload: yes, after ``retry_after``;
+a missed deadline with the same budget: no).
+"""
+
+from __future__ import annotations
+
+
+class ServiceError(Exception):
+    """Base of every typed service outcome (never raised bare)."""
+
+    code = "service_error"
+    retriable = False
+
+    def __init__(self, request_id: str, message: str):
+        self.request_id = request_id
+        super().__init__(message)
+
+
+class DeadlineExceeded(ServiceError):
+    """The request's deadline expired before its solve converged.
+
+    Enforced at sweep boundaries only (the ``on_sweep`` hook on the host
+    route, ``host_sync_every`` chunk boundaries on the device routes), so
+    the solve is abandoned at a consistent preflow — ``partial_flow`` is
+    the value of that valid preflow (a LOWER bound on the maxflow, already
+    net of any warm-start offset) and ``sweeps_completed`` says how far
+    the solve got.  ``stage`` is ``"queued"`` (expired before admission,
+    zero sweeps run) or ``"running"`` (expired mid-solve).
+    """
+
+    code = "deadline_exceeded"
+    retriable = False
+
+    def __init__(self, request_id: str, *, deadline: float, elapsed: float,
+                 sweeps_completed: int = 0, partial_flow: int | None = None,
+                 stage: str = "running"):
+        self.deadline = deadline
+        self.elapsed = elapsed
+        self.sweeps_completed = sweeps_completed
+        self.partial_flow = partial_flow
+        self.stage = stage
+        super().__init__(
+            request_id,
+            f"request {request_id} missed its deadline after "
+            f"{elapsed:.3f}s ({stage}, {sweeps_completed} sweeps"
+            + (f", partial flow {partial_flow}" if partial_flow is not None
+               else "") + ")")
+
+
+class ServiceOverloaded(ServiceError):
+    """Admission control shed the request: the bounded queue is full.
+
+    ``retry_after`` estimates when capacity frees up (seconds); the shed
+    is counted per tenant in ``ServiceStats.sheds_by_tenant``.
+    """
+
+    code = "overloaded"
+    retriable = True
+
+    def __init__(self, request_id: str, *, retry_after: float,
+                 queue_depth: int, bound: int, tenant: str = "default"):
+        self.retry_after = retry_after
+        self.queue_depth = queue_depth
+        self.bound = bound
+        self.tenant = tenant
+        super().__init__(
+            request_id,
+            f"request {request_id} shed: queue full ({queue_depth}/{bound});"
+            f" retry after {retry_after:.2f}s")
+
+
+class ServiceClosed(ServiceError):
+    """The service is shutting down and no longer accepts requests."""
+
+    code = "closed"
+    retriable = False
+
+    def __init__(self, request_id: str):
+        super().__init__(request_id,
+                         f"request {request_id} rejected: service closed")
+
+
+class RequestFailed(ServiceError):
+    """The solve faulted and exhausted the supervisor's retries.
+
+    Only reached after the degradation ladder bottomed out (kernel-class
+    failures) or ``max_retries`` re-runs from the intact sweep boundary
+    (everything else) — the terminal rung of the robustness layer.
+    """
+
+    code = "failed"
+    retriable = True
+
+    def __init__(self, request_id: str, *, cause: str, attempts: int):
+        self.cause = cause
+        self.attempts = attempts
+        super().__init__(
+            request_id,
+            f"request {request_id} failed after {attempts} attempts: "
+            f"{cause}")
+
+
+ERROR_TAXONOMY = {
+    DeadlineExceeded.code: DeadlineExceeded,
+    ServiceOverloaded.code: ServiceOverloaded,
+    ServiceClosed.code: ServiceClosed,
+    RequestFailed.code: RequestFailed,
+}
+
+__all__ = ["ERROR_TAXONOMY", "DeadlineExceeded", "RequestFailed",
+           "ServiceClosed", "ServiceError", "ServiceOverloaded"]

@@ -1,0 +1,143 @@
+"""Service observability: counters, latency quantiles, health probes.
+
+``ServiceStats`` is a plain mutable aggregate the service mutates inline
+(no locks needed — the service loop is single-threaded by design, see
+``service.py``).  It answers the two operational questions the ISSUE's
+acceptance test asks: *is the service up and bounded* (health/readiness
+probes, queue-depth gauge vs its bound) and *where did every request go*
+(completed + the four typed-error counters sum back to submissions).
+
+Latencies are kept in a bounded ring so a long-lived service reports
+recent p50/p99, not lifetime averages diluted by startup.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+
+def _quantile(sorted_vals: list[float], q: float) -> float:
+    """Nearest-rank quantile of an already-sorted list (0 if empty)."""
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, max(0, int(q * len(sorted_vals))))
+    return sorted_vals[idx]
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """Mutable counters + gauges of one ``MaxflowService`` instance."""
+
+    # -- request lifecycle counters --
+    submitted: int = 0
+    admitted: int = 0          # entered a batch slot (swaps == admissions)
+    completed: int = 0         # resolved with a MincutResult
+    deadline_misses: int = 0   # resolved with DeadlineExceeded
+    sheds: int = 0             # resolved with ServiceOverloaded
+    failed: int = 0            # resolved with RequestFailed
+    # -- robustness-layer counters --
+    evictions: int = 0         # prepared handles checkpointed off device
+    warm_resumes: int = 0      # evicted handles restored from checkpoint
+    retries: int = 0           # supervisor re-runs of a faulted chunk
+    faults: int = 0            # chunk executions that raised
+    degradations: int = 0      # ladder steps taken after kernel failures
+    breaker_trips: int = 0     # rungs that crossed the failure threshold
+    breaker_skips: int = 0     # chunk entries that avoided an open rung
+    swaps: int = 0             # slot-swap admissions into live batches
+    # -- gauges --
+    queue_depth: int = 0
+    max_queue_depth: int = 0
+    in_flight: int = 0
+    resident_bytes: int = 0    # device bytes held by cached handles
+    # -- per-tenant shed accounting --
+    sheds_by_tenant: dict[str, int] = dataclasses.field(default_factory=dict)
+
+    latency_window: int = 1024
+
+    def __post_init__(self):
+        self._latencies: deque[float] = deque(maxlen=self.latency_window)
+        self._elapsed = 0.0  # clock time spanned by completed requests
+
+    # -- recording ----------------------------------------------------------
+
+    def observe_queue(self, depth: int) -> None:
+        self.queue_depth = depth
+        self.max_queue_depth = max(self.max_queue_depth, depth)
+
+    def record_latency(self, seconds: float) -> None:
+        self._latencies.append(seconds)
+
+    def record_shed(self, tenant: str) -> None:
+        self.sheds += 1
+        self.sheds_by_tenant[tenant] = self.sheds_by_tenant.get(tenant, 0) + 1
+
+    def note_elapsed(self, seconds: float) -> None:
+        self._elapsed = seconds
+
+    # -- derived ------------------------------------------------------------
+
+    @property
+    def resolved(self) -> int:
+        """Requests that reached a terminal outcome (result or typed err)."""
+        return (self.completed + self.deadline_misses + self.sheds
+                + self.failed)
+
+    def latency_quantiles(self) -> dict[str, float]:
+        vals = sorted(self._latencies)
+        return {"p50": _quantile(vals, 0.50), "p99": _quantile(vals, 0.99)}
+
+    def throughput(self) -> float:
+        """Completed requests per second over the service's lifetime."""
+        return self.completed / self._elapsed if self._elapsed > 0 else 0.0
+
+    # -- probes -------------------------------------------------------------
+
+    def healthy(self) -> bool:
+        """Liveness: no request has vanished without a terminal outcome.
+
+        ``submitted == resolved + queued + in-flight`` is the invariant the
+        acceptance test leans on; a leak (a request neither resolved nor
+        tracked) breaks it.
+        """
+        return self.resolved + self.queue_depth + self.in_flight \
+            == self.submitted
+
+    def ready(self, queue_bound: int) -> bool:
+        """Readiness: accepting work (queue has headroom)."""
+        return self.queue_depth < queue_bound
+
+    # -- reporting ----------------------------------------------------------
+
+    def report(self, breaker_state: dict[str, str] | None = None) -> dict:
+        """One JSON-able snapshot of everything above."""
+        out = {
+            "submitted": self.submitted,
+            "admitted": self.admitted,
+            "completed": self.completed,
+            "deadline_misses": self.deadline_misses,
+            "sheds": self.sheds,
+            "sheds_by_tenant": dict(self.sheds_by_tenant),
+            "failed": self.failed,
+            "evictions": self.evictions,
+            "warm_resumes": self.warm_resumes,
+            "retries": self.retries,
+            "faults": self.faults,
+            "degradations": self.degradations,
+            "breaker_trips": self.breaker_trips,
+            "breaker_skips": self.breaker_skips,
+            "swaps": self.swaps,
+            "queue_depth": self.queue_depth,
+            "max_queue_depth": self.max_queue_depth,
+            "in_flight": self.in_flight,
+            "resident_bytes": self.resident_bytes,
+            "latency": self.latency_quantiles(),
+            "throughput": self.throughput(),
+            "healthy": self.healthy(),
+        }
+        if breaker_state is not None:
+            out["breaker"] = breaker_state
+        return out
+
+
+__all__ = ["ServiceStats"]

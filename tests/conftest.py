@@ -10,6 +10,22 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_compilation_cache_dir", "/tmp/repro_jax_cache")
 jax.config.update("jax_persistent_cache_min_compile_time_secs", 1.0)
+
+
+@pytest.fixture
+def fresh_compile_cache():
+    """Reset the process-global jit executable caches.
+
+    The compile-cache accounting tests assert hit/miss counts derived
+    from module-global trace counters, but jit caches are process-global:
+    an identically-shaped solve in an EARLIER test warms the cache, so
+    whether this test's first solve is a hit or a miss depends on pytest
+    ordering.  Clearing the caches up front makes the first invocation
+    deterministically a miss under any ordering (-p no:randomly not
+    required, -k subsets safe)."""
+    jax.clear_caches()
+    yield

@@ -443,3 +443,41 @@ def test_max_sweeps_yields_structured_nonconvergence():
     assert d.violations == []                     # intact, just unfinished
     assert "max_sweeps" in d.summary()
     assert capped.flow_value <= full.flow_value
+
+
+# --------------------------------------------------------------------------
+# converged-checkpoint short-circuit (no extra no-op sweep on resume)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("device_resident", [False, True])
+def test_sharded_converged_checkpoint_resumes_without_extra_sweep(
+        tmp_path, device_resident):
+    """Sharded resume from the CONVERGED final-boundary checkpoint must
+    return the finished result without re-entering the sweep loop — the
+    legacy converged-entry semantics (ShardedExecutor.keep_running's
+    ``idx == start`` term) would otherwise run one extra no-op sweep."""
+    p, part = _instance()
+    mesh = jax.make_mesh((1,), ("regions",))
+    opts = SolverOptions(method="prd", device_resident=device_resident,
+                         host_sync_every=1 if device_resident else None)
+    base = Solver(opts).prepare(p, part).solve(
+        mesh=mesh, checkpoint=CheckpointPolicy(directory=tmp_path, every=1))
+    assert base.converged and base.stats.sweeps >= 2
+
+    latest = res.latest_checkpoint(tmp_path)
+    assert latest.sweeps == base.stats.sweeps
+    assert res.checkpoint_converged(latest)
+
+    got = Solver(opts).prepare(p, part).solve(mesh=mesh,
+                                              resume_from=tmp_path)
+    assert got.converged
+    assert got.flow_value == base.flow_value
+    assert got.stats.sweeps == base.stats.sweeps, \
+        "converged-checkpoint resume ran extra sweeps"
+    np.testing.assert_array_equal(got.source_side, base.source_side)
+    np.testing.assert_array_equal(np.asarray(got.state.d),
+                                  np.asarray(base.state.d))
+
+    # a NON-converged mid-solve checkpoint must not short-circuit
+    mid = res.load_checkpoint(tmp_path, step=1)
+    assert not res.checkpoint_converged(mid)
