@@ -26,7 +26,7 @@ def main() -> None:
     args, _ = ap.parse_known_args()
 
     from benchmarks import (bench_batch, bench_competitions,
-                            bench_engine_backend, bench_lm,
+                            bench_engine_backend, bench_lm, bench_memory,
                             bench_resilience, bench_service,
                             bench_sweep_driver, bench_synthetic,
                             bench_warmstart)
@@ -39,7 +39,8 @@ def main() -> None:
             ("resilience", bench_resilience),
             ("service", bench_service),
             ("competitions", bench_competitions),
-            ("lm", bench_lm)]
+            ("lm", bench_lm),
+            ("memory", bench_memory)]
     print("name,us_per_call,derived")
     for name, mod in mods:
         if args.only and args.only not in name:

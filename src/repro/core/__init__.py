@@ -47,6 +47,8 @@ from repro.core.resilience import (CheckpointMismatchError, CheckpointPolicy,
                                    VmemOverflowError, fault_injection,
                                    latest_checkpoint, load_checkpoint,
                                    save_checkpoint)
+from repro.core.autotune import TunedConfig, tune, tuned_sweep_config
+from repro.core.dtypes import DTYPE_POLICIES, KernelDtypes
 from repro.core.partition import bfs_partition, block_partition, grid_partition
 from repro.core.reduction import region_reduction
 from repro.core.solver import (ProblemHandle, Solver, SolverCacheInfo,
@@ -56,14 +58,15 @@ from repro.core.sweep import SweepConfig, SweepStats, cut_value, extract_cut, so
 __all__ = [
     "BatchCacheInfo", "BatchMeta", "BatchState", "BatchedExecutor",
     "BatchedSolver", "Capabilities", "CertificateError",
-    "CheckpointMismatchError", "CheckpointPolicy", "FaultPlan",
-    "FlowState", "GraphMeta", "GraphUpdate", "InjectedFault", "Layout",
+    "CheckpointMismatchError", "CheckpointPolicy", "DTYPE_POLICIES",
+    "FaultPlan", "FlowState", "GraphMeta", "GraphUpdate", "InjectedFault",
+    "KernelDtypes", "Layout",
     "LocalExecutor", "MincutResult", "NonConvergence",
     "PackedBatch", "PreemptionError", "Problem", "ProblemHandle",
     "ProblemValidationError", "RegionExecutor", "RetryPolicy",
     "ShardedExecutor", "SolveCheckpoint", "SolveSupervisor", "Solver",
     "SolverCacheInfo", "SolverOptions", "SupervisorReport", "SweepConfig",
-    "SweepStats", "UnsupportedFeatureError", "Violation",
+    "SweepStats", "TunedConfig", "UnsupportedFeatureError", "Violation",
     "VmemOverflowError", "apply_update",
     "bfs_partition", "block_partition", "bucket_shape_for",
     "build", "cut_value", "extract_cut", "fault_injection",
@@ -71,5 +74,5 @@ __all__ = [
     "latest_checkpoint", "load_checkpoint",
     "pack_built", "pack_instances",
     "region_reduction", "save_checkpoint", "solve", "solve_mincut",
-    "solve_mincut_batch", "validate_problem",
+    "solve_mincut_batch", "tune", "tuned_sweep_config", "validate_problem",
 ]

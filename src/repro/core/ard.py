@@ -53,9 +53,12 @@ class DischargeResult(NamedTuple):
 def _distinct_sorted_ghost_labels(ghost_d, cross, emask, d_inf):
     """Leading distinct ghost labels (< d_inf) in ascending order, then INF.
 
-    Prepends -1 so that index 0 is always the sink-only stage (T_0 = {t})."""
-    flat = jnp.where(cross & emask & (ghost_d < d_inf), ghost_d,
-                     INF_LABEL).reshape(-1)
+    Prepends -1 so that index 0 is always the sink-only stage (T_0 = {t}).
+
+    Stage scheduling is int32 regardless of the label storage dtype — the
+    schedule is tiny and only compared against, never stored back."""
+    flat = jnp.where(cross & emask & (ghost_d < d_inf),
+                     ghost_d.astype(_I32), INF_LABEL).reshape(-1)
     s = jnp.sort(flat)
     first = jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]])
     distinct = jnp.sort(jnp.where(first, s, INF_LABEL))
@@ -90,7 +93,8 @@ def ard_discharge_one(cf, sink_cf, excess, ghost_d, *, nbr_local, rev_slot,
         target_cross = cross & (ghost_d <= lvl) & (ghost_d < d_inf)
         lab0 = bfs_to_targets(
             cf, sink_cf, nbr_local=nbr_local, intra=intra, emask=emask,
-            vmask=vmask, target_cross=target_cross, linf=linf_local)
+            vmask=vmask, target_cross=target_cross, linf=linf_local,
+            label_dtype=ghost_d.dtype)
         es = push_relabel(
             cf, sink_cf, excess, lab0,
             nbr_local=nbr_local, rev_slot=rev_slot, intra=intra, emask=emask,
@@ -109,8 +113,8 @@ def ard_discharge_one(cf, sink_cf, excess, ghost_d, *, nbr_local, rev_slot,
         return more & (lvl < INF_LABEL) & (lvl <= stage_cap)
 
     init = (jnp.zeros((), _I32), cf, sink_cf, excess,
-            jnp.zeros((V, E), _I32), jnp.zeros((), _I32), jnp.zeros((), _I32),
-            jnp.zeros((), _I32))
+            jnp.zeros((V, E), cf.dtype), jnp.zeros((), _I32),
+            jnp.zeros((), _I32), jnp.zeros((), _I32))
     (i, cf, sink_cf, excess, out_push, sink_pushed, iters,
      launches) = jax.lax.while_loop(stage_cond, stage_body, init)
 
@@ -177,6 +181,7 @@ def ard_discharge_batched(cf, sink_cf, excess, ghost_d, *, nbr_local,
             & (ghost_d < d_inf[:, None, None])
         lab0 = bfs_batched(cf, sink_cf, nbr_local, intra, emask, vmask,
                            target_cross, linf)
+        lab0 = lab0.astype(ghost_d.dtype)
         es = push_relabel_batched(
             cf, sink_cf, excess, lab0,
             nbr_local=nbr_local, rev_slot=rev_slot, intra=intra, emask=emask,
@@ -199,7 +204,7 @@ def ard_discharge_batched(cf, sink_cf, excess, ghost_d, *, nbr_local,
         return more.any()
 
     zk = jnp.zeros((K,), _I32)
-    init = (zk, cf, sink_cf, excess, jnp.zeros((K, V, E), _I32), zk, zk,
+    init = (zk, cf, sink_cf, excess, jnp.zeros((K, V, E), cf.dtype), zk, zk,
             jnp.zeros((), _I32))
     (i, cf, sink_cf, excess, out_push, sink_pushed, iters,
      launches) = jax.lax.while_loop(stage_cond, stage_body, init)

@@ -289,8 +289,11 @@ def solve_batch(packed: PackedBatch, cfg: SweepConfig | None = None, *,
         ex, state, limit, cfg.host_sync_every, carry0=carry0,
         on_sync=on_sync)
     sweeps, iters, launches, n_act = host
+    note = _res.vmem_fallback_note(cfg, bmeta.region_size, bmeta.max_degree,
+                                   dtypes=bmeta.kernel_dtypes)
     return state, BatchStats(
         sweeps=np.asarray(sweeps, np.int64),
         engine_iters=np.asarray(iters, np.int64),
         engine_launches=int(launches), host_syncs=seed_syncs + syncs,
-        converged=np.asarray(n_act) == 0)
+        converged=np.asarray(n_act) == 0,
+        degraded=[] if note is None else [note])

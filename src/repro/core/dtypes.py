@@ -1,0 +1,150 @@
+"""Kernel dtype policy: narrow label/flow/mask storage when ranges allow.
+
+The paper's working set is memory-bound, and both value families the
+kernels carry are range-bounded by construction:
+
+* **labels** never exceed ``d_inf`` (``n`` for PRD, ``|B|`` for ARD) nor
+  the ARD stage ceiling ``V + 2`` — so whenever
+  ``max(d_inf_prd, d_inf_ard, V + 2) + 2 < 2**14`` they fit int16 with a
+  narrow infinity sentinel ``NARROW_INF_LABEL = 2**14`` standing in for
+  the wide ``INF_LABEL = 2**30``;
+* **residuals/excess** are conserved quantities bounded by the total
+  capacity mass of the instance (sum of excess + sink capacities + arc
+  pair totals), so when that mass is ``< 2**15`` every residual, every
+  per-row cumulative sum, and every ``avail - cum_excl`` intermediate
+  fits int16 without wraparound.
+
+Under those bounds int16 arithmetic is *bit-exact* vs int32: min/max/
+clamp/compare against the narrow sentinel order identically (all real
+values sit strictly below it), and no additive path can overflow.
+Scalar accumulators that cross regions or iterations (``flow_to_t``,
+``relabel_sum``, ``engine_iters``, launch counters) always stay int32.
+
+Policies:
+
+* ``"int32"`` — the wide baseline (default everywhere).
+* ``"auto"``  — per-problem range check; narrows each family
+  independently, with an automatic int32 fallback when a bound fails.
+* ``"narrow"`` — like auto, but a failed bound is a typed
+  ``ProblemValidationError`` (raised by ``graph.validate_problem``)
+  instead of a silent widening.
+
+Masks ship to the kernels as int8 whenever either value family is
+narrow, int32 otherwise (the portable-lowering baseline).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+INF_LABEL_WIDE = 2 ** 30        # mirrors graph.INF_LABEL (int32 sentinel)
+NARROW_INF_LABEL = 2 ** 14      # int16 label sentinel
+NARROW_FLOW_LIMIT = 2 ** 15     # total capacity mass must stay below this
+NARROW_LABEL_LIMIT = NARROW_INF_LABEL - 2   # label values + 1 stay < inf
+
+DTYPE_POLICIES = ("int32", "auto", "narrow")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelDtypes:
+    """Storage dtypes for the three value families a region kernel holds.
+
+    Hashable and string-keyed so it can sit inside frozen metadata
+    (``GraphMeta``/``BatchMeta``) that keys the jit compile caches —
+    a dtype change can never silently reuse a stale executable.
+    """
+
+    label: str = "int32"
+    flow: str = "int32"
+    mask: str = "int32"
+
+    @property
+    def label_np(self):
+        return np.dtype(self.label)
+
+    @property
+    def flow_np(self):
+        return np.dtype(self.flow)
+
+    @property
+    def mask_np(self):
+        return np.dtype(self.mask)
+
+    @property
+    def inf_label(self) -> int:
+        return inf_label_for(self.label)
+
+    def as_dict(self) -> dict:
+        return dict(label=self.label, flow=self.flow, mask=self.mask)
+
+
+WIDE = KernelDtypes()
+NARROW = KernelDtypes(label="int16", flow="int16", mask="int8")
+
+
+def inf_label_for(dtype) -> int:
+    """The label-infinity sentinel for a label dtype (2**30 / 2**14)."""
+    return NARROW_INF_LABEL if np.dtype(dtype).itemsize < 4 \
+        else INF_LABEL_WIDE
+
+
+def flow_mass(problem) -> int:
+    """Total capacity mass: the range bound for every residual quantity.
+
+    int64 host-side sums (never wraps); excess, sink capacity and every
+    residual pair total are all bounded by this one number for the whole
+    solve — flow is conserved and updates only move it.
+    """
+    cf = np.asarray(problem.cap_fwd, dtype=np.int64)
+    cb = np.asarray(problem.cap_bwd, dtype=np.int64)
+    cs = np.asarray(problem.excess, dtype=np.int64)
+    ct = np.asarray(problem.sink_cap, dtype=np.int64)
+    return int(cf.sum() + cb.sum() + cs.sum() + ct.sum())
+
+
+def label_bound(num_vertices: int, region_size: int) -> int:
+    """Largest label any route can write: the PRD ceiling ``n`` vs the
+    ARD stage ceiling ``V + 2`` (regional BFS labelings stay below it)."""
+    return max(int(num_vertices), int(region_size) + 2)
+
+
+def labels_fit_narrow(bound: int) -> bool:
+    return bound <= NARROW_LABEL_LIMIT
+
+
+def flows_fit_narrow(mass: int) -> bool:
+    return mass < NARROW_FLOW_LIMIT
+
+
+def select_dtypes(policy: str, *, mass: int, bound: int) -> KernelDtypes:
+    """Resolve a policy name to concrete storage dtypes for one problem.
+
+    ``"auto"`` and ``"narrow"`` resolve identically — the difference is
+    that ``graph.validate_problem`` raises on a failed bound under
+    ``"narrow"`` where ``"auto"`` silently falls back to int32.
+    """
+    if policy not in DTYPE_POLICIES:
+        raise ValueError(
+            f"unknown dtype policy {policy!r}; expected one of "
+            f"{DTYPE_POLICIES}")
+    if policy == "int32":
+        return WIDE
+    label = "int16" if labels_fit_narrow(bound) else "int32"
+    flow = "int16" if flows_fit_narrow(mass) else "int32"
+    mask = "int8" if (label == "int16" or flow == "int16") else "int32"
+    return KernelDtypes(label=label, flow=flow, mask=mask)
+
+
+def narrow_violations(policy: str, *, mass: int, bound: int) -> list:
+    """(family, dtype, value, limit) rows for bounds a forced-narrow
+    policy cannot satisfy; empty for int32/auto or when everything fits."""
+    if policy != "narrow":
+        return []
+    out = []
+    if not flows_fit_narrow(mass):
+        out.append(("flow", "int16", mass, NARROW_FLOW_LIMIT))
+    if not labels_fit_narrow(bound):
+        out.append(("label", "int16", bound, NARROW_LABEL_LIMIT))
+    return out

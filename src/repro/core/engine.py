@@ -69,10 +69,26 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.graph import INF_LABEL
+from repro.core import dtypes as _dt
 from repro.kernels import push_relabel as _pr_kernel
 
 _I32 = jnp.int32
+
+
+def _mask_dtype(cf, lab):
+    """Kernel mask staging dtype: int8 whenever either value family is
+    stored narrow (the KernelDtypes policy), int32 otherwise."""
+    return jnp.int8 if (cf.dtype.itemsize < 4 or lab.dtype.itemsize < 4) \
+        else jnp.int32
+
+
+def _kernel_dtypes(cf, lab) -> _dt.KernelDtypes:
+    """Reconstruct the KernelDtypes policy in force from live arrays (for
+    the dtype-aware VMEM budget check)."""
+    mask = "int8" if (cf.dtype.itemsize < 4 or lab.dtype.itemsize < 4) \
+        else "int32"
+    return _dt.KernelDtypes(label=lab.dtype.name, flow=cf.dtype.name,
+                            mask=mask)
 
 ENGINE_BACKENDS = ("xla", "pallas")
 
@@ -100,19 +116,21 @@ def _phase_xla(lab, cf, sink_cf, excess, *, nbr_local, intra, pushable,
     split (sink in column 0) plus the relabel target of every active vertex
     with no admissible arc.  Mirrors ``kernels.ref.push_relabel_iteration_ref``.
     """
+    inf = jnp.asarray(_dt.inf_label_for(lab.dtype.name), lab.dtype)
+    d_inf = jnp.asarray(d_inf).astype(lab.dtype)
     act = (excess > 0) & (lab < d_inf)
     nlab = jnp.where(intra, lab[nbr_local], cross_lab)
-    nlab = jnp.where(pushable, nlab, INF_LABEL)
+    nlab = jnp.where(pushable, nlab, inf)
     adm = (cf > 0) & (lab[:, None] == nlab + 1) & act[:, None]
     sink_adm = (sink_cf > 0) & (lab == 1) & act
     sink_cap = jnp.where(sink_adm, sink_cf, 0)
     arc_cap = jnp.where(adm, cf, 0)
     caps = jnp.concatenate([sink_cap[:, None], arc_cap], axis=1)   # [V,1+E]
     avail = jnp.where(act, excess, 0)
-    cum_excl = jnp.cumsum(caps, axis=1) - caps
+    cum_excl = jnp.cumsum(caps, axis=1, dtype=caps.dtype) - caps
     delta = jnp.clip(avail[:, None] - cum_excl, 0, caps)           # [V,1+E]
     no_adm = act & ~adm.any(axis=1) & ~sink_adm
-    cand = jnp.where(cf > 0, nlab + 1, INF_LABEL).min(axis=1)
+    cand = jnp.where(cf > 0, nlab + 1, inf).min(axis=1)
     cand = jnp.where(sink_cf > 0, jnp.minimum(cand, 1), cand)
     new_lab = jnp.where(no_adm,
                         jnp.maximum(jnp.minimum(cand, d_inf), lab), lab)
@@ -150,7 +168,8 @@ def make_phase(backend: str, *, nbr_local, intra, emask, vmask,
                 lab, cf, sink_cf, excess, nbr_local=nbr_local, intra=intra,
                 emask=emask, vmask=vmask, cross_pushable=cross_pushable,
                 cross_lab=cross_lab, d_inf=d_inf, sink_open=sink_open,
-                block_v=block_v, interpret=interpret, mode=mode)
+                block_v=block_v, interpret=interpret, mode=mode,
+                mask_dtype=_mask_dtype(cf, lab))
         return phase
 
     pushable = (cross_pushable | intra) & emask
@@ -223,7 +242,8 @@ def push_relabel(
     V, E = cf.shape
     d_inf = jnp.asarray(d_inf, _I32)
     if chunk_iters is not None and backend == "pallas" \
-            and not _pr_kernel.fused_region_fits_vmem(V, E, vmem_budget_bytes):
+            and not _pr_kernel.fused_region_fits_vmem(
+                V, E, vmem_budget_bytes, dtypes=_kernel_dtypes(cf, lab)):
         chunk_iters = None       # region too big to sit in VMEM: blocked path
     if chunk_iters is not None:
         return _push_relabel_fused(
@@ -233,7 +253,7 @@ def push_relabel(
             sink_open=sink_open, max_iters=max_iters, backend=backend,
             chunk_iters=chunk_iters, interpret=interpret)
     flat_n = V * E
-    zero_e = jnp.zeros((V, E), _I32)
+    zero_e = jnp.zeros((V, E), cf.dtype)
     phase = make_phase(backend, nbr_local=nbr_local, intra=intra, emask=emask,
                        vmask=vmask, cross_pushable=cross_pushable,
                        cross_lab=cross_lab, d_inf=d_inf, sink_open=sink_open,
@@ -247,7 +267,10 @@ def push_relabel(
         delta, _ = phase(s.lab, s.cf, s.sink_cf, s.excess, mode="push")
         d_sink = delta[:, 0]
         d_arc = delta[:, 1:]
-        pushed = d_sink + d_arc.sum(axis=1)
+        # row sums stay in the storage dtype (bounded by the vertex's
+        # excess, which the narrow range check already covers); an implicit
+        # int32 promotion here would silently widen the while-loop carry
+        pushed = d_sink + jnp.sum(d_arc, axis=1, dtype=d_arc.dtype)
 
         # ---- scatter application (always XLA: global, cross-tile) ----
         excess = s.excess - pushed
@@ -258,7 +281,7 @@ def push_relabel(
         flat_idx = (nbr_local * E + rev_slot).reshape(flat_n)
         cf = (cf.reshape(flat_n).at[flat_idx]
               .add(d_intra.reshape(flat_n), mode="drop").reshape(V, E))
-        recv = jnp.zeros((V,), _I32).at[nbr_local.reshape(flat_n)].add(
+        recv = jnp.zeros((V,), cf.dtype).at[nbr_local.reshape(flat_n)].add(
             d_intra.reshape(flat_n), mode="drop")
         excess = excess + recv
         # cross arcs: flow leaves the region (applied later by the driver)
@@ -266,13 +289,13 @@ def push_relabel(
         out_push = s.out_push + d_cross
 
         s2 = EngineState(cf, sink_cf, excess, s.lab, out_push,
-                         s.sink_pushed + d_sink.sum(), s.iters + 1,
-                         s.relabel_sum, s.launches + 2)
+                         s.sink_pushed + jnp.sum(d_sink, dtype=_I32),
+                         s.iters + 1, s.relabel_sum, s.launches + 2)
         # ---- relabel phase (on the post-push residual graph) ----
         _, new_lab = phase(s2.lab, s2.cf, s2.sink_cf, s2.excess,
                            mode="relabel")
         relabel_sum = s2.relabel_sum + jnp.sum(
-            jnp.where(vmask, new_lab - s2.lab, 0))
+            jnp.where(vmask, new_lab - s2.lab, 0), dtype=_I32)
         return s2._replace(lab=new_lab, relabel_sum=relabel_sum)
 
     def cond(s: EngineState):
@@ -317,7 +340,7 @@ def _push_relabel_fused_batched(cf, sink_cf, excess, lab, *, nbr_local,
     assert chunk >= 1
     d_inf = jnp.broadcast_to(jnp.asarray(d_inf, _I32), (K,))
     pushable = (cross_pushable | intra) & emask
-    zero_e = jnp.zeros((K, V, E), _I32)
+    zero_e = jnp.zeros((K, V, E), cf.dtype)
     zero_k = jnp.zeros((K,), _I32)
 
     def region_active(excess, lab):
@@ -326,9 +349,10 @@ def _push_relabel_fused_batched(cf, sink_cf, excess, lab, *, nbr_local,
     if backend == "pallas":
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
-        intra_i = intra.astype(_I32)
-        pushable_i = pushable.astype(_I32)
-        vmask_i = vmask.astype(_I32)
+        md = _mask_dtype(cf, lab)
+        intra_i = intra.astype(md)
+        pushable_i = pushable.astype(md)
+        vmask_i = vmask.astype(md)
         lead = (K,) if grid2d is None else tuple(grid2d)
         assert math.prod(lead) == K, (lead, K)
         rs = lambda a: a.reshape(lead + a.shape[1:])
@@ -448,7 +472,8 @@ def push_relabel_batched(
     K, V, E = cf.shape
     d_inf = jnp.asarray(d_inf, _I32)
     if chunk_iters is not None and backend == "pallas" \
-            and not _pr_kernel.fused_region_fits_vmem(V, E, vmem_budget_bytes):
+            and not _pr_kernel.fused_region_fits_vmem(
+                V, E, vmem_budget_bytes, dtypes=_kernel_dtypes(cf, lab)):
         chunk_iters = None
     if chunk_iters is None:
         d_inf_k = jnp.broadcast_to(d_inf, (K,))
@@ -480,6 +505,7 @@ def bfs_to_targets(
     target_cross: jax.Array,   # bool[V,E] cross arcs that enter the target set
     linf,
     sink_open: bool = True,
+    label_dtype=None,
 ) -> jax.Array:
     """Exact hop distance to the target set through residual arcs.
 
@@ -489,9 +515,11 @@ def bfs_to_targets(
     like the paper's shortest-path-first augmentation.
     """
     V, E = cf.shape
-    linf = jnp.asarray(linf, _I32)
+    ldt = _I32 if label_dtype is None else jnp.dtype(label_dtype)
+    linf = jnp.asarray(linf).astype(ldt)
     base = jnp.where(
-        (target_cross & emask & (cf > 0)).any(axis=1), _I32(1), linf)
+        (target_cross & emask & (cf > 0)).any(axis=1), linf.dtype.type(1),
+        linf)
     if sink_open:
         base = jnp.where(sink_cf > 0, jnp.minimum(base, 1), base)
     base = jnp.where(vmask, base, linf)

@@ -30,8 +30,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import dtypes as _dt
+from repro.core.dtypes import KernelDtypes
+
 # Large-but-safe sentinel values (int32 arithmetic must never overflow:
-# INF_LABEL + 1 and INF_CAP + INF_CAP must stay < 2**31).
+# INF_LABEL + 1 and INF_CAP + INF_CAP must stay < 2**31).  Narrowed
+# storage (``dtype_policy="auto"|"narrow"``) swaps in the int16 sentinel
+# ``dtypes.NARROW_INF_LABEL`` wherever labels are narrow.
 INF_LABEL = np.int32(2**30)
 INF_CAP = np.int32(2**30)
 
@@ -49,10 +54,21 @@ class GraphMeta:
     num_ghost_groups: int     # distinct (region, adjacent-ghost) pairs
     d_inf_ard: int            # |B|      (ARD label ceiling, paper Sec. 4.1)
     d_inf_prd: int            # n        (PRD label ceiling, paper Sec. 2)
+    # storage dtypes selected at build time (dtype_policy); recorded here
+    # so every compile-cache key that hashes the meta stays sound when the
+    # same shapes are built under a different narrowing policy
+    label_dtype: str = "int32"
+    flow_dtype: str = "int32"
+    mask_dtype: str = "int32"
 
     def __post_init__(self):
         assert self.num_regions >= 1
         assert self.region_size >= 1
+
+    @property
+    def kernel_dtypes(self) -> KernelDtypes:
+        return KernelDtypes(label=self.label_dtype, flow=self.flow_dtype,
+                            mask=self.mask_dtype)
 
 
 @jax.tree_util.register_dataclass
@@ -132,7 +148,8 @@ class ProblemValidationError(ValueError):
     """
 
 
-def validate_problem(p: Problem, *, context: str = "problem") -> None:
+def validate_problem(p: Problem, *, context: str = "problem",
+                     dtype_policy: str = "int32") -> None:
     """Reject negative and overflow-risk capacities before they reach the
     int32 flow arithmetic.
 
@@ -152,6 +169,12 @@ def validate_problem(p: Problem, *, context: str = "problem") -> None:
     * ``sum(excess) < INF_CAP`` (bounds excess accumulation, flow_to_t);
     * ``sum(excess) + sum(sink_cap) + sum(caps) < 2**31`` (bounds the
       cut-cost certificate reduction).
+
+    Under ``dtype_policy="narrow"`` (forced int16 storage) the bounds
+    tighten: the total capacity mass must fit the narrowed residual dtype
+    and the label ceiling the narrowed label dtype — a violation is a
+    typed error naming the dtype and bound instead of silent wraparound.
+    ``"auto"`` needs no extra checks here (it falls back to int32).
 
     Raises :class:`ProblemValidationError` (a ``ValueError``) naming the
     first offending quantity.  ``context`` labels the error source
@@ -200,6 +223,40 @@ def validate_problem(p: Problem, *, context: str = "problem") -> None:
     if total >= 2**31:
         fail(f"total capacity mass {total} >= 2^31 — the int32 cut-cost "
              f"certificate reduction can overflow")
+    # forced-narrow policy: the int16 families must actually fit.  The
+    # label bound is the conservative problem-level one (n + 2 dominates
+    # max(n, V + 2) for every partition, since V <= n).
+    for family, dt, value, limit in _dt.narrow_violations(
+            dtype_policy, mass=total, bound=n + 2):
+        what = ("total capacity mass" if family == "flow"
+                else "label ceiling")
+        fail(f"{what} {value} exceeds the {dt} {family} bound {limit} "
+             f"under dtype_policy='narrow' — narrowed {family} storage "
+             f"would wrap; use dtype_policy='auto' (int32 fallback) or "
+             f"'int32'")
+
+
+def validate_update_dtypes(meta, p: Problem, *,
+                           context: str = "update") -> None:
+    """A capacity update on a handle built with narrowed storage must still
+    fit the narrow ranges.
+
+    The handle's dtypes are frozen at ``build`` time (they key the compile
+    cache), so an update that pushes the total capacity mass past the int16
+    bound cannot silently widen — and silently wrapping would corrupt flow.
+    Typed error instead; the label bound depends only on the fixed topology
+    and cannot change under an update.
+    """
+    kd = meta.kernel_dtypes
+    if kd.flow != "int16":
+        return
+    mass = _dt.flow_mass(p)
+    if not _dt.flows_fit_narrow(mass):
+        raise ProblemValidationError(
+            f"invalid {context}: total capacity mass {mass} exceeds the "
+            f"int16 flow bound {_dt.NARROW_FLOW_LIMIT} of this prepared "
+            f"handle's narrowed storage — re-prepare the problem (a fresh "
+            f"build under dtype_policy='auto' falls back to int32)")
 
 
 @dataclass(frozen=True)
@@ -226,11 +283,19 @@ class Layout:
         return np.asarray(arr_kv)[self.part, self.local_id]
 
 
-def build(problem: Problem, part: np.ndarray) -> tuple[GraphMeta, FlowState, "Layout"]:
+def build(problem: Problem, part: np.ndarray, *,
+          dtype_policy: str = "int32") -> tuple[GraphMeta, FlowState, "Layout"]:
     """Block a flat problem into the region-partitioned device layout.
 
     ``part[v]`` gives the region id of vertex v (0..K-1).  Pure numpy; runs
     once on the host (the paper's ``splitter`` tool, Sec. 5.3).
+
+    ``dtype_policy`` selects the storage dtypes of the mutable state
+    (``repro.core.dtypes``): ``"auto"``/``"narrow"`` store residuals and
+    excess as int16 when the total capacity mass fits and labels as int16
+    when the label ceiling fits, recording the choice in ``GraphMeta`` so
+    compile-cache keys stay sound; ``"auto"`` falls back to int32 per
+    family, ``"narrow"`` raises ``ProblemValidationError`` instead.
     """
     _check_problem(problem)
     n = problem.num_vertices
@@ -331,6 +396,16 @@ def build(problem: Problem, part: np.ndarray) -> tuple[GraphMeta, FlowState, "La
             cross_group[x] = keys.setdefault(k, len(keys))
         num_groups = max(1, len(keys))
 
+    kd = _dt.select_dtypes(dtype_policy, mass=_dt.flow_mass(problem),
+                           bound=_dt.label_bound(n, V))
+    bad = _dt.narrow_violations(dtype_policy, mass=_dt.flow_mass(problem),
+                                bound=_dt.label_bound(n, V))
+    if bad:
+        family, dt, value, limit = bad[0]
+        raise ProblemValidationError(
+            f"invalid build: {family} range {value} exceeds the {dt} "
+            f"bound {limit} under dtype_policy='narrow'")
+
     meta = GraphMeta(
         num_regions=K,
         region_size=V,
@@ -341,6 +416,9 @@ def build(problem: Problem, part: np.ndarray) -> tuple[GraphMeta, FlowState, "La
         num_ghost_groups=num_groups,
         d_inf_ard=max(1, num_boundary),
         d_inf_prd=max(1, n),
+        label_dtype=kd.label,
+        flow_dtype=kd.flow,
+        mask_dtype=kd.mask,
     )
     state = FlowState(
         nbr_region=jnp.asarray(nbr_region),
@@ -365,10 +443,10 @@ def build(problem: Problem, part: np.ndarray) -> tuple[GraphMeta, FlowState, "La
         cross_dst_vtx=jnp.asarray(
             cross_dst[:, 0].astype(np.int64) * V + cross_dst[:, 1],
             dtype=jnp.int32),
-        cf=jnp.asarray(cf),
-        sink_cf=jnp.asarray(sink_cf),
-        excess=jnp.asarray(excess),
-        d=jnp.zeros((K, V), dtype=jnp.int32),
+        cf=jnp.asarray(cf.astype(kd.flow_np)),
+        sink_cf=jnp.asarray(sink_cf.astype(kd.flow_np)),
+        excess=jnp.asarray(excess.astype(kd.flow_np)),
+        d=jnp.zeros((K, V), dtype=kd.label_np),
         flow_to_t=jnp.zeros((), dtype=jnp.int32),
     )
     layout = Layout(
@@ -456,10 +534,18 @@ def apply_update(state: FlowState, state0: FlowState, upd: GraphUpdate):
     K, V, E = state.cf.shape
 
     # --- edge capacity deltas, clamped into the new capacity ---
+    # deltas arrive int32; the state may be stored narrow — cast at the
+    # door (the session front-end re-validates that the updated problem
+    # still fits the narrowed ranges, so the casts cannot wrap)
     cf = state.cf.reshape(-1)
+    fdt = cf.dtype
+    d_fwd = upd.d_cap_fwd.astype(fdt)
+    d_bwd = upd.d_cap_bwd.astype(fdt)
+    d_sink_t = upd.d_sink.astype(fdt)
+    d_excess_t = upd.d_excess.astype(fdt)
     ra0, rb0 = cf[upd.arc_u], cf[upd.arc_v]
-    ra = ra0 + upd.d_cap_fwd
-    rb = rb0 + upd.d_cap_bwd
+    ra = ra0 + d_fwd
+    rb = rb0 + d_bwd
     # at most one side of a pair can go negative (ra + rb = c_f' + c_b' >= 0)
     ov_a = jnp.maximum(-ra, 0)          # flow over the new u->v capacity
     ra, rb = ra + ov_a, rb - ov_a
@@ -470,32 +556,30 @@ def apply_update(state: FlowState, state0: FlowState, upd: GraphUpdate):
 
     # clamped overflow goes back to the sender; the receiver is charged
     nv = K * V
-    returns = jnp.zeros((nv,), jnp.int32).at[upd.vtx_u].add(ov_a,
-                                                            mode="drop")
+    returns = jnp.zeros((nv,), fdt).at[upd.vtx_u].add(ov_a, mode="drop")
     returns = returns.at[upd.vtx_v].add(ov_b, mode="drop")
-    deficits = jnp.zeros((nv,), jnp.int32).at[upd.vtx_v].add(ov_a,
-                                                             mode="drop")
+    deficits = jnp.zeros((nv,), fdt).at[upd.vtx_v].add(ov_a, mode="drop")
     deficits = deficits.at[upd.vtx_u].add(ov_b, mode="drop")
 
     # --- terminal deltas ---
     sink = state.sink_cf.reshape(-1)
     s0 = sink[upd.t_vtx]
-    s1 = s0 + upd.d_sink
+    s1 = s0 + d_sink_t
     t_ret = jnp.maximum(-s1, 0)         # flow returned from the sink
     s1 = s1 + t_ret
     sink = sink.at[upd.t_vtx].add(s1 - s0, mode="drop")
-    flow_to_t = state.flow_to_t - t_ret.sum()
+    flow_to_t = state.flow_to_t - jnp.sum(t_ret, dtype=jnp.int32)
     returns = returns.at[upd.t_vtx].add(
-        t_ret + jnp.maximum(upd.d_excess, 0), mode="drop")
+        t_ret + jnp.maximum(d_excess_t, 0), mode="drop")
     deficits = deficits.at[upd.t_vtx].add(
-        jnp.maximum(-upd.d_excess, 0), mode="drop")
+        jnp.maximum(-d_excess_t, 0), mode="drop")
 
     # --- resolve deficits against excess; cancel the shortfall ---
     excess = state.excess.reshape(-1) + returns
     short = jnp.maximum(deficits - excess, 0)
     excess = jnp.maximum(excess - deficits, 0)
     sink = sink + short
-    offset = short.sum()
+    offset = jnp.sum(short, dtype=jnp.int32)
 
     grew = ((ra > ra0).any() | (rb > rb0).any() | (s1 > s0).any()
             | (short > 0).any())
@@ -505,12 +589,11 @@ def apply_update(state: FlowState, state0: FlowState, upd: GraphUpdate):
         excess=excess.reshape(K, V), flow_to_t=flow_to_t)
 
     # initial network of the updated problem (zero flow): plain deltas
-    cf0 = state0.cf.reshape(-1).at[upd.arc_u].add(upd.d_cap_fwd,
-                                                  mode="drop")
-    cf0 = cf0.at[upd.arc_v].add(upd.d_cap_bwd, mode="drop")
-    sink0 = state0.sink_cf.reshape(-1).at[upd.t_vtx].add(upd.d_sink,
+    cf0 = state0.cf.reshape(-1).at[upd.arc_u].add(d_fwd, mode="drop")
+    cf0 = cf0.at[upd.arc_v].add(d_bwd, mode="drop")
+    sink0 = state0.sink_cf.reshape(-1).at[upd.t_vtx].add(d_sink_t,
                                                          mode="drop")
-    exc0 = state0.excess.reshape(-1).at[upd.t_vtx].add(upd.d_excess,
+    exc0 = state0.excess.reshape(-1).at[upd.t_vtx].add(d_excess_t,
                                                        mode="drop")
     new_state0 = state0.replace(
         cf=cf0.reshape(K, V, E), sink_cf=sink0.reshape(K, V),
@@ -539,11 +622,21 @@ class BatchMeta:
     region_size: int          # V  (padded)
     max_degree: int           # E  (padded)
     num_cross_arcs: int       # X  (padded)
+    # storage dtypes of the bucket (all members share them — packing
+    # groups by dtype as well as shape); part of the compile-cache key
+    label_dtype: str = "int32"
+    flow_dtype: str = "int32"
+    mask_dtype: str = "int32"
 
     @property
     def bucket_shape(self) -> tuple[int, int, int, int, int]:
         return (self.num_instances, self.num_regions, self.region_size,
                 self.max_degree, self.num_cross_arcs)
+
+    @property
+    def kernel_dtypes(self) -> KernelDtypes:
+        return KernelDtypes(label=self.label_dtype, flow=self.flow_dtype,
+                            mask=self.mask_dtype)
 
 
 @jax.tree_util.register_dataclass
@@ -628,12 +721,15 @@ def _pad_to(a: np.ndarray, shape: tuple[int, ...]) -> np.ndarray:
 
 
 def pack_instances(problems, parts=None, *, num_regions: int = 4,
-                   pad_batch: bool = True) -> list[PackedBatch]:
+                   pad_batch: bool = True,
+                   dtype_policy: str = "int32") -> list[PackedBatch]:
     """Stack independent problems into shape-bucketed solve batches.
 
     Each problem is region-blocked with ``build`` (``parts[i]`` or the
     node-number fallback partitioner) and handed to ``pack_built`` — one
-    ``PackedBatch`` per power-of-two shape bucket.
+    ``PackedBatch`` per power-of-two shape bucket.  ``dtype_policy`` runs
+    the per-problem capacity/label range check of ``build``; instances
+    resolving to different storage dtypes land in different buckets.
     """
     from repro.core.partition import block_partition
 
@@ -641,7 +737,8 @@ def pack_instances(problems, parts=None, *, num_regions: int = 4,
     for i, p in enumerate(problems):
         part = parts[i] if parts is not None and parts[i] is not None \
             else block_partition(p.num_vertices, num_regions)
-        meta, state, layout = build(p, np.asarray(part))
+        meta, state, layout = build(p, np.asarray(part),
+                                    dtype_policy=dtype_policy)
         builds.append((i, meta, state, layout, state))
     return pack_built(builds, pad_batch=pad_batch)
 
@@ -664,15 +761,20 @@ def pack_built(builds, *, pad_batch: bool = True) -> list[PackedBatch]:
     """
     groups: dict = {}
     for item in builds:
-        groups.setdefault(bucket_shape_for(item[1]), []).append(item)
+        m = item[1]
+        key = bucket_shape_for(m) + (m.label_dtype, m.flow_dtype,
+                                     m.mask_dtype)
+        groups.setdefault(key, []).append(item)
 
     out = []
-    for (K, V, E, X), items in sorted(groups.items()):
+    for (K, V, E, X, label_dt, flow_dt, mask_dt), items \
+            in sorted(groups.items()):
         B = _round_pow2(len(items)) if pad_batch else len(items)
+        fdt, ldt = np.dtype(flow_dt), np.dtype(label_dt)
         shp3 = {"nbr_region": np.int32, "nbr_local": np.int32,
-                "rev_slot": np.int32, "emask": bool, "cf": np.int32}
-        shp2 = {"vmask": bool, "is_boundary": bool, "sink_cf": np.int32,
-                "excess": np.int32, "d": np.int32}
+                "rev_slot": np.int32, "emask": bool, "cf": fdt}
+        shp2 = {"vmask": bool, "is_boundary": bool, "sink_cf": fdt,
+                "excess": fdt, "d": ldt}
         cols = {k: np.zeros((B, K, V, E), dt) for k, dt in shp3.items()}
         cols.update({k: np.zeros((B, K, V), dt) for k, dt in shp2.items()})
         cross = {k: np.zeros((B, X), np.int32) for k in
@@ -729,7 +831,9 @@ def pack_built(builds, *, pad_batch: bool = True) -> list[PackedBatch]:
         )
         out.append(PackedBatch(
             meta=BatchMeta(num_instances=B, num_regions=K, region_size=V,
-                           max_degree=E, num_cross_arcs=X),
+                           max_degree=E, num_cross_arcs=X,
+                           label_dtype=label_dt, flow_dtype=flow_dt,
+                           mask_dtype=mask_dt),
             state=state,
             metas=[it[1] for it in items],
             layouts=[it[3] for it in items],
@@ -750,4 +854,5 @@ def flow_value(state: FlowState) -> jax.Array:
 
 
 def total_excess(state: FlowState) -> jax.Array:
-    return jnp.sum(jnp.where(state.vmask, state.excess, 0))
+    return jnp.sum(jnp.where(state.vmask, state.excess, 0),
+                   dtype=jnp.int32)

@@ -22,6 +22,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import dtypes as _dt
 from repro.core.graph import FlowState, GraphMeta, INF_LABEL, intra_mask
 
 _I32 = jnp.int32
@@ -52,19 +53,21 @@ def _region_relabel_one(cf, sink_cf, ghost_d, *, nbr_local, intra, emask,
                         vmask, d_inf, hop_cost: int):
     """Alg. 3 on one region network (vmapped over regions by the caller)."""
     V, E = cf.shape
-    d_inf = jnp.asarray(d_inf, _I32)
+    ldt = ghost_d.dtype
+    inf = jnp.asarray(_dt.inf_label_for(ldt.name), ldt)
+    d_inf = jnp.asarray(d_inf).astype(ldt)
     cross = emask & ~intra
     seed_ok = cross & (cf > 0) & (ghost_d < d_inf)
-    base = jnp.where(seed_ok, ghost_d + 1, INF_LABEL).min(axis=1)
-    sink_lab = _I32(0) if hop_cost == 0 else _I32(1)
+    base = jnp.where(seed_ok, ghost_d + 1, inf).min(axis=1)
+    sink_lab = ldt.type(0) if hop_cost == 0 else ldt.type(1)
     base = jnp.where(sink_cf > 0, jnp.minimum(base, sink_lab), base)
-    base = jnp.where(vmask, base, INF_LABEL)
+    base = jnp.where(vmask, base, inf)
 
     def body(carry):
         lab, _ = carry
-        nlab = jnp.where(intra & emask & (cf > 0), lab[nbr_local], INF_LABEL)
+        nlab = jnp.where(intra & emask & (cf > 0), lab[nbr_local], inf)
         relaxed = jnp.minimum(base, nlab.min(axis=1) + hop_cost)
-        relaxed = jnp.minimum(lab, jnp.where(vmask, relaxed, INF_LABEL))
+        relaxed = jnp.minimum(lab, jnp.where(vmask, relaxed, inf))
         return relaxed, (relaxed != lab).any()
 
     lab, _ = jax.lax.while_loop(lambda c: c[1], body, (base, jnp.asarray(True)))
@@ -144,7 +147,7 @@ def gap_new_labels(d, vmask, is_boundary, d_inf, *, cap: int, ard: bool):
     max_lab = jnp.max(jnp.where(member, d, 0))
     is_gap = (hist == 0) & (idx >= 1) & (idx <= jnp.minimum(max_lab, cap - 1))
     g = jnp.min(jnp.where(is_gap, idx, INF_LABEL))
-    return jnp.where(vmask & (d > g) & (d < d_inf), d_inf, d).astype(_I32)
+    return jnp.where(vmask & (d > g) & (d < d_inf), d_inf, d).astype(d.dtype)
 
 
 def global_gap(meta: GraphMeta, state: FlowState, *, ard: bool) -> FlowState:
@@ -184,9 +187,12 @@ def region_gap_prd(meta: GraphMeta, state: FlowState, region: jax.Array) -> Flow
     ghost_d = gather_ghost_labels(state)
     cross = state.emask & ~intra_mask(state)
     r_cross = cross & in_r[:, :, None]
-    bnd = jnp.where(r_cross & (ghost_d > g), ghost_d, INF_LABEL)
+    # heuristic bookkeeping runs int32 (outside the kernels); the result is
+    # cast back to the state's label dtype, which d_inf fits by the range
+    # check whenever labels are stored narrow
+    bnd = jnp.where(r_cross & (ghost_d > g), ghost_d.astype(_I32), INF_LABEL)
     d_next = jnp.minimum(jnp.min(bnd), d_inf)
     raise_mask = member & (state.d > g) & (state.d < d_next)
     new_d = jnp.where(raise_mask,
                       jnp.minimum(d_next + 1, d_inf), state.d)
-    return state.replace(d=new_d.astype(_I32))
+    return state.replace(d=new_d.astype(state.d.dtype))

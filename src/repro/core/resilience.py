@@ -147,7 +147,8 @@ def run_with_degradation(run: Callable, cfg, notes: list[str]):
             cfg = nxt
 
 
-def vmem_fallback_note(cfg, region_size: int, max_degree: int) -> str | None:
+def vmem_fallback_note(cfg, region_size: int, max_degree: int,
+                       dtypes=None) -> str | None:
     """Surface the engine's build-time static VMEM fallback.
 
     The fused pallas engine silently falls back to the blocked two-phase
@@ -159,7 +160,7 @@ def vmem_fallback_note(cfg, region_size: int, max_degree: int) -> str | None:
     if cfg.engine_backend != "pallas" or cfg.engine_chunk_iters is None:
         return None
     from repro.kernels import push_relabel as _pr
-    if _pr.fused_region_fits_vmem(region_size, max_degree):
+    if _pr.fused_region_fits_vmem(region_size, max_degree, dtypes=dtypes):
         return None
     return (f"pallas-fused: region state (V={region_size}, E={max_degree}) "
             f"exceeds the VMEM budget; engine uses the blocked two-phase "
@@ -501,9 +502,10 @@ class FaultPlan:
         # trapped there goes inactive, the solve stops early with a
         # too-small flow, and check=True must refuse to certify it
         import jax.numpy as jnp
-        from repro.core.graph import INF_LABEL
-        d = jnp.where(state.is_boundary & state.vmask,
-                      jnp.int32(INF_LABEL), state.d)
+
+        from repro.core import dtypes as _dt
+        inf = state.d.dtype.type(_dt.inf_label_for(state.d.dtype.name))
+        d = jnp.where(state.is_boundary & state.vmask, inf, state.d)
         return state.replace(d=d)
 
 

@@ -52,8 +52,10 @@ from pathlib import Path
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import autotune as _autotune
 from repro.core import batch as _batch
 from repro.core import distributed as _distributed
+from repro.core import dtypes as _dt
 from repro.core import executor as _executor
 from repro.core import graph as _graph
 from repro.core import invariants as _inv
@@ -99,6 +101,20 @@ class SolverOptions:
         distances, so kept labels stay valid); ``"keep"``/``True`` always
         keep (caller asserts decrease-only updates); ``"reset"``/
         ``False`` re-initialize to the cold ``Init`` labels.
+    dtype_policy — kernel storage-dtype policy (``dtypes.DTYPE_POLICIES``):
+        ``"int32"`` (default) keeps the wide baseline; ``"auto"`` narrows
+        labels/residuals to int16 (masks to int8) whenever this problem's
+        range bounds allow, falling back to int32 per family; ``"narrow"``
+        forces narrowing and makes a failed bound a typed
+        ``ProblemValidationError`` at ``prepare`` time.  Narrowed handles
+        re-check the flow bound on every ``update`` (capacity growth can
+        outgrow int16; topology — hence the label bound — cannot change).
+    autotune — resolve ``engine_chunk_iters`` (and fused-vs-blocked
+        dispatch) per ``(bucket dims, backend, dtypes)`` key through the
+        VMEM-budget autotuner (``core.autotune``) instead of the static
+        default.  An explicitly pinned ``engine_chunk_iters`` wins over
+        the tuner; tuned decisions persist in a JSON cache so repeat keys
+        cost zero search and zero retrace.
     """
 
     # --- sweep/engine knobs (mirror sweep.SweepConfig) ---
@@ -118,12 +134,18 @@ class SolverOptions:
     num_regions: int = 4
     check: bool = True
     warm_labels: bool | str = "auto"
+    dtype_policy: str = "int32"
+    autotune: bool = False
     # --- sharded-route knobs ---
     exchange: str = "full"
 
     def __post_init__(self):
         assert self.warm_labels in (True, False, "auto", "keep", "reset")
         assert self.exchange in ("full", "boundary")
+        if self.dtype_policy not in _dt.DTYPE_POLICIES:
+            raise ValueError(
+                f"unknown dtype_policy {self.dtype_policy!r}; expected one "
+                f"of {_dt.DTYPE_POLICIES}")
         self.sweep_config()     # delegate knob validation to SweepConfig
 
     def sweep_config(self) -> _sweep.SweepConfig:
@@ -213,6 +235,50 @@ def _pad_i32(a: np.ndarray, size: int) -> jnp.ndarray:
     return jnp.asarray(out)
 
 
+def _widen_state(st: FlowState) -> FlowState:
+    """Cast a (possibly narrowed) state up to the sharded driver's int32.
+
+    Label sentinels translate by a monotone offset — the narrow infinity
+    class ``[2**14, ...)`` maps onto the wide class ``[2**30, ...)``
+    preserving relative order — so the widened state is exactly what a
+    wide build of the same problem would hold, and the sharded solve is
+    bit-identical to the wide route.
+    """
+    if st.cf.dtype == jnp.int32 and st.d.dtype == jnp.int32:
+        return st
+    d = st.d.astype(jnp.int32)
+    if st.d.dtype != jnp.int32:
+        d = jnp.where(d >= _dt.NARROW_INF_LABEL,
+                      d - _dt.NARROW_INF_LABEL + _dt.INF_LABEL_WIDE, d)
+    return st.replace(cf=st.cf.astype(jnp.int32),
+                      sink_cf=st.sink_cf.astype(jnp.int32),
+                      excess=st.excess.astype(jnp.int32), d=d)
+
+
+def _narrow_state(st: FlowState, meta: GraphMeta) -> FlowState:
+    """Cast a sharded-route int32 result back to the handle's storage
+    dtypes (inverse of ``_widen_state``; no-op for wide handles).
+
+    Finite labels are all below the narrow limit by the prepare-time
+    bound; anything in the wide infinity class maps back by the same
+    offset, and any other over-limit value (all ``>= d_inf``, hence
+    semantically infinite) clamps to the narrow sentinel.
+    """
+    kd = meta.kernel_dtypes
+    if kd.flow == "int32" and kd.label == "int32":
+        return st
+    fdt = jnp.dtype(kd.flow_np)
+    d = st.d
+    if kd.label != "int32":
+        d = jnp.where(
+            d >= _dt.INF_LABEL_WIDE,
+            d - _dt.INF_LABEL_WIDE + _dt.NARROW_INF_LABEL,
+            jnp.minimum(d, _dt.NARROW_INF_LABEL)).astype(
+                jnp.dtype(kd.label_np))
+    return st.replace(cf=st.cf.astype(fdt), sink_cf=st.sink_cf.astype(fdt),
+                      excess=st.excess.astype(fdt), d=d)
+
+
 class ProblemHandle:
     """A prepared problem inside a ``Solver`` session.
 
@@ -295,6 +361,10 @@ class ProblemHandle:
         else:
             assert (new_fwd >= 0).all() and (new_bwd >= 0).all()
             assert (new_exc >= 0).all() and (new_snk >= 0).all()
+        # narrowed storage is sized by the flow-mass bound at prepare time;
+        # an update that grows total capacity past it would wrap int16
+        # residuals silently — always rejected, even with check=False
+        _graph.validate_update_dtypes(self.meta, newp)
 
         d_fwd = new_fwd.astype(np.int64) - p.cap_fwd
         d_bwd = new_bwd.astype(np.int64) - p.cap_bwd
@@ -398,6 +468,8 @@ class ProblemHandle:
         """
         opts = self.solver.options
         cfg = opts.sweep_config()
+        if opts.autotune:
+            cfg = _autotune.tuned_sweep_config(cfg, self.meta)
         salt = self._layout_salt()
         if isinstance(checkpoint, (str, Path)):
             checkpoint = _res.CheckpointPolicy(directory=checkpoint)
@@ -418,11 +490,18 @@ class ProblemHandle:
 
         def run(c):
             if mesh is not None:
+                # the sharded driver's state specs are pinned to int32
+                # (distributed.py builds abstract int32 avals for the SPMD
+                # programs), so a narrowed handle widens at entry and
+                # narrows back at exit.  The sentinel classes map 1:1
+                # (monotone offset), so results are bit-exact either way.
+                st_sh = _widen_state(st_in)
                 st, sweeps, syncs = _distributed.solve_sharded(
-                    self.meta, st_in, mesh, c, axes=tuple(axes),
+                    self.meta, st_sh, mesh, c, axes=tuple(axes),
                     exchange=opts.exchange, return_stats=True,
                     checkpoint=checkpoint, resume_from=ckpt_obj, salt=salt,
                     on_sweep=on_sweep)
+                st = _narrow_state(st, self.meta)
                 _pb, msg_bytes = _sweep._page_and_msg_bytes(self.meta, st)
                 stats = _sweep.SweepStats(
                     sweeps=sweeps, engine_iters=None, engine_launches=None,
@@ -501,16 +580,19 @@ class Solver:
         into ``options.num_regions`` regions (the paper's fallback
         partitioner, as before).
         """
-        if self.options.check:
+        if self.options.check or self.options.dtype_policy == "narrow":
             # fail fast on malformed input (negative capacities, int32
             # overflow risk vs INF_CAP) before any device work; serving
-            # paths opt out with SolverOptions.check=False
-            _graph.validate_problem(problem, context="problem")
+            # paths opt out with SolverOptions.check=False — except the
+            # forced-narrow bound check, which must never be silent
+            _graph.validate_problem(problem, context="problem",
+                                    dtype_policy=self.options.dtype_policy)
         if part is None:
             part = _partition.block_partition(problem.num_vertices,
                                               self.options.num_regions)
         part = np.asarray(part)
-        meta, state, layout = _graph.build(problem, part)
+        meta, state, layout = _graph.build(
+            problem, part, dtype_policy=self.options.dtype_policy)
         return ProblemHandle(self, problem, part, meta, state, layout)
 
     def solve(self, problem: Problem, part: np.ndarray | None = None, *,
@@ -569,8 +651,11 @@ class Solver:
         results: list[MincutResult | None] = [None] * len(handles)
         self.last_batch_stats = []
         for packed in packs:
+            cfg_b = cfg
+            if self.options.autotune:
+                cfg_b = _autotune.tuned_sweep_config(cfg, packed.meta)
             bstate, bstats = _batch.solve_batch(
-                packed, cfg, checkpoint=checkpoint, resume_from=resume_from,
+                packed, cfg_b, checkpoint=checkpoint, resume_from=resume_from,
                 salt=salt)
             self._note(before)
             before = self._trace_total()

@@ -367,10 +367,18 @@ def sweep_bound(meta: GraphMeta, cfg: SweepConfig) -> int:
 
 def _page_and_msg_bytes(meta: GraphMeta, state: FlowState):
     # bytes of one region page (cf + labels + excess + topology) — paper's
-    # streaming unit; boundary message = 4B flow + 4B label per cross arc.
-    page_bytes = (state.cf.itemsize * state.cf[0].size * 4
-                  + 4 * state.excess[0].size * 4)
-    return page_bytes, 8 * meta.num_cross_arcs
+    # streaming unit; boundary message = flow + label per cross arc.  Costed
+    # per value family at the state's storage dtypes: the [V,E] page is one
+    # flow array (cf), two int32 topology arrays (nbr/rev) and one mask
+    # (emask); the [V] vectors are two flow (sink_cf/excess), one label (d)
+    # and one mask (vmask).  All-int32 this is the historical
+    # ``16*V*E + 16*V`` and 8 bytes/cross-arc exactly.
+    fb = state.cf.dtype.itemsize
+    lb = state.d.dtype.itemsize
+    mb = 1 if (fb < 4 or lb < 4) else 4
+    page_bytes = ((fb + 2 * 4 + mb) * state.cf[0].size
+                  + (2 * fb + lb + mb) * state.excess[0].size)
+    return page_bytes, (fb + lb) * meta.num_cross_arcs
 
 
 def _device_stats(host, syncs, max_sweeps, R, page_bytes, msg_bytes,
@@ -568,7 +576,8 @@ def solve(meta: GraphMeta, state: FlowState, cfg: SweepConfig | None = None,
         state, stats = _solve_host(
             meta, state, cfg, ex, on_sweep=on_sweep, fp=fp,
             checkpoint=checkpoint, ckpt=ckpt)
-    note = _res.vmem_fallback_note(cfg, state.cf.shape[1], state.cf.shape[2])
+    note = _res.vmem_fallback_note(cfg, state.cf.shape[1], state.cf.shape[2],
+                                   dtypes=meta.kernel_dtypes)
     if note is not None and note not in stats.degraded:
         stats.degraded.append(note)
     return state, stats
@@ -675,9 +684,10 @@ def cut_value(meta: GraphMeta, state0: FlowState, sink_side: jax.Array) -> jax.A
          + sum of cap(u,v) over arcs u in C, v in C̄.
     """
     src_side = ~sink_side & state0.vmask
-    e_term = jnp.sum(jnp.where(sink_side & state0.vmask, state0.excess, 0))
-    t_term = jnp.sum(jnp.where(src_side, state0.sink_cf, 0))
+    e_term = jnp.sum(jnp.where(sink_side & state0.vmask, state0.excess, 0),
+                     dtype=_I32)
+    t_term = jnp.sum(jnp.where(src_side, state0.sink_cf, 0), dtype=_I32)
     nbr_sink = sink_side[state0.nbr_region, state0.nbr_local]
     arc_cut = (src_side[:, :, None] & nbr_sink & state0.emask)
-    c_term = jnp.sum(jnp.where(arc_cut, state0.cf, 0))
+    c_term = jnp.sum(jnp.where(arc_cut, state0.cf, 0), dtype=_I32)
     return e_term + t_term + c_term

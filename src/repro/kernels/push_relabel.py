@@ -68,10 +68,21 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
+
+from repro.core import dtypes as _dt
 
 INF_LABEL = 2**30
 DEFAULT_BLOCK_V = 256
+
+
+def _inf_for(dtype) -> int:
+    """Label-infinity sentinel for the label dtype in play: 2**30 for
+    int32, 2**14 for int16 (``repro.core.dtypes``).  Every real label is
+    strictly below either sentinel, so comparisons/min/max order
+    identically — the narrow path stays bit-exact."""
+    return _dt.inf_label_for(dtype)
 
 
 def _pr_kernel(lab_ref, cf_ref, sink_cf_ref, excess_ref, nbr_ref, intra_ref,
@@ -94,11 +105,12 @@ def _pr_kernel(lab_ref, cf_ref, sink_cf_ref, excess_ref, nbr_ref, intra_ref,
     cross_lab = cross_lab_ref[...]
     excess = excess_ref[...]
     sink_cf = sink_cf_ref[...]
-    d_inf = d_inf_ref[0]
+    inf = _inf_for(lab_full.dtype)
+    d_inf = d_inf_ref[0].astype(lab_full.dtype)  # ceiling fits the dtype
 
     lab_rows = lab_full[nbr]                     # gather [BV, E]
     nlab = jnp.where(intra, lab_rows, cross_lab)
-    nlab = jnp.where(pushable, nlab, INF_LABEL)
+    nlab = jnp.where(pushable, nlab, inf)
 
     bv = cf.shape[0]
     row0 = pl.program_id(0) * bv
@@ -113,14 +125,16 @@ def _pr_kernel(lab_ref, cf_ref, sink_cf_ref, excess_ref, nbr_ref, intra_ref,
         arc_cap = jnp.where(adm, cf, 0)
         caps = jnp.concatenate([sink_cap[:, None], arc_cap], axis=1)
         avail = jnp.where(act, excess, 0)
-        cum_excl = jnp.cumsum(caps, axis=1) - caps
+        # cumsum/sum must not promote (jnp defaults widen sub-int32 ints);
+        # the narrow range check bounds every partial sum
+        cum_excl = jnp.cumsum(caps, axis=1, dtype=caps.dtype) - caps
         delta_ref[...] = jnp.clip(avail[:, None] - cum_excl, 0, caps)
     else:
         delta_ref[...] = jnp.zeros(delta_ref.shape, delta_ref.dtype)
 
     if mode in ("both", "relabel"):
         no_adm = act & ~adm.any(axis=1) & ~sink_adm
-        cand = jnp.where(cf > 0, nlab + 1, INF_LABEL).min(axis=1)
+        cand = jnp.where(cf > 0, nlab + 1, inf).min(axis=1)
         cand = jnp.where(sink_cf > 0, jnp.minimum(cand, 1), cand)
         new_lab_ref[...] = jnp.where(
             no_adm, jnp.maximum(jnp.minimum(cand, d_inf), my_lab), my_lab)
@@ -135,9 +149,10 @@ def push_relabel_phase(lab, cf, sink_cf, excess, nbr, intra, pushable,
     """Pallas-tiled push/relabel compute phase.
 
     Returns (delta [V, 1+E] with the sink in column 0, new_lab [V]).
-    Masks are int32 (0/1) for portable Pallas lowering.  ``mode`` statically
-    prunes the unused output's compute ("push": zero new_lab changes,
-    "relabel": zero deltas); "both" computes everything.
+    Masks are 0/1 integers (int32, or int8 under a narrow dtype policy) for
+    portable Pallas lowering; value dtypes follow the inputs.  ``mode``
+    statically prunes the unused output's compute ("push": zero new_lab
+    changes, "relabel": zero deltas); "both" computes everything.
     """
     assert mode in ("both", "push", "relabel"), mode
     V, E = cf.shape
@@ -146,8 +161,8 @@ def push_relabel_phase(lab, cf, sink_cf, excess, nbr, intra, pushable,
         pad = bv - V % bv
         padv = lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
         out_d, out_l = push_relabel_phase(
-            jnp.pad(lab, (0, pad), constant_values=INF_LABEL), padv(cf),
-            padv(sink_cf), padv(excess), padv(nbr), padv(intra),
+            jnp.pad(lab, (0, pad), constant_values=_inf_for(lab.dtype)),
+            padv(cf), padv(sink_cf), padv(excess), padv(nbr), padv(intra),
             padv(pushable), padv(cross_lab), d_inf, block_v=bv,
             interpret=interpret, mode=mode)
         return out_d[:V], out_l[:V]
@@ -172,8 +187,8 @@ def push_relabel_phase(lab, cf, sink_cf, excess, nbr, intra, pushable,
             pl.BlockSpec((bv,), lambda i: (i,)),           # new_lab
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((V, 1 + E), jnp.int32),
-            jax.ShapeDtypeStruct((V,), jnp.int32),
+            jax.ShapeDtypeStruct((V, 1 + E), cf.dtype),
+            jax.ShapeDtypeStruct((V,), lab.dtype),
         ],
         interpret=interpret,
     )
@@ -186,23 +201,41 @@ def push_relabel_phase(lab, cf, sink_cf, excess, nbr, intra, pushable,
 # Region-resident fused discharge: k full iterations per kernel launch.
 # --------------------------------------------------------------------------
 
-# VMEM working set of one fused iteration, in int32 words per vertex row:
-# cf, nbr, rev_slot, intra, pushable, cross_lab, out_push, d_arc/d_intra are
-# [V, E]; caps/delta are [V, 1+E]; plus a handful of [V] vectors.  The
-# budget leaves headroom under the ~16 MiB/core of TPU VMEM for double
-# buffering and the scalar plumbing.
+# VMEM working set of one fused iteration, per value family.  [V, E]
+# arrays: cf, out_push, d_arc, d_intra carry flow values; nbr, rev_slot
+# are int32 indices; intra, pushable are masks; cross_lab carries labels.
+# caps/delta are flow-valued [V, 1+E].  [V] vectors: sink_cf, excess,
+# avail carry flow; lab, new_lab carry labels; vmask is a mask; plus two
+# int32 scalar/misc words per row.  The budget leaves headroom under the
+# ~16 MiB/core of TPU VMEM for double buffering and the scalar plumbing.
 FUSED_VMEM_BUDGET_BYTES = 12 * 2**20
 
 
-def fused_region_vmem_bytes(V: int, E: int) -> int:
-    """Estimated VMEM bytes of the region-resident fused kernel's state."""
-    return 4 * (9 * V * E + 2 * V * (E + 1) + 8 * V)
+def fused_region_vmem_bytes(V: int, E: int,
+                            dtypes: _dt.KernelDtypes | None = None) -> int:
+    """Estimated VMEM bytes of the region-resident fused kernel's state.
+
+    Dtype-aware: each value family is costed at its own itemsize (the old
+    formula hard-coded 4-byte words for everything, so it over-estimated
+    the narrow configurations and would have kept them on the blocked
+    path).  With all-int32 dtypes this is exactly the historical
+    ``4 * (9*V*E + 2*V*(E+1) + 8*V)``.
+    """
+    kd = _dt.WIDE if dtypes is None else dtypes
+    fb = np.dtype(kd.flow).itemsize
+    lb = np.dtype(kd.label).itemsize
+    mb = np.dtype(kd.mask).itemsize
+    return (fb * (4 * V * E + 2 * V * (E + 1) + 3 * V)   # flow values
+            + 4 * (2 * V * E + 2 * V)                    # int32 indices/misc
+            + mb * (2 * V * E + V)                       # masks
+            + lb * (V * E + 2 * V))                      # labels
 
 
 def fused_region_fits_vmem(V: int, E: int,
-                           budget_bytes: int | None = None) -> bool:
+                           budget_bytes: int | None = None,
+                           dtypes: _dt.KernelDtypes | None = None) -> bool:
     budget = FUSED_VMEM_BUDGET_BYTES if budget_bytes is None else budget_bytes
-    return fused_region_vmem_bytes(V, E) <= budget
+    return fused_region_vmem_bytes(V, E, dtypes) <= budget
 
 
 def make_fused_iteration(*, nbr, rev_slot, intra, pushable, cross_lab, vmask,
@@ -223,12 +256,16 @@ def make_fused_iteration(*, nbr, rev_slot, intra, pushable, cross_lab, vmask,
     flat_n = V * E
     flat_idx = (nbr * E + rev_slot).reshape(flat_n)
     recv_idx = nbr.reshape(flat_n)
+    inf = _inf_for(cross_lab.dtype)
 
     def iteration(cf, sink_cf, excess, lab):
+        # label ceiling arrives int32 (scalar plumbing); every real label
+        # fits the narrow dtype by the build-time range check
+        dinf = jnp.asarray(d_inf).astype(lab.dtype)
         # ---- push compute (labels frozen) ----
-        act = (excess > 0) & (lab < d_inf) & vmask
+        act = (excess > 0) & (lab < dinf) & vmask
         nlab = jnp.where(intra, lab[nbr], cross_lab)
-        nlab = jnp.where(pushable, nlab, INF_LABEL)
+        nlab = jnp.where(pushable, nlab, inf)
         adm = (cf > 0) & (lab[:, None] == nlab + 1) & act[:, None]
         sink = sink_cf if sink_open else jnp.zeros_like(sink_cf)
         sink_adm = (sink > 0) & (lab == 1) & act
@@ -236,32 +273,35 @@ def make_fused_iteration(*, nbr, rev_slot, intra, pushable, cross_lab, vmask,
         arc_cap = jnp.where(adm, cf, 0)
         caps = jnp.concatenate([sink_cap[:, None], arc_cap], axis=1)
         avail = jnp.where(act, excess, 0)
-        cum_excl = jnp.cumsum(caps, axis=1) - caps
+        cum_excl = jnp.cumsum(caps, axis=1, dtype=caps.dtype) - caps
         delta = jnp.clip(avail[:, None] - cum_excl, 0, caps)
         d_sink = delta[:, 0]
         d_arc = delta[:, 1:]
         # ---- scatter application (intra reverse arcs + receiver excess) ----
-        excess = excess - d_sink - d_arc.sum(axis=1)
+        excess = excess - d_sink - jnp.sum(d_arc, axis=1, dtype=d_arc.dtype)
         sink_cf = sink_cf - d_sink
         cf = cf - d_arc
         d_intra = jnp.where(intra, d_arc, 0)
         cf = (cf.reshape(flat_n).at[flat_idx]
               .add(d_intra.reshape(flat_n), mode="drop").reshape(V, E))
-        excess = excess + jnp.zeros((V,), jnp.int32).at[recv_idx].add(
+        excess = excess + jnp.zeros((V,), excess.dtype).at[recv_idx].add(
             d_intra.reshape(flat_n), mode="drop")
         d_cross = d_arc - d_intra
         # ---- relabel (on the post-push residual graph) ----
-        act2 = (excess > 0) & (lab < d_inf) & vmask
+        act2 = (excess > 0) & (lab < dinf) & vmask
         adm2 = (cf > 0) & (lab[:, None] == nlab + 1) & act2[:, None]
         sink2 = sink_cf if sink_open else jnp.zeros_like(sink_cf)
         sink_adm2 = (sink2 > 0) & (lab == 1) & act2
         no_adm = act2 & ~adm2.any(axis=1) & ~sink_adm2
-        cand = jnp.where(cf > 0, nlab + 1, INF_LABEL).min(axis=1)
+        cand = jnp.where(cf > 0, nlab + 1, inf).min(axis=1)
         cand = jnp.where(sink2 > 0, jnp.minimum(cand, 1), cand)
         new_lab = jnp.where(
-            no_adm, jnp.maximum(jnp.minimum(cand, d_inf), lab), lab)
-        relabel_inc = jnp.sum(jnp.where(vmask, new_lab - lab, 0))
-        return cf, sink_cf, excess, new_lab, d_cross, d_sink.sum(), relabel_inc
+            no_adm, jnp.maximum(jnp.minimum(cand, dinf), lab), lab)
+        # accumulators cross iterations and regions: always int32
+        relabel_inc = jnp.sum(jnp.where(vmask, new_lab - lab, 0),
+                              dtype=jnp.int32)
+        return (cf, sink_cf, excess, new_lab, d_cross,
+                jnp.sum(d_sink, dtype=jnp.int32), relabel_inc)
 
     return iteration
 
@@ -279,6 +319,7 @@ def _fused_region_loop(lab, cf, sink_cf, excess, nbr, rev_slot, intra,
     """
     V, E = cf.shape
     vmask = vmask != 0
+    d_inf = jnp.asarray(d_inf).astype(lab.dtype)
     iteration = make_fused_iteration(
         nbr=nbr, rev_slot=rev_slot, intra=intra != 0,
         pushable=pushable != 0, cross_lab=cross_lab,
@@ -296,7 +337,7 @@ def _fused_region_loop(lab, cf, sink_cf, excess, nbr, rev_slot, intra,
         return (it < limit) & ((excess > 0) & (lab < d_inf) & vmask).any()
 
     z = jnp.zeros((), jnp.int32)
-    init = (cf, sink_cf, excess, lab, jnp.zeros((V, E), jnp.int32), z, z, z)
+    init = (cf, sink_cf, excess, lab, jnp.zeros((V, E), cf.dtype), z, z, z)
     return jax.lax.while_loop(cond, body, init)
 
 
@@ -355,10 +396,12 @@ def fused_engine_run(lab, cf, sink_cf, excess, nbr, rev_slot, intra, pushable,
     return tuple(o[0] for o in outs)
 
 
-@functools.partial(jax.jit, static_argnames=("sink_open", "interpret"))
+@functools.partial(jax.jit, static_argnames=("sink_open", "interpret",
+                                             "double_buffer"))
 def fused_engine_run_batched(lab, cf, sink_cf, excess, nbr, rev_slot, intra,
                              pushable, cross_lab, vmask, d_inf, iter_limit, *,
-                             sink_open: bool = True, interpret: bool = True):
+                             sink_open: bool = True, interpret: bool = True,
+                             double_buffer: bool | None = None):
     """All regions of a sweep — or of a solve batch — in ONE kernel launch.
 
     The grid-over-regions variant of ``fused_engine_run``: with
@@ -375,6 +418,13 @@ def fused_engine_run_batched(lab, cf, sink_cf, excess, nbr, rev_slot, intra,
     calls; what changes is the dispatch count: one launch instead of K
     (resp. B*K).
 
+    ``double_buffer`` selects the DMA-streamed variant on real TPUs
+    (regions staged HBM->VMEM one at a time with region k+1's copy in
+    flight while region k computes — ``None`` auto-selects it whenever
+    ``dma_overlap_supported()``); the grid form is the interpret-mode /
+    non-TPU fallback.  Both variants are bit-identical and count as one
+    launch.
+
     Returns ``(cf, sink_cf, excess, lab, out_push, sink_pushed [lead],
     relabel_sum [lead], iters [lead])`` where ``lead`` = ``(K,)`` or
     ``(B, K)``.
@@ -387,6 +437,12 @@ def fused_engine_run_batched(lab, cf, sink_cf, excess, nbr, rev_slot, intra,
         [jnp.broadcast_to(jnp.asarray(d_inf, jnp.int32), lead),
          jnp.broadcast_to(jnp.asarray(iter_limit, jnp.int32), lead)],
         axis=-1)                                           # [*lead, 2]
+    args = (lab, cf, sink_cf, excess, nbr, rev_slot, intra, pushable,
+            cross_lab, vmask)
+    if double_buffer is None:
+        double_buffer = dma_overlap_supported() and not interpret
+    if double_buffer and nlead == 1:
+        return _fused_streamed_call(args, scal, sink_open=sink_open)
     blk = lambda *tail: pl.BlockSpec(
         (1,) * nlead + tail, lambda *ids: ids + (0,) * len(tail))
     vec = lambda: blk(V)
@@ -400,25 +456,156 @@ def fused_engine_run_batched(lab, cf, sink_cf, excess, nbr, rev_slot, intra,
                   mat(E), mat(E), vec(), blk(2)],
         out_specs=[mat(E), vec(), vec(), vec(), mat(E), one(), one(), one()],
         out_shape=[
-            jax.ShapeDtypeStruct(lead + (V, E), jnp.int32),   # cf
-            jax.ShapeDtypeStruct(lead + (V,), jnp.int32),     # sink_cf
-            jax.ShapeDtypeStruct(lead + (V,), jnp.int32),     # excess
-            jax.ShapeDtypeStruct(lead + (V,), jnp.int32),     # lab
-            jax.ShapeDtypeStruct(lead + (V, E), jnp.int32),   # out_push
+            jax.ShapeDtypeStruct(lead + (V, E), cf.dtype),    # cf
+            jax.ShapeDtypeStruct(lead + (V,), sink_cf.dtype),  # sink_cf
+            jax.ShapeDtypeStruct(lead + (V,), excess.dtype),  # excess
+            jax.ShapeDtypeStruct(lead + (V,), lab.dtype),     # lab
+            jax.ShapeDtypeStruct(lead + (V, E), cf.dtype),    # out_push
             jax.ShapeDtypeStruct(lead, jnp.int32),            # sink_pushed
             jax.ShapeDtypeStruct(lead, jnp.int32),            # relabel_sum
             jax.ShapeDtypeStruct(lead, jnp.int32),            # iters
         ],
         interpret=interpret,
-    )(lab, cf, sink_cf, excess, nbr, rev_slot, intra, pushable, cross_lab,
-      vmask, scal)
+    )(*args, scal)
     return outs
+
+
+# --------------------------------------------------------------------------
+# DMA-streamed fused discharge: double-buffered region staging (TPU only).
+# --------------------------------------------------------------------------
+
+def dma_overlap_supported() -> bool:
+    """True when the DMA-streamed (double-buffered) fused variant can run:
+    manual ``pltpu.make_async_copy`` pipelines need a real TPU backend —
+    plain interpret mode executes the grid variant instead (bit-identical,
+    serial region staging)."""
+    return jax.default_backend() == "tpu"
+
+
+def _fused_kernel_streamed(lab_hbm, cf_hbm, sink_hbm, exc_hbm, nbr_hbm,
+                           rev_hbm, intra_hbm, push_hbm, clab_hbm, vmask_hbm,
+                           scal_smem, cf_out, sink_out, exc_out, lab_out,
+                           op_out, sinkp_out, rls_out, it_out, *,
+                           sink_open: bool, num_regions: int):
+    """Single-program streamed form of the grid kernel (pallas guide
+    "Double Buffering"): inputs stay in HBM/ANY; region k's ten blocks are
+    DMA'd into one of two VMEM slots while region k-1 computes, and each
+    region's results are DMA'd back out while the next region runs.  The
+    compute body is the same ``_fused_region_loop`` as the grid variant,
+    so results are bit-identical; what changes is that the K-region launch
+    no longer serializes loads with compute — the kernel-level
+    prerequisite for streaming regions that don't fit VMEM together.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    K = num_regions
+    ins = (cf_hbm, lab_hbm, sink_hbm, exc_hbm, nbr_hbm, rev_hbm, intra_hbm,
+           push_hbm, clab_hbm, vmask_hbm)
+
+    def scoped(in_s, out_s, in_sems, out_sems):
+        def in_dmas(slot, k):
+            return [pltpu.make_async_copy(src.at[k], dst.at[slot],
+                                          in_sems.at[slot, i])
+                    for i, (src, dst) in enumerate(zip(ins, in_s))]
+
+        outs_hbm = (cf_out, sink_out, exc_out, lab_out, op_out)
+
+        def out_dmas(slot, k):
+            return [pltpu.make_async_copy(src.at[slot], dst.at[k],
+                                          out_sems.at[slot, i])
+                    for i, (src, dst) in enumerate(zip(out_s, outs_hbm))]
+
+        for dma in in_dmas(0, 0):
+            dma.start()
+
+        def body(k, _):
+            slot = k % 2
+
+            @pl.when(k + 1 < K)
+            def _prefetch():            # stage region k+1 while k computes
+                for dma in in_dmas((k + 1) % 2, k + 1):
+                    dma.start()
+
+            for dma in in_dmas(slot, k):
+                dma.wait()
+
+            @pl.when(k >= 2)
+            def _drain():               # slot's previous writeback done?
+                for dma in out_dmas(slot, k - 2):
+                    dma.wait()
+
+            cf_s, lab_s, sink_s, exc_s, nbr_s, rev_s, intra_s, push_s, \
+                clab_s, vm_s = in_s
+            cf, sink_cf, excess, lab, out_push, sinkp, rls, it = \
+                _fused_region_loop(
+                    lab_s[slot], cf_s[slot], sink_s[slot], exc_s[slot],
+                    nbr_s[slot], rev_s[slot], intra_s[slot], push_s[slot],
+                    clab_s[slot], vm_s[slot], scal_smem[k, 0],
+                    scal_smem[k, 1], sink_open=sink_open)
+            cfo_s, sino_s, exco_s, labo_s, opo_s = out_s
+            cfo_s[slot] = cf
+            sino_s[slot] = sink_cf
+            exco_s[slot] = excess
+            labo_s[slot] = lab
+            opo_s[slot] = out_push
+            sinkp_out[k] = sinkp        # scalar accumulators live in SMEM
+            rls_out[k] = rls
+            it_out[k] = it
+            for dma in out_dmas(slot, k):
+                dma.start()
+            return 0
+
+        jax.lax.fori_loop(0, K, body, 0)
+
+        @pl.when(K >= 2)
+        def _():
+            for dma in out_dmas((K - 2) % 2, K - 2):
+                dma.wait()
+        for dma in out_dmas((K - 1) % 2, K - 1):
+            dma.wait()
+
+    V, E = cf_hbm.shape[-2:]
+    dbl = lambda ref, *tail: pltpu.VMEM((2,) + tail, ref.dtype)
+    pl.run_scoped(
+        scoped,
+        in_s=tuple(dbl(r, V, E) if r.ndim == 3 else dbl(r, V)
+                   for r in ins),
+        out_s=(dbl(cf_hbm, V, E), dbl(sink_hbm, V), dbl(exc_hbm, V),
+               dbl(lab_hbm, V), dbl(cf_hbm, V, E)),
+        in_sems=pltpu.SemaphoreType.DMA((2, 10)),
+        out_sems=pltpu.SemaphoreType.DMA((2, 5)),
+    )
+
+
+def _fused_streamed_call(args, scal, *, sink_open: bool):
+    from jax.experimental.pallas import tpu as pltpu
+
+    lab, cf, sink_cf, excess = args[0], args[1], args[2], args[3]
+    K, V, E = cf.shape
+    anyspec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+    smem = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.SMEM)
+    return pl.pallas_call(
+        functools.partial(_fused_kernel_streamed, sink_open=sink_open,
+                          num_regions=K),
+        in_specs=[anyspec] * 10 + [smem],
+        out_specs=[anyspec] * 5 + [smem] * 3,
+        out_shape=[
+            jax.ShapeDtypeStruct((K, V, E), cf.dtype),    # cf
+            jax.ShapeDtypeStruct((K, V), sink_cf.dtype),  # sink_cf
+            jax.ShapeDtypeStruct((K, V), excess.dtype),   # excess
+            jax.ShapeDtypeStruct((K, V), lab.dtype),      # lab
+            jax.ShapeDtypeStruct((K, V, E), cf.dtype),    # out_push
+            jax.ShapeDtypeStruct((K,), jnp.int32),        # sink_pushed
+            jax.ShapeDtypeStruct((K,), jnp.int32),        # relabel_sum
+            jax.ShapeDtypeStruct((K,), jnp.int32),        # iters
+        ],
+    )(*args, scal)
 
 
 def engine_phase(lab, cf, sink_cf, excess, *, nbr_local, intra, emask, vmask,
                  cross_pushable, cross_lab, d_inf, sink_open: bool = True,
                  block_v: int = DEFAULT_BLOCK_V, interpret: bool = True,
-                 mode: str = "both"):
+                 mode: str = "both", mask_dtype=jnp.int32):
     """Engine-semantics adapter over ``push_relabel_phase``.
 
     Folds the engine's masks into the kernel's inputs: arcs are pushable iff
@@ -429,10 +616,10 @@ def engine_phase(lab, cf, sink_cf, excess, *, nbr_local, intra, emask, vmask,
     consumes.  ``mode`` prunes the output the caller discards ("push" /
     "relabel" / "both").
     """
-    pushable = ((cross_pushable | intra) & emask).astype(jnp.int32)
+    pushable = ((cross_pushable | intra) & emask).astype(mask_dtype)
     excess = jnp.where(vmask, excess, 0)
     sink = sink_cf if sink_open else jnp.zeros_like(sink_cf)
     return push_relabel_phase(lab, cf, sink, excess, nbr_local,
-                              intra.astype(jnp.int32), pushable, cross_lab,
+                              intra.astype(mask_dtype), pushable, cross_lab,
                               d_inf, block_v=block_v, interpret=interpret,
                               mode=mode)

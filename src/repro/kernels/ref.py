@@ -141,7 +141,7 @@ def fused_iteration_ref(cf, sink_cf, excess, lab, nbr, rev_slot, intra,
         cross_pushable, d_inf)
     d_sink = delta[:, 0]
     d_arc = delta[:, 1:]
-    excess = excess - d_sink - d_arc.sum(axis=1)
+    excess = excess - d_sink - jnp.sum(d_arc, axis=1, dtype=d_arc.dtype)
     sink_cf = sink_cf - d_sink
     cf = cf - d_arc
     d_intra = jnp.where(intra, d_arc, 0)
@@ -149,8 +149,8 @@ def fused_iteration_ref(cf, sink_cf, excess, lab, nbr, rev_slot, intra,
     flat_idx = (nbr * E + rev_slot).reshape(flat_n)
     cf = (cf.reshape(flat_n).at[flat_idx]
           .add(d_intra.reshape(flat_n), mode="drop").reshape(V, E))
-    excess = excess + jnp.zeros((V,), jnp.int32).at[nbr.reshape(flat_n)].add(
-        d_intra.reshape(flat_n), mode="drop")
+    excess = excess + jnp.zeros((V,), excess.dtype).at[nbr.reshape(flat_n)] \
+        .add(d_intra.reshape(flat_n), mode="drop")
     out_push = d_arc - d_intra
     sink2 = sink_cf if sink_open else jnp.zeros_like(sink_cf)
     _, new_lab = push_relabel_iteration_ref(

@@ -82,6 +82,19 @@ def main():
                          "solved together through solve_mincut_batch — one "
                          "shape-bucketed grid=(B,K) device program per "
                          "bucket, compiled solve cached per bucket shape")
+    ap.add_argument("--dtype-policy", choices=["int32", "auto", "narrow"],
+                    default="int32",
+                    help="kernel storage dtypes: int32 baseline (default), "
+                         "auto (narrow labels/residuals to int16 and masks "
+                         "to int8 when this instance's range bounds allow, "
+                         "per-family int32 fallback), or narrow (forced; a "
+                         "failed bound is a ProblemValidationError)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="resolve engine_chunk_iters through the "
+                         "VMEM-budget autotuner (core.autotune; JSON-cached "
+                         "per bucket dims/backend/dtypes — repeat keys cost "
+                         "zero search and zero retrace); an explicit "
+                         "--engine-chunk-iters wins over the tuner")
     ap.add_argument("--no-check", action="store_true",
                     help="skip the host-side cut-cost == flow assertion "
                          "(an extra device fetch + O(n*E) host reduction "
@@ -165,12 +178,13 @@ def main():
             else:
                 ap.error(f"--batch spec {spec!r} is neither HxW nor an "
                          "existing DIMACS file")
-        from repro.core import BatchedSolver
+        from repro.core import Solver, SolverOptions
 
-        solver = BatchedSolver(cfg, num_regions=ry * rx,
-                               check=not args.no_check)
+        solver = Solver(SolverOptions.from_sweep_config(
+            cfg, num_regions=ry * rx, check=not args.no_check,
+            dtype_policy=args.dtype_policy, autotune=args.autotune))
         t0 = time.time()
-        results = solver.solve(probs, parts)
+        results = solver.solve_many(probs, parts)
         dt = time.time() - t0
         for i, res in enumerate(results):
             print(f"[maxflow]   instance {i}: flow={res.flow_value} "
@@ -195,7 +209,8 @@ def main():
     from repro.core import Solver, SolverOptions
 
     solver = Solver(SolverOptions.from_sweep_config(
-        cfg, num_regions=ry * rx, check=not args.no_check))
+        cfg, num_regions=ry * rx, check=not args.no_check,
+        dtype_policy=args.dtype_policy, autotune=args.autotune))
     handle = solver.prepare(prob, part)
 
     mesh = None
@@ -210,7 +225,9 @@ def main():
                        resume_from=resume_from)
     route = (f"sharded x{len(jax.devices())}" if args.sharded
              else f"device_resident={cfg.device_resident}")
-    print(f"[maxflow] {args.method} parallel={cfg.parallel} {route}: "
+    kd = handle.meta.kernel_dtypes
+    print(f"[maxflow] {args.method} parallel={cfg.parallel} {route} "
+          f"dtypes={kd.label}/{kd.flow}/{kd.mask}: "
           f"flow={res.flow_value} sweeps={res.stats.sweeps} "
           f"launches={res.stats.engine_launches} "
           f"host_syncs={res.stats.host_syncs} "

@@ -393,7 +393,10 @@ class MaxflowService:
                     cause=f"{type(exc).__name__}: {exc}", attempts=0))
                 return True               # resolved: drop from the queue
         h = ticket._handle
-        key = _graph.bucket_shape_for(h.meta)
+        # dtype strings join the shape key: a narrowed handle must never
+        # share a batched executable with a wide one of the same dims
+        key = _graph.bucket_shape_for(h.meta) + (
+            h.meta.label_dtype, h.meta.flow_dtype, h.meta.mask_dtype)
         bucket = self._buckets.get(key)
         if bucket is not None and bucket.free_slot() is None:
             return False

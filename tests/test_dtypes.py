@@ -1,0 +1,335 @@
+"""Dtype-narrowing correctness: policy selection, validation guards,
+byte accounting, bit-exactness vs the int32 oracle on every route, and
+autotuner determinism (PR 9)."""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (Solver, SolverOptions, grid_partition, solve_mincut)
+from repro.core import autotune as _autotune
+from repro.core import dtypes as _dt
+from repro.core.graph import (ProblemValidationError, build,
+                              validate_problem, validate_update_dtypes)
+from repro.core.sweep import SweepConfig, _page_and_msg_bytes
+from repro.data.grids import synthetic_grid
+from repro.kernels.push_relabel import (FUSED_VMEM_BUDGET_BYTES,
+                                        fused_region_vmem_bytes)
+
+
+def _small_problem(seed=1):
+    """A 10x10 grid whose capacity mass fits the int16 flow bound."""
+    p = synthetic_grid(10, 10, connectivity=4, strength=3, seed=seed)
+    assert _dt.flows_fit_narrow(_dt.flow_mass(p))
+    return p, grid_partition((10, 10), (2, 2))
+
+
+def _big_problem():
+    """A 16x16 grid whose capacity mass exceeds the int16 flow bound."""
+    p = synthetic_grid(16, 16, connectivity=8, strength=150, seed=0)
+    assert not _dt.flows_fit_narrow(_dt.flow_mass(p))
+    return p, grid_partition((16, 16), (2, 2))
+
+
+def _map_narrow_labels(d16):
+    """Narrow labels -> the wide value space (sentinel classes map by a
+    monotone offset), for exact comparison against an int32 solve."""
+    d = np.asarray(d16).astype(np.int64)
+    return np.where(d >= _dt.NARROW_INF_LABEL,
+                    d - _dt.NARROW_INF_LABEL + _dt.INF_LABEL_WIDE, d)
+
+
+# ---------------------------------------------------------------- policy
+
+class TestPolicySelection:
+    def test_int32_default_everywhere(self):
+        p, part = _small_problem()
+        meta, state, _ = build(p, part)
+        assert meta.kernel_dtypes == _dt.WIDE
+        assert state.cf.dtype == jnp.int32 and state.d.dtype == jnp.int32
+
+    def test_auto_narrows_when_bounds_fit(self):
+        p, part = _small_problem()
+        meta, state, _ = build(p, part, dtype_policy="auto")
+        assert meta.kernel_dtypes == _dt.NARROW
+        assert state.cf.dtype == jnp.int16 and state.d.dtype == jnp.int16
+        assert state.excess.dtype == jnp.int16
+
+    def test_auto_falls_back_per_family(self):
+        p, part = _big_problem()
+        meta, _, _ = build(p, part, dtype_policy="auto")
+        kd = meta.kernel_dtypes
+        assert kd.flow == "int32"          # mass over the int16 bound
+        assert kd.label == "int16"         # labels still fit
+        assert kd.mask == "int8"           # any narrow family -> int8 masks
+
+    def test_narrow_policy_raises_typed_error_naming_bound(self):
+        p, part = _big_problem()
+        with pytest.raises(ProblemValidationError) as e:
+            validate_problem(p, context="problem", dtype_policy="narrow")
+        msg = str(e.value)
+        assert "int16" in msg and str(_dt.NARROW_FLOW_LIMIT) in msg
+
+    def test_unknown_policy_rejected(self):
+        with pytest.raises(ValueError):
+            SolverOptions(dtype_policy="float16")
+        p, part = _small_problem()
+        with pytest.raises(ValueError):
+            build(p, part, dtype_policy="int8")
+
+    def test_sentinels_order_like_wide(self):
+        assert _dt.inf_label_for("int16") == _dt.NARROW_INF_LABEL
+        assert _dt.inf_label_for("int32") == _dt.INF_LABEL_WIDE
+        # every representable narrow label sits strictly below the sentinel
+        assert _dt.NARROW_LABEL_LIMIT + 1 < _dt.NARROW_INF_LABEL + 1 \
+            < np.iinfo(np.int16).max
+
+
+# ------------------------------------------------------------ validation
+
+class TestUpdateGuard:
+    def test_update_rejects_mass_growth_past_bound(self):
+        p, part = _small_problem()
+        s = Solver(SolverOptions(dtype_policy="narrow"))
+        h = s.prepare(p, part)
+        h.solve()
+        m = len(p.edges)
+        with pytest.raises(ProblemValidationError) as e:
+            h.update(arcs=np.arange(m),
+                     cap_fwd=np.full(m, 2000, np.int32))
+        assert "int16" in str(e.value) and "re-prepare" in str(e.value)
+
+    def test_update_within_bound_stays_narrow_and_exact(self):
+        p, part = _small_problem()
+        s16 = Solver(SolverOptions(dtype_policy="narrow"))
+        s32 = Solver(SolverOptions(dtype_policy="int32"))
+        h16, h32 = s16.prepare(p, part), s32.prepare(p, part)
+        h16.solve(), h32.solve()
+        idx = np.arange(6)
+        caps = np.full(6, 5, np.int32)
+        r16 = h16.update(arcs=idx, cap_fwd=caps).solve()
+        r32 = h32.update(arcs=idx, cap_fwd=caps).solve()
+        assert r16.flow_value == r32.flow_value
+        assert h16.state.cf.dtype == jnp.int16
+
+    def test_validate_update_dtypes_noop_for_wide(self):
+        p, part = _small_problem()
+        meta, _, _ = build(p, part)                  # wide build
+        big, _ = _big_problem()
+        validate_update_dtypes(meta, big)            # must not raise
+
+
+# ------------------------------------------------------- byte accounting
+
+class TestByteAccounting:
+    def test_wide_vmem_matches_historical_formula(self):
+        for V, E in [(64, 4), (256, 8), (1024, 8), (4096, 16)]:
+            assert fused_region_vmem_bytes(V, E) \
+                == fused_region_vmem_bytes(V, E, _dt.WIDE) \
+                == 4 * (9 * V * E + 2 * V * (E + 1) + 8 * V)
+
+    def test_narrow_vmem_cut_at_least_40_percent_for_32sq_region(self):
+        V, E = 32 * 32, 8
+        wide = fused_region_vmem_bytes(V, E, _dt.WIDE)
+        narrow = fused_region_vmem_bytes(V, E, _dt.NARROW)
+        assert narrow <= 0.60 * wide, (narrow, wide)
+
+    def test_page_and_msg_bytes_wide_matches_historical(self):
+        p, part = _small_problem()
+        meta, state, _ = build(p, part)
+        V, E = meta.region_size, meta.max_degree
+        page, msg = _page_and_msg_bytes(meta, state)
+        assert page == 16 * V * E + 16 * V
+        assert msg == 8 * meta.num_cross_arcs
+
+    def test_page_bytes_shrink_under_narrowing(self):
+        p, part = _small_problem()
+        meta_w, st_w, _ = build(p, part)
+        meta_n, st_n, _ = build(p, part, dtype_policy="narrow")
+        page_w, msg_w = _page_and_msg_bytes(meta_w, st_w)
+        page_n, msg_n = _page_and_msg_bytes(meta_n, st_n)
+        # the int32 topology slabs (nbr/rev) never narrow, so the page
+        # shrinks less than the value-only fused VMEM does (~36% here)
+        assert page_n < 0.70 * page_w
+        assert msg_n == msg_w // 2        # (4+4) -> (2+2) bytes per arc
+
+
+# ---------------------------------------------------------- bit-exactness
+
+class TestBitExactMatrix:
+    @pytest.mark.parametrize("method", ["ard", "prd"])
+    @pytest.mark.parametrize("backend", ["xla", "pallas"])
+    @pytest.mark.parametrize("device_resident", [False, True])
+    def test_narrow_matches_int32_oracle(self, method, backend,
+                                         device_resident):
+        p, part = _small_problem()
+        out = {}
+        for policy in ("int32", "narrow"):
+            s = Solver(SolverOptions(
+                method=method, engine_backend=backend,
+                device_resident=device_resident, dtype_policy=policy))
+            h = s.prepare(p, part)
+            r = h.solve()
+            out[policy] = r
+        r32, r16 = out["int32"], out["narrow"]
+        assert r16.flow_value == r32.flow_value
+        assert r16.stats.sweeps == r32.stats.sweeps
+        assert r16.stats.engine_iters == r32.stats.engine_iters
+        assert (r16.source_side == r32.source_side).all()
+        assert (np.asarray(r16.state.cf)
+                == np.asarray(r32.state.cf)).all()
+        assert (_map_narrow_labels(r16.state.d)
+                == np.asarray(r32.state.d)).all()
+
+    @pytest.mark.parametrize("backend", ["xla", "pallas"])
+    def test_narrow_matches_int32_batched(self, backend):
+        probs = [synthetic_grid(10, 10, connectivity=4, strength=3, seed=s)
+                 for s in range(3)]
+        part = grid_partition((10, 10), (2, 2))
+        out = {}
+        for policy in ("int32", "narrow"):
+            s = Solver(SolverOptions(engine_backend=backend,
+                                     dtype_policy=policy))
+            rs = s.solve_many(probs, [part] * 3)
+            out[policy] = [(r.flow_value, r.stats.sweeps,
+                            r.stats.engine_iters) for r in rs]
+        assert out["int32"] == out["narrow"]
+
+    def test_narrow_matches_int32_sharded_one_device(self):
+        p, part = _small_problem()
+        mesh = jax.make_mesh((1,), ("regions",))
+        out = {}
+        for policy in ("int32", "narrow"):
+            s = Solver(SolverOptions(dtype_policy=policy))
+            h = s.prepare(p, part)
+            r = h.solve(mesh=mesh)
+            out[policy] = r
+        r32, r16 = out["int32"], out["narrow"]
+        assert r16.flow_value == r32.flow_value
+        assert r16.stats.sweeps == r32.stats.sweeps
+        assert (r16.source_side == r32.source_side).all()
+        assert r16.state.cf.dtype == jnp.int16      # narrowed back at exit
+        assert (_map_narrow_labels(r16.state.d)
+                == np.asarray(r32.state.d)).all()
+
+    def test_oracle_flow_on_narrow(self):
+        from repro.kernels.ref import maxflow_oracle
+
+        p, part = _small_problem()
+        want, _ = maxflow_oracle(p)
+        r = Solver(SolverOptions(dtype_policy="narrow")) \
+            .prepare(p, part).solve()
+        assert r.flow_value == want
+
+
+# --------------------------------------------------------- compile cache
+
+class TestCompileCacheKeys:
+    def test_dtypes_in_meta_split_jit_keys(self):
+        p, part = _small_problem()
+        meta_w, _, _ = build(p, part)
+        meta_n, _, _ = build(p, part, dtype_policy="narrow")
+        assert meta_w != meta_n           # frozen metadata IS the jit key
+        assert meta_w.kernel_dtypes != meta_n.kernel_dtypes
+
+    def test_pack_built_separates_dtype_buckets(self):
+        from repro.core.graph import pack_built
+
+        p, part = _small_problem()
+        builds = []
+        for i, policy in enumerate(("int32", "narrow")):
+            meta, state, layout = build(p, part, dtype_policy=policy)
+            builds.append((i, meta, state, layout, state))
+        packs = pack_built(builds)
+        assert len(packs) == 2            # same dims, different dtypes
+
+
+# -------------------------------------------------------------- autotune
+
+class TestAutotuner:
+    def test_same_key_same_config_and_cache_persistence(self, tmp_path):
+        cache = tmp_path / "at.json"
+        kd = _dt.NARROW
+        tc1 = _autotune.tune(256, 8, backend="pallas", dtypes=kd,
+                             cache=cache)
+        tc2 = _autotune.tune(256, 8, backend="pallas", dtypes=kd,
+                             cache=cache)
+        assert tc1 == tc2
+        stored = json.loads(cache.read_text())
+        key = _autotune.tune_key(256, 8, "pallas", kd)
+        assert key in stored
+        assert stored[key]["engine_chunk_iters"] == tc1.engine_chunk_iters
+
+    def test_tuned_config_within_budget(self, tmp_path):
+        for kd in (_dt.WIDE, _dt.NARROW):
+            tc = _autotune.tune(1024, 8, backend="pallas", dtypes=kd,
+                                cache=tmp_path / "at.json")
+            if tc.fused:
+                assert tc.vmem_bytes <= FUSED_VMEM_BUDGET_BYTES
+
+    def test_dtype_narrowing_extends_fused_range(self, tmp_path):
+        # a region over budget wide but in budget narrow must flip fused
+        V, E = 8192, 16
+        budget = fused_region_vmem_bytes(V, E, _dt.NARROW) + 1
+        tw = _autotune.tune(V, E, backend="pallas", dtypes=_dt.WIDE,
+                            vmem_budget_bytes=budget,
+                            cache=tmp_path / "a.json")
+        tn = _autotune.tune(V, E, backend="pallas", dtypes=_dt.NARROW,
+                            vmem_budget_bytes=budget,
+                            cache=tmp_path / "a.json")
+        assert not tw.fused and tn.fused
+
+    def test_user_pin_beats_tuner(self, tmp_path, monkeypatch):
+        monkeypatch.setenv(_autotune.CACHE_ENV,
+                           str(tmp_path / "at.json"))
+        cfg = SweepConfig(engine_chunk_iters=3, engine_backend="pallas")
+        p, part = _small_problem()
+        meta, _, _ = build(p, part)
+        assert _autotune.tuned_sweep_config(cfg, meta) is cfg
+
+    def test_zero_retrace_on_repeat_key(self, monkeypatch, tmp_path,
+                                        fresh_compile_cache):
+        monkeypatch.setenv(_autotune.CACHE_ENV,
+                           str(tmp_path / "at.json"))
+        p, part = _small_problem()
+        s = Solver(SolverOptions(autotune=True, engine_backend="pallas",
+                                 dtype_policy="narrow"))
+        h1 = s.prepare(p, part)
+        r1 = h1.solve()
+        traces_after_first = s.cache_info().traces
+        h2 = s.prepare(p, part)
+        r2 = h2.solve()
+        assert s.cache_info().traces == traces_after_first
+        assert r1.flow_value == r2.flow_value
+
+    def test_solve_results_unchanged_by_autotune(self, monkeypatch,
+                                                 tmp_path):
+        monkeypatch.setenv(_autotune.CACHE_ENV,
+                           str(tmp_path / "at.json"))
+        p, part = _small_problem()
+        base = Solver(SolverOptions()).prepare(p, part).solve()
+        tuned = Solver(SolverOptions(autotune=True)) \
+            .prepare(p, part).solve()
+        assert tuned.flow_value == base.flow_value
+        assert tuned.stats.sweeps == base.stats.sweeps
+        assert tuned.stats.engine_iters == base.stats.engine_iters
+
+
+# --------------------------------------------------------------- CLI/API
+
+class TestFrontEnds:
+    def test_solve_mincut_unchanged_default(self):
+        p, part = _small_problem()
+        res = solve_mincut(p, part=part, config=SweepConfig())
+        assert res.meta.kernel_dtypes == _dt.WIDE
+
+    def test_options_roundtrip(self):
+        o = SolverOptions(dtype_policy="auto", autotune=True)
+        assert o.sweep_config() == SweepConfig()     # session knobs only
+        o2 = dataclasses.replace(o, dtype_policy="int32")
+        assert o2.autotune is True
