@@ -63,7 +63,7 @@ def _page_rows(size, regions):
     rows = []
     for policy in POLICIES:
         meta, state, _ = build(p, part, dtype_policy=policy)
-        page, msg = _page_and_msg_bytes(meta, state)
+        page, msg = _page_and_msg_bytes(meta)
         kd = meta.kernel_dtypes
         rows.append(dict(
             instance=f"grid{size}x{size}",

@@ -1,4 +1,4 @@
-"""Shared benchmark utilities: timing + CSV emission.
+"""Shared benchmark utilities: timing + CSV emission + peak-RSS probes.
 
 Every benchmark module exposes ``run(emit, quick)`` and prints rows through
 ``emit(name, us_per_call, derived)`` — the ``name,us_per_call,derived``
@@ -7,11 +7,26 @@ CSV contract of benchmarks/run.py.
 
 from __future__ import annotations
 
+import resource
+import sys
 import time
 
 
 def emit_csv(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def peak_rss_bytes() -> int:
+    """High-water host RSS of this process, in bytes.
+
+    ``ru_maxrss`` is a process-LIFETIME maximum — it never goes back
+    down, so comparing two arms within one process attributes the first
+    arm's peak to the second.  Memory benchmarks must run each arm in
+    its own subprocess (see ``benchmarks/bench_streaming.py``) and
+    report this at exit.  Linux reports KiB; macOS reports bytes.
+    """
+    rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    return int(rss) if sys.platform == "darwin" else int(rss) * 1024
 
 
 def time_call(fn, *args, repeats: int = 3, warmup: int = 1):

@@ -16,7 +16,10 @@ Public surface:
                                               every route drives (executor
                                               instances: LocalExecutor,
                                               BatchedExecutor,
-                                              ShardedExecutor)
+                                              ShardedExecutor,
+                                              StreamingExecutor — the
+                                              out-of-core route, see
+                                              repro.stream)
   region_reduction                          — Alg. 5 preprocessing
   SolveSupervisor, CheckpointPolicy,
   FaultPlan, SolveCheckpoint                — resilience layer: sweep-
@@ -32,7 +35,8 @@ from repro.core.api import (BatchCacheInfo, BatchedSolver, MincutResult,
                             solve_mincut, solve_mincut_batch)
 from repro.core.executor import (BatchedExecutor, Capabilities,
                                  LocalExecutor, RegionExecutor,
-                                 ShardedExecutor, UnsupportedFeatureError)
+                                 ShardedExecutor, StreamingExecutor,
+                                 UnsupportedFeatureError)
 from repro.core.graph import (BatchMeta, BatchState, FlowState, GraphMeta,
                               GraphUpdate, Layout, PackedBatch, Problem,
                               ProblemValidationError, apply_update,
@@ -65,6 +69,7 @@ __all__ = [
     "PackedBatch", "PreemptionError", "Problem", "ProblemHandle",
     "ProblemValidationError", "RegionExecutor", "RetryPolicy",
     "ShardedExecutor", "SolveCheckpoint", "SolveSupervisor", "Solver",
+    "StreamingExecutor",
     "SolverCacheInfo", "SolverOptions", "SupervisorReport", "SweepConfig",
     "SweepStats", "TunedConfig", "UnsupportedFeatureError", "Violation",
     "VmemOverflowError", "apply_update",

@@ -116,12 +116,14 @@ class UnsupportedFeatureError(ValueError, NotImplementedError):
 class Capabilities:
     """What a :class:`RegionExecutor` can run (True = supported).
 
-    ``sequential``/``boundary_relabel``/``partial_discharge``/``global_gap``
-    map 1:1 onto ``SweepConfig`` knobs and are validated against it;
-    ``batched``/``warm_start``/``device_resident``/``host_loop`` document
-    the driver surface (see the capability table in ARCHITECTURE.md).
+    ``parallel``/``sequential``/``boundary_relabel``/``partial_discharge``/
+    ``global_gap`` map 1:1 onto ``SweepConfig`` knobs and are validated
+    against it; ``batched``/``warm_start``/``device_resident``/``host_loop``
+    document the driver surface (see the capability table in
+    ARCHITECTURE.md).
     """
 
+    parallel: bool = True            # Alg. 2 sweeps (cfg.parallel=True)
     sequential: bool = True          # Alg. 1 sweeps (cfg.parallel=False)
     boundary_relabel: bool = True    # Sec. 6.1 heuristic
     partial_discharge: bool = True   # Sec. 6.2 staged augmentation
@@ -133,6 +135,7 @@ class Capabilities:
 
 
 FEATURE_DOC = {
+    "parallel": "parallel sweeps (Alg. 2)",
     "sequential": "sequential sweeps (Alg. 1)",
     "boundary_relabel": "the boundary-relabel heuristic (Sec. 6.1)",
     "partial_discharge": "partial discharges (Sec. 6.2)",
@@ -144,6 +147,8 @@ FEATURE_DOC = {
 }
 
 _HINTS = {
+    "parallel": "set parallel=False: the streaming executor visits staged "
+                "regions one at a time (Alg. 1 order) by construction",
     "sequential": "use the local executor (sweep.solve) for Alg. 1 sweeps",
     "boundary_relabel": "use the local executor (sweep.solve) for the "
                         "boundary-relabel heuristic",
@@ -153,6 +158,8 @@ _HINTS = {
 def required_features(cfg) -> tuple[str, ...]:
     """The :class:`Capabilities` flags a ``SweepConfig`` actually exercises."""
     out = []
+    if cfg.parallel:
+        out.append("parallel")
     if not cfg.parallel:
         out.append("sequential")
     if cfg.use_boundary_relabel:
@@ -615,4 +622,66 @@ class ShardedExecutor(RegionExecutor):
                            "make_sharded_sweep), passed to run_host")
 
 
-EXECUTORS = (LocalExecutor, BatchedExecutor, ShardedExecutor)
+@dataclass(frozen=True)
+class StreamingExecutor(RegionExecutor):
+    """Out-of-core single-instance solve: regions staged one at a time
+    from a disk-backed spill pool (``repro.stream``).
+
+    The state threaded through the generic host loop is a
+    ``stream.StreamState`` (spill-pool handle + resident-set manager +
+    the |B|-sized boundary arrays), NOT a ``FlowState`` — at any moment
+    only ``max_resident_regions`` [V, E] slabs are in memory.  Host-loop
+    only: the premise is that the instance does not fit resident, so
+    there is nothing for a device-side ``while_loop`` to hold.
+    Sequential sweeps only: the paper's streaming mode IS Alg. 1 —
+    regions are visited in order and boundary flow/labels apply
+    immediately, which is what makes one-region residency sufficient.
+    Global gap needs every label in memory at once, so it is declared
+    unsupported rather than approximated.
+    """
+
+    meta: Any
+    cfg: Any
+
+    name = "streaming"
+    capabilities = Capabilities(
+        parallel=False, boundary_relabel=False, global_gap=False,
+        device_resident=False)
+    entry_check = True
+
+    def _stream_mod(self):
+        from repro.stream import executor as stream_executor
+        return stream_executor
+
+    def note_trace(self) -> None:
+        self._stream_mod()._bump_trace()
+
+    def num_active(self, state):
+        return state.num_active()
+
+    def init_carry(self, state) -> tuple:
+        raise UnsupportedFeatureError(
+            self.name, "device_resident",
+            "the streaming executor runs through the host loop (run_host)")
+
+    def one_sweep(self, state, carry, limit):
+        raise UnsupportedFeatureError(
+            self.name, "device_resident",
+            "the streaming executor runs through the host loop (run_host)")
+
+    def keep_running(self, state, carry, limit):
+        raise UnsupportedFeatureError(
+            self.name, "device_resident",
+            "the streaming executor runs through the host loop (run_host)")
+
+    def progress(self, host_carry, limit):
+        raise UnsupportedFeatureError(
+            self.name, "device_resident",
+            "the streaming executor runs through the host loop (run_host)")
+
+    def sweep_host(self, state, idx):
+        return self._stream_mod().stream_sweep(state, idx)
+
+
+EXECUTORS = (LocalExecutor, BatchedExecutor, ShardedExecutor,
+             StreamingExecutor)

@@ -283,6 +283,27 @@ class Layout:
         return np.asarray(arr_kv)[self.part, self.local_id]
 
 
+def _stable_cumcount(keys: np.ndarray) -> np.ndarray:
+    """Occurrence index of each element among equal values, in array order.
+
+    Vectorized equivalent of ``count[k]; count[k] += 1`` loops: a stable
+    argsort groups equal keys while preserving their original order, so the
+    within-group offset is position minus group start.  ``build`` and the
+    shard-wise streaming build (``repro.stream.build``) both derive arc
+    slots from it, which is what makes their layouts bit-identical.
+    """
+    n = len(keys)
+    if n == 0:
+        return np.zeros(0, dtype=np.int64)
+    order = np.argsort(keys, kind="stable")
+    sk = keys[order]
+    starts = np.r_[0, np.flatnonzero(sk[1:] != sk[:-1]) + 1]
+    counts = np.diff(np.r_[starts, n])
+    out = np.empty(n, dtype=np.int64)
+    out[order] = np.arange(n, dtype=np.int64) - np.repeat(starts, counts)
+    return out
+
+
 def build(problem: Problem, part: np.ndarray, *,
           dtype_policy: str = "int32") -> tuple[GraphMeta, FlowState, "Layout"]:
     """Block a flat problem into the region-partitioned device layout.
@@ -303,15 +324,10 @@ def build(problem: Problem, part: np.ndarray, *,
     assert part.shape == (n,)
     K = int(part.max()) + 1 if n else 1
 
-    # local ids within each region
-    local_id = np.zeros(n, dtype=np.int64)
-    region_count = np.zeros(K, dtype=np.int64)
-    order = np.argsort(part, kind="stable")
-    for v in order:
-        r = part[v]
-        local_id[v] = region_count[r]
-        region_count[r] += 1
-    V = max(1, int(region_count.max()))
+    # local ids within each region (cumcount in vertex order, per region)
+    local_id = _stable_cumcount(part)
+    region_count = np.bincount(part, minlength=K)
+    V = max(1, int(region_count.max()) if n else 0)
 
     # per-vertex directed arc lists (both directions of every undirected edge)
     u_arr = problem.edges[:, 0]
@@ -327,15 +343,15 @@ def build(problem: Problem, part: np.ndarray, *,
     emask = np.zeros((K, V, E), dtype=bool)
     cf = np.zeros((K, V, E), dtype=np.int32)
 
-    slot_ctr = np.zeros(n, dtype=np.int64)
+    # first pass: assign slots — cumcount over the interleaved (u, v)
+    # endpoint sequence, exactly the per-vertex counter a scalar loop
+    # over edges would keep
     m = len(problem.edges)
-    slot_u = np.zeros(m, dtype=np.int64)
-    slot_v = np.zeros(m, dtype=np.int64)
-    # first pass: assign slots
-    for i in range(m):
-        u, v = u_arr[i], v_arr[i]
-        slot_u[i] = slot_ctr[u]; slot_ctr[u] += 1
-        slot_v[i] = slot_ctr[v]; slot_ctr[v] += 1
+    occ = np.empty(2 * m, dtype=np.int64)
+    occ[0::2] = u_arr
+    occ[1::2] = v_arr
+    cc = _stable_cumcount(occ)
+    slot_u, slot_v = cc[0::2], cc[1::2]
     # second pass: fill rows (vectorised where possible)
     ru, lu = part[u_arr], local_id[u_arr]
     rv, lv = part[v_arr], local_id[v_arr]
@@ -461,6 +477,46 @@ def build(problem: Problem, part: np.ndarray, *,
 def init_labels(meta: GraphMeta, state: FlowState) -> FlowState:
     """Paper's ``Init``: d := 0 everywhere (source already eliminated)."""
     return state.replace(d=jnp.zeros_like(state.d))
+
+
+# --------------------------------------------------------------------------
+# Per-region state slabs: the streaming executor's unit of disk I/O.  One
+# region's view is [V,E]/[V] arrays — never the full [K,V,E] state — split
+# into the immutable topology (spilled once per solve) and the mutable flow
+# family (staged in/out every region visit).
+# --------------------------------------------------------------------------
+
+REGION_TOPO_FIELDS = ("nbr_region", "nbr_local", "rev_slot", "emask",
+                      "vmask", "is_boundary")
+REGION_FLOW_FIELDS = ("cf", "sink_cf", "excess", "d")
+
+
+def extract_region(state: FlowState, r: int, fields=None) -> dict:
+    """One region's slabs as host numpy arrays: ``{field: array[V,E]|[V]}``.
+
+    ``fields`` defaults to topology + flow; pass ``REGION_FLOW_FIELDS`` /
+    ``REGION_TOPO_FIELDS`` to stage one family.  Fetches only the indexed
+    slices — a prepared handle spilling its regions to disk never copies
+    the whole state to host at once.
+    """
+    if fields is None:
+        fields = REGION_TOPO_FIELDS + REGION_FLOW_FIELDS
+    return {f: np.asarray(getattr(state, f)[r]) for f in fields}
+
+
+def insert_region(state: FlowState, r: int, shard: dict) -> FlowState:
+    """Write one region's mutable slabs back into a full ``FlowState``.
+
+    The inverse of :func:`extract_region` over the flow family (topology is
+    immutable and never re-inserted); used to reassemble a resident state
+    from streamed shards for cut extraction / certificate checks.
+    """
+    upd = {}
+    for f in REGION_FLOW_FIELDS:
+        if f in shard:
+            cur = getattr(state, f)
+            upd[f] = cur.at[r].set(jnp.asarray(shard[f], dtype=cur.dtype))
+    return state.replace(**upd)
 
 
 # --------------------------------------------------------------------------

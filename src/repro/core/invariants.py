@@ -116,6 +116,34 @@ def check_flow_conservation(meta, state, total0: int) -> list[Violation]:
                       detail=f"excess + flow_to_t = {total} != {total0}")]
 
 
+def sweep_bound(meta, *, ard: bool) -> int:
+    """The paper's worst-case sweep count: 2|B|^2 + 1 for ARD (Lemma 2 —
+    each sweep after the first raises some boundary label, and boundary
+    labels live in [0, 2|B|)), 2n^2 + 1 for PRD (labels in [0, 2n))."""
+    base = max(1, meta.num_boundary) if ard else max(1, meta.num_vertices)
+    return 2 * base * base + 1
+
+
+def check_sweep_bound(meta, stats, *, ard: bool) -> list[Violation]:
+    """A converged solve's sweep count respects the paper's bound.
+
+    A violation here is not a wrong answer (convergence is certified
+    separately) — it means the implementation lost the monotone-label
+    argument the complexity analysis rests on, which the paper's
+    streaming mode depends on for termination within bounded passes.
+    """
+    if not stats.converged:
+        return []
+    limit = sweep_bound(meta, ard=ard)
+    if stats.sweeps <= limit:
+        return []
+    return [Violation(
+        kind="sweep_bound", count=stats.sweeps,
+        detail=f"{stats.sweeps} sweeps exceeds the "
+               f"{'2|B|^2+1' if ard else '2n^2+1'} bound {limit} "
+               f"(|B|={meta.num_boundary}, n={meta.num_vertices})")]
+
+
 def invariant_report(meta, state, *, ard: bool,
                      total0: int | None = None) -> list[Violation]:
     """Every state-level invariant in one pass (empty list = all hold)."""

@@ -342,7 +342,10 @@ class SolveCheckpoint:
     ``payload`` — the mutable device state (``cf``/``sink_cf``/``excess``/
     ``d``/``flow_to_t`` as host numpy arrays) plus the route's loop-carry
     scalars/arrays (``n_act``; per-instance ``sweeps``/``iters`` arrays on
-    the batched route).  ``stats`` — the accumulated ``SweepStats``
+    the batched route; on the streaming route the payload is the O(|B|)
+    boundary layer plus the spill pool's per-region version vector — the
+    region interiors themselves stay in the pool, already durable).
+    ``stats`` — the accumulated ``SweepStats``
     accounting at the boundary (counters, curve tails, syncs, degradation
     notes).  ``sweeps`` — absolute sweep index of the boundary (max over
     instances on the batched route); doubles as the snapshot step, so
@@ -351,6 +354,7 @@ class SolveCheckpoint:
 
     fingerprint: str
     route: str               # "host" | "device" | "sharded" | "batch"
+    #                          | "stream"
     sweeps: int
     payload: dict
     stats: dict

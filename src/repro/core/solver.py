@@ -115,6 +115,17 @@ class SolverOptions:
         default.  An explicitly pinned ``engine_chunk_iters`` wins over
         the tuner; tuned decisions persist in a JSON cache so repeat keys
         cost zero search and zero retrace.
+    streaming — route solves through the out-of-core streaming executor
+        (``repro.stream``): regions are staged one at a time from a disk
+        spill pool, at most ``max_resident_regions`` region states are in
+        memory at once, and only the |B|-sized boundary layer persists
+        between visits.  Requires the sequential sweep without the global
+        gap heuristic (``parallel=False``, ``use_global_gap=False``) —
+        anything else raises ``UnsupportedFeatureError`` naming the flag.
+        ``spill_dir`` pins the pool to a durable directory (kill-resume
+        needs the pool to outlive the process); ``None`` uses a temp dir
+        deleted when the solve finishes.  ``prefetch`` overlaps the next
+        region's disk read with the current region's discharge.
     """
 
     # --- sweep/engine knobs (mirror sweep.SweepConfig) ---
@@ -138,10 +149,16 @@ class SolverOptions:
     autotune: bool = False
     # --- sharded-route knobs ---
     exchange: str = "full"
+    # --- streaming-route knobs ---
+    streaming: bool = False
+    max_resident_regions: int = 2
+    spill_dir: str | None = None
+    prefetch: bool = True
 
     def __post_init__(self):
         assert self.warm_labels in (True, False, "auto", "keep", "reset")
         assert self.exchange in ("full", "boundary")
+        assert self.max_resident_regions >= 1
         if self.dtype_policy not in _dt.DTYPE_POLICIES:
             raise ValueError(
                 f"unknown dtype_policy {self.dtype_policy!r}; expected one "
@@ -489,6 +506,26 @@ class ProblemHandle:
                  else self.meta.d_inf_prd)
 
         def run(c):
+            if opts.streaming:
+                if mesh is not None:
+                    raise ValueError(
+                        "streaming and mesh are mutually exclusive routes: "
+                        "the streaming executor stages regions through host "
+                        "memory one at a time, the sharded driver keeps all "
+                        "of them device-resident")
+                from repro import stream as _stream
+                ss = _stream.open_stream(
+                    self.meta, st_in, c, spill_dir=opts.spill_dir,
+                    max_resident_regions=opts.max_resident_regions,
+                    prefetch=opts.prefetch, cold_labels=False)
+                try:
+                    ss, stats = _stream.solve_stream(
+                        ss, on_sweep=on_sweep, checkpoint=checkpoint,
+                        resume_from=ckpt_obj, salt=salt)
+                    st = _stream.assemble_state(ss, st_in)
+                finally:
+                    ss.store.close()
+                return st, stats
             if mesh is not None:
                 # the sharded driver's state specs are pinned to int32
                 # (distributed.py builds abstract int32 avals for the SPMD
@@ -502,11 +539,12 @@ class ProblemHandle:
                     checkpoint=checkpoint, resume_from=ckpt_obj, salt=salt,
                     on_sweep=on_sweep)
                 st = _narrow_state(st, self.meta)
-                _pb, msg_bytes = _sweep._page_and_msg_bytes(self.meta, st)
+                _pb, msg_bytes = _sweep._page_and_msg_bytes(self.meta)
                 stats = _sweep.SweepStats(
                     sweeps=sweeps, engine_iters=None, engine_launches=None,
                     host_syncs=syncs, boundary_bytes=sweeps * msg_bytes,
-                    page_bytes=None, regions_discharged=None,
+                    page_bytes=None, num_boundary=self.meta.num_boundary,
+                    regions_discharged=None,
                     converged=int(st.active(d_inf).sum()) == 0)
                 return st, stats
             return _sweep.solve(self.meta, st_in, c, warm=True,
@@ -554,9 +592,12 @@ class Solver:
 
     @staticmethod
     def _trace_total() -> int:
+        import sys
+        sm = sys.modules.get("repro.stream.executor")
         return (_sweep.trace_count() + _batch.trace_count()
                 + _graph.update_trace_count() + _labels.trace_count()
-                + _distributed.trace_count())
+                + _distributed.trace_count()
+                + (sm.trace_count() if sm is not None else 0))
 
     def _note(self, before: int) -> None:
         now = self._trace_total()
@@ -619,6 +660,11 @@ class Solver:
         the same order to resume).
         """
         cfg = self.options.sweep_config()
+        if self.options.streaming:
+            raise ValueError(
+                "solve_many and streaming are mutually exclusive: the "
+                "batched driver packs every instance device-resident; "
+                "solve streaming handles one at a time instead")
         _executor.BatchedExecutor.validate(cfg)
         if isinstance(checkpoint, (str, Path)):
             checkpoint = _res.CheckpointPolicy(directory=checkpoint)
@@ -672,8 +718,7 @@ class Solver:
                     d=bstate.d[b, :K, :V],
                     flow_to_t=bstate.flow_to_t[b])
                 sweeps = int(bstats.sweeps[b])
-                page_bytes, msg_bytes = _sweep._page_and_msg_bytes(
-                    meta, h.state0)
+                page_bytes, msg_bytes = _sweep._page_and_msg_bytes(meta)
                 converged = bool(bstats.converged[b]) \
                     if bstats.converged is not None else True
                 stats = _sweep.SweepStats(
@@ -683,6 +728,7 @@ class Solver:
                     host_syncs=bstats.host_syncs,
                     boundary_bytes=sweeps * msg_bytes,
                     page_bytes=sweeps * meta.num_regions * page_bytes,
+                    num_boundary=meta.num_boundary,
                     regions_discharged=sweeps * meta.num_regions,
                     scope="batch", converged=converged)
                 h.state = st

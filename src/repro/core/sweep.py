@@ -159,6 +159,16 @@ class SweepStats:
     #                              default)
     boundary_bytes: int = 0      # flow+label messages over the cut (paper: I/O)
     page_bytes: int | None = 0   # streaming-mode region load/store bytes
+    #                              (in-memory routes: the MODEL cost — what
+    #                              the sweep WOULD stage; the streaming
+    #                              executor reports measured staged bytes in
+    #                              staged_in/out_bytes alongside it)
+    num_boundary: int | None = None   # |B|: boundary vertices (cross-table
+    #                              endpoints at build time) — the paper's
+    #                              sweep-bound parameter (2|B|^2 + 1)
+    staged_in_bytes: int = 0     # streaming executor: bytes actually read
+    #                              from the spill pool (cache hits are free)
+    staged_out_bytes: int = 0    # streaming executor: bytes written back
     regions_discharged: int | None = 0
     flow_curve: list = dataclasses.field(default_factory=list)
     active_curve: list = dataclasses.field(default_factory=list)
@@ -172,7 +182,8 @@ class SweepStats:
 
 
 _STAT_KEYS = ("sweeps", "engine_iters", "engine_launches", "host_syncs",
-              "boundary_bytes", "page_bytes", "regions_discharged",
+              "boundary_bytes", "page_bytes", "num_boundary",
+              "staged_in_bytes", "staged_out_bytes", "regions_discharged",
               "flow_curve", "active_curve", "converged", "degraded")
 
 
@@ -365,19 +376,21 @@ def sweep_bound(meta: GraphMeta, cfg: SweepConfig) -> int:
     return 2 * meta.num_vertices * meta.num_vertices
 
 
-def _page_and_msg_bytes(meta: GraphMeta, state: FlowState):
+def _page_and_msg_bytes(meta):
     # bytes of one region page (cf + labels + excess + topology) — paper's
     # streaming unit; boundary message = flow + label per cross arc.  Costed
-    # per value family at the state's storage dtypes: the [V,E] page is one
-    # flow array (cf), two int32 topology arrays (nbr/rev) and one mask
-    # (emask); the [V] vectors are two flow (sink_cf/excess), one label (d)
-    # and one mask (vmask).  All-int32 this is the historical
-    # ``16*V*E + 16*V`` and 8 bytes/cross-arc exactly.
-    fb = state.cf.dtype.itemsize
-    lb = state.d.dtype.itemsize
+    # per value family at the build-selected storage dtypes: the [V,E] page
+    # is one flow array (cf), two int32 topology arrays (nbr/rev) and one
+    # mask (emask); the [V] vectors are two flow (sink_cf/excess), one label
+    # (d) and one mask (vmask).  All-int32 this is the historical
+    # ``16*V*E + 16*V`` and 8 bytes/cross-arc exactly.  Computable from the
+    # meta alone so the streaming executor can account pages without ever
+    # materializing a FlowState.
+    fb = np.dtype(meta.flow_dtype).itemsize
+    lb = np.dtype(meta.label_dtype).itemsize
     mb = 1 if (fb < 4 or lb < 4) else 4
-    page_bytes = ((fb + 2 * 4 + mb) * state.cf[0].size
-                  + (2 * fb + lb + mb) * state.excess[0].size)
+    V, E = meta.region_size, meta.max_degree
+    page_bytes = (fb + 2 * 4 + mb) * V * E + (2 * fb + lb + mb) * V
     return page_bytes, (fb + lb) * meta.num_cross_arcs
 
 
@@ -434,7 +447,7 @@ def _solve_device_resident(meta: GraphMeta, state: FlowState,
     bound = sweep_bound(meta, cfg)
     max_sweeps = cfg.max_sweeps if cfg.max_sweeps is not None else bound
     R = cfg.stats_ring_size
-    page_bytes, msg_bytes = _page_and_msg_bytes(meta, state)
+    page_bytes, msg_bytes = _page_and_msg_bytes(meta)
 
     carry0 = None
     seed_syncs = 0
@@ -580,6 +593,7 @@ def solve(meta: GraphMeta, state: FlowState, cfg: SweepConfig | None = None,
                                    dtypes=meta.kernel_dtypes)
     if note is not None and note not in stats.degraded:
         stats.degraded.append(note)
+    stats.num_boundary = meta.num_boundary
     return state, stats
 
 
@@ -588,7 +602,7 @@ def _solve_host(meta: GraphMeta, state: FlowState, cfg: SweepConfig, ex, *,
     """Host-loop solve with checkpoint capture at every sweep boundary."""
     bound = sweep_bound(meta, cfg)
     max_sweeps = cfg.max_sweeps if cfg.max_sweeps is not None else bound
-    page_bytes, msg_bytes = _page_and_msg_bytes(meta, state)
+    page_bytes, msg_bytes = _page_and_msg_bytes(meta)
 
     seed = None
     start = 0

@@ -26,6 +26,8 @@ equality).
 
 from __future__ import annotations
 
+import shutil
+import tempfile
 from pathlib import Path
 
 import numpy as np
@@ -123,6 +125,327 @@ def read_dimacs(source) -> Problem:
     # INF_CAP would corrupt the solver's int32 arithmetic mid-solve)
     validate_problem(problem, context="DIMACS input")
     return problem
+
+
+# --------------------------------------------------------------------------
+# streaming sharded reader: DIMACS -> per-region shards, single pass
+# --------------------------------------------------------------------------
+
+# one directed arc record as staged on disk during the sharded parse
+_REC_FIELDS = 7   # row_local, slot, nbr_region, nbr_local, rev_slot, cap,
+#                   is_tail (1 on the record carrying the arc's capacity)
+
+
+class ShardedDimacs:
+    """A DIMACS instance parsed straight into per-region shards.
+
+    Produced by :func:`read_dimacs_sharded`; never holds the full edge
+    list — per-region directed-arc records are spilled to disk as the
+    single parse pass emits them, and only O(n) terminal/degree vectors
+    plus the O(|cross|) cross-arc tables stay in memory.
+
+    ``to_stream(cfg)`` assembles the spill-pool ``StreamState`` one
+    region at a time (the out-of-core ingest path);  ``to_problem()``
+    reconstructs the canonical flat ``Problem`` — bit-identical to
+    ``read_dimacs`` on the same file (the small-file round-trip oracle:
+    it *does* materialize the edge list, so use it only to verify).
+
+    Unlike ``read_dimacs``, mutually-reverse and parallel directed arcs
+    are NOT merged into shared undirected edges on the streaming path
+    (merging needs the whole edge list at once); each file arc becomes
+    its own edge with a zero-capacity reverse side.  The residual
+    network — hence every flow value — is identical either way.
+    """
+
+    def __init__(self, num_regions: int, part: np.ndarray,
+                 local_id: np.ndarray, directory: Path, own_dir: bool):
+        self.num_regions = num_regions
+        self.part = part
+        self.local_id = local_id
+        self.directory = directory
+        self._own_dir = own_dir
+        n = len(part)
+        self.num_vertices = n
+        self.excess = np.zeros(n, np.int64)
+        self.sink_cap = np.zeros(n, np.int64)
+        self.slot_ctr = np.zeros(n, np.int64)     # per-vertex next arc slot
+        self.mass = 0                             # running flow_mass
+        self.cross_src: list = []                 # build-order (2i, 2i+1)
+        self.cross_dst: list = []
+        self.num_arcs = 0                         # kept edge records / 2
+        self._buf: list[list] = [[] for _ in range(num_regions)]
+        self._counts = np.zeros(num_regions, np.int64)
+
+    # -- spill plumbing -----------------------------------------------------
+
+    def _shard_path(self, r: int) -> Path:
+        return self.directory / f"shard_{r:05d}.rec"
+
+    def _push(self, r: int, rec: tuple) -> None:
+        self._buf[r].append(rec)
+        self._counts[r] += 1
+        if len(self._buf[r]) >= 65536:
+            self._flush(r)
+
+    def _flush(self, r: int) -> None:
+        if self._buf[r]:
+            with open(self._shard_path(r), "ab") as f:
+                f.write(np.asarray(self._buf[r], np.int32).tobytes())
+            self._buf[r] = []
+
+    def _records(self, r: int) -> np.ndarray:
+        self._flush(r)
+        path = self._shard_path(r)
+        raw = path.read_bytes() if path.exists() else b""
+        return np.frombuffer(raw, np.int32).reshape(-1, _REC_FIELDS)
+
+    def close(self) -> None:
+        if self._own_dir:
+            shutil.rmtree(self.directory, ignore_errors=True)
+
+    # -- assembly -----------------------------------------------------------
+
+    def _tables(self):
+        X = max(1, len(self.cross_src))
+        cs = np.zeros((X, 3), np.int32)
+        cd = np.zeros((X, 3), np.int32)
+        cv = np.zeros(X, bool)
+        if self.cross_src:
+            cs[: len(self.cross_src)] = np.asarray(self.cross_src, np.int32)
+            cd[: len(self.cross_dst)] = np.asarray(self.cross_dst, np.int32)
+            cv[: len(self.cross_src)] = True
+        return cs, cd, cv
+
+    def to_stream(self, cfg, *, spill_dir=None, max_resident_regions: int = 2,
+                  prefetch: bool = True, dtype_policy: str = "int32"):
+        """Assemble the spill-pool ``stream.StreamState``, one region's
+        [V, E] slabs in memory at a time."""
+        from repro.core import dtypes as _dt
+        from repro.core.graph import GraphMeta
+        from repro.stream.boundary import BoundaryState, make_plan
+        from repro.stream.executor import StreamState
+        from repro.stream.store import StreamStore
+
+        n, K = self.num_vertices, self.num_regions
+        region_count = np.bincount(self.part, minlength=K)
+        V = max(1, int(region_count.max()) if n else 0)
+        E = max(1, int(self.slot_ctr.max()) if n else 1)
+        cs, cd, cv = self._tables()
+        plan = make_plan(cs, cd, cv, K)
+        kd = _dt.select_dtypes(dtype_policy, mass=self.mass,
+                               bound=_dt.label_bound(n, V))
+        keys = {(int(cs[x, 0]), int(cd[x, 0]), int(cd[x, 1]))
+                for x in range(len(self.cross_src))}
+        meta = GraphMeta(
+            num_regions=K, region_size=V, max_degree=E, num_vertices=n,
+            num_boundary=plan.num_boundary, num_cross_arcs=len(cv),
+            num_ghost_groups=max(1, len(keys)),
+            d_inf_ard=max(1, plan.num_boundary), d_inf_prd=max(1, n),
+            label_dtype=kd.label, flow_dtype=kd.flow, mask_dtype=kd.mask)
+
+        store = StreamStore(K, spill_dir, max_resident=max_resident_regions,
+                            prefetch=prefetch)
+        bnd = BoundaryState.zeros(plan, kd.label_np, kd.flow_np)
+        ss = StreamState(meta=meta, cfg=cfg, store=store, plan=plan, bnd=bnd)
+        for r in range(K):
+            rec = self._records(r)
+            nbr_region = np.zeros((V, E), np.int32)
+            nbr_local = np.zeros((V, E), np.int32)
+            rev_slot = np.zeros((V, E), np.int32)
+            emask = np.zeros((V, E), bool)
+            cf = np.zeros((V, E), kd.flow_np)
+            row, slot = rec[:, 0], rec[:, 1]
+            nbr_region[row, slot] = rec[:, 2]
+            nbr_local[row, slot] = rec[:, 3]
+            rev_slot[row, slot] = rec[:, 4]
+            emask[row, slot] = True
+            cf[row, slot] = rec[:, 5].astype(kd.flow_np)
+            sel = np.nonzero(self.part == r)[0]
+            locs = self.local_id[sel]
+            vmask = np.zeros(V, bool)
+            vmask[locs] = True
+            sink_cf = np.zeros(V, kd.flow_np)
+            sink_cf[locs] = self.sink_cap[sel].astype(kd.flow_np)
+            excess = np.zeros(V, kd.flow_np)
+            excess[locs] = self.excess[sel].astype(kd.flow_np)
+            is_boundary = np.zeros(V, bool)
+            is_boundary[plan.bnd_local[r]] = True
+            topo = {"nbr_region": nbr_region, "nbr_local": nbr_local,
+                    "rev_slot": rev_slot, "emask": emask, "vmask": vmask,
+                    "is_boundary": is_boundary}
+            flow = {"cf": cf, "sink_cf": sink_cf, "excess": excess,
+                    "d": np.zeros(V, kd.label_np)}
+            store.put_region(r, topo, flow)
+            bnd.absorb_region(plan, r, flow, is_boundary, vmask, ss.d_inf)
+        return ss
+
+    def to_problem(self) -> Problem:
+        """Reconstruct the canonical flat ``Problem`` — bit-identical to
+        ``read_dimacs`` of the same file (materializes the edge list:
+        the small-file verification path, not the out-of-core one)."""
+        n, K = self.num_vertices, self.num_regions
+        V = max(1, int(np.bincount(self.part, minlength=K).max()) if n else 0)
+        lut = np.full(K * V, -1, np.int64)
+        lut[self.part * V + self.local_id] = np.arange(n)
+        directed: dict[tuple[int, int], int] = {}
+        for r in range(K):
+            rec = self._records(r)
+            tails = rec[rec[:, 6] == 1]
+            gu = lut[r * V + tails[:, 0].astype(np.int64)]
+            gv = lut[tails[:, 2].astype(np.int64) * V + tails[:, 3]]
+            for u, v, c in zip(gu, gv, tails[:, 5]):
+                directed[(int(u), int(v))] = \
+                    directed.get((int(u), int(v)), 0) + int(c)
+        pairs = sorted({(min(u, v), max(u, v)) for u, v in directed})
+        edges = np.asarray(pairs, np.int64).reshape(-1, 2)
+        cap_fwd = np.asarray([directed.get((u, v), 0) for u, v in pairs],
+                             np.int64)
+        cap_bwd = np.asarray([directed.get((v, u), 0) for u, v in pairs],
+                             np.int64)
+        problem = Problem(num_vertices=n, edges=edges,
+                          cap_fwd=cap_fwd.astype(np.int32),
+                          cap_bwd=cap_bwd.astype(np.int32),
+                          excess=self.excess.astype(np.int32),
+                          sink_cap=self.sink_cap.astype(np.int32))
+        validate_problem(problem, context="DIMACS input")
+        return problem
+
+
+def _iter_dimacs_lines(source):
+    if hasattr(source, "read"):
+        yield from source
+        return
+    s = str(source)
+    if "\n" in s:
+        yield from s.splitlines()
+        return
+    with open(s, "r") as f:         # a path: stream, never read_text
+        yield from f
+
+
+def read_dimacs_sharded(source, part, *, directory=None) -> ShardedDimacs:
+    """Single-pass chunked DIMACS parse into per-region shards.
+
+    ``part`` — region id per dense vertex: an array of length
+    ``n_declared - 2``, a callable ``part(n) -> array`` (the vertex count
+    is only known once the ``p max`` line is read), or an int K (the
+    node-number fallback partitioner).  ``directory`` — where the shard
+    record files go (a temp dir deleted by ``close()`` when omitted).
+
+    Terminal designators must precede the first arc line (true of every
+    DIMACS writer in the benchmark families).  Memory stays at O(n)
+    vectors + O(|cross arcs|) tables + one bounded flush buffer per
+    region, independent of the arc count.
+    """
+    from repro.core.graph import _stable_cumcount
+    from repro.core.partition import block_partition
+
+    own_dir = directory is None
+    directory = Path(tempfile.mkdtemp(prefix="dimacs_shards_")) \
+        if own_dir else Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+
+    n_decl = None
+    src_id = sink_id = None
+    sd: ShardedDimacs | None = None
+    part_arr = local = None
+
+    for ln, line in enumerate(_iter_dimacs_lines(source), 1):
+        tok = line.split()
+        if not tok or tok[0] == "c":
+            continue
+        if tok[0] == "p":
+            assert len(tok) == 4 and tok[1] == "max", \
+                f"line {ln}: expected 'p max <n> <m>', got {line!r}"
+            n_decl = int(tok[2])
+        elif tok[0] == "n":
+            assert len(tok) == 3, f"line {ln}: bad node designator {line!r}"
+            assert sd is None, \
+                f"line {ln}: designator after the first arc (the sharded " \
+                f"reader needs terminals up front)"
+            if tok[2] == "s":
+                src_id = int(tok[1])
+            elif tok[2] == "t":
+                sink_id = int(tok[1])
+            else:
+                raise ValueError(f"line {ln}: unknown designator {tok[2]!r}")
+        elif tok[0] == "a":
+            assert len(tok) == 4, f"line {ln}: bad arc {line!r}"
+            if sd is None:
+                assert n_decl is not None, "missing 'p max' problem line"
+                assert src_id is not None and sink_id is not None, \
+                    "missing source/sink designators before the first arc"
+                assert src_id != sink_id
+                n = n_decl - 2
+                if callable(part):
+                    part_arr = np.asarray(part(n), np.int64)
+                elif np.ndim(part) == 0:
+                    part_arr = block_partition(n, int(part)).astype(np.int64)
+                else:
+                    part_arr = np.asarray(part, np.int64)
+                assert part_arr.shape == (n,)
+                local = _stable_cumcount(part_arr)
+                K = int(part_arr.max()) + 1 if n else 1
+                sd = ShardedDimacs(K, part_arr, local, directory, own_dir)
+            u, v, c = int(tok[1]), int(tok[2]), int(tok[3])
+            assert c >= 0, f"negative capacity on arc ({u}, {v})"
+            assert 1 <= u <= n_decl and 1 <= v <= n_decl, \
+                f"arc ({u}, {v}) outside the declared node range"
+            if u == v or v == src_id or u == sink_id:
+                continue
+            if u == src_id and v == sink_id:
+                raise NotImplementedError(
+                    "direct source->sink arcs are not representable in "
+                    "the excess/sink_cap form")
+            sd.mass += c
+            if u == src_id:
+                sd.excess[_dense_id(v, src_id, sink_id)] += c
+                continue
+            if v == sink_id:
+                sd.sink_cap[_dense_id(u, src_id, sink_id)] += c
+                continue
+            du = _dense_id(u, src_id, sink_id)
+            dv = _dense_id(v, src_id, sink_id)
+            ru, rv = int(part_arr[du]), int(part_arr[dv])
+            lu, lv = int(local[du]), int(local[dv])
+            su = int(sd.slot_ctr[du])
+            sv = int(sd.slot_ctr[dv])
+            sd.slot_ctr[du] += 1
+            sd.slot_ctr[dv] += 1
+            sd._push(ru, (lu, su, rv, lv, sv, c, 1))
+            sd._push(rv, (lv, sv, ru, lu, su, 0, 0))
+            if ru != rv:
+                a = (ru, lu, su)
+                b = (rv, lv, sv)
+                sd.cross_src += [a, b]
+                sd.cross_dst += [b, a]
+            sd.num_arcs += 1
+        else:
+            raise ValueError(f"line {ln}: unknown record {tok[0]!r}")
+
+    assert n_decl is not None, "missing 'p max' problem line"
+    if sd is None:                       # arcless instance
+        assert src_id is not None and sink_id is not None, \
+            "missing source/sink designators"
+        n = n_decl - 2
+        if callable(part):
+            part_arr = np.asarray(part(n), np.int64)
+        elif np.ndim(part) == 0:
+            part_arr = block_partition(n, int(part)).astype(np.int64)
+        else:
+            part_arr = np.asarray(part, np.int64)
+        local = _stable_cumcount(part_arr)
+        K = int(part_arr.max()) + 1 if n else 1
+        sd = ShardedDimacs(K, part_arr, local, directory, own_dir)
+    for r in range(sd.num_regions):
+        sd._flush(r)
+    return sd
+
+
+def _dense_id(u: int, src_id: int, sink_id: int) -> int:
+    """1-based file id -> dense 0-based vertex id with terminals removed
+    (matches ``read_dimacs``'s increasing-id mapping)."""
+    return u - 1 - (u > src_id) - (u > sink_id)
 
 
 def write_dimacs(problem: Problem, dest=None) -> str:

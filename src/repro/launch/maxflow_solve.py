@@ -31,6 +31,15 @@ network on device; the solve continues from the warm preflow):
 Prints per-re-solve sweeps/launches and the session's compile-cache
 hits/misses (steady state: zero retraces per cycle).
 
+Out-of-core streaming mode stages regions one at a time from a disk
+spill pool, so instances bigger than device memory solve with at most
+``--max-resident-regions`` region states in memory (bit-identical to the
+sequential in-memory sweep):
+
+    PYTHONPATH=src python -m repro.launch.maxflow_solve \
+        --height 1024 --width 1024 --regions 4x4 --streaming \
+        --max-resident-regions 2 [--spill-dir /scratch/pool]
+
 Fault tolerance: ``--checkpoint-dir DIR [--checkpoint-every N]`` captures
 resumable sweep-boundary checkpoints during the solve; ``--resume``
 continues bit-exactly from the latest one after a kill/preemption
@@ -58,6 +67,23 @@ def main():
     ap.add_argument("--method", choices=["ard", "prd"], default="ard")
     ap.add_argument("--sequential", action="store_true")
     ap.add_argument("--sharded", action="store_true")
+    ap.add_argument("--streaming", action="store_true",
+                    help="out-of-core route (repro.stream): stage regions "
+                         "one at a time from a disk spill pool, keeping at "
+                         "most --max-resident-regions region states in "
+                         "memory and only the |B|-sized boundary layer "
+                         "between visits; implies the sequential sweep "
+                         "without the global gap heuristic")
+    ap.add_argument("--max-resident-regions", type=int, default=2,
+                    metavar="R",
+                    help="streaming route: LRU resident-set size in regions "
+                         "(default 2: the discharging region + the "
+                         "prefetched next)")
+    ap.add_argument("--spill-dir", default=None, metavar="DIR",
+                    help="streaming route: durable spill-pool directory "
+                         "(kill-resume needs the pool to outlive the "
+                         "process); default: a temp dir deleted after the "
+                         "solve")
     ap.add_argument("--engine-backend", choices=list(ENGINE_BACKENDS),
                     default="xla",
                     help="discharge-engine compute phase: dense XLA rows or "
@@ -129,7 +155,16 @@ def main():
     from repro.data.grids import synthetic_grid
 
     ry, rx = (int(v) for v in args.regions.split("x"))
-    cfg = SweepConfig(method=args.method, parallel=not args.sequential,
+    if args.streaming:
+        if args.sharded:
+            ap.error("--streaming and --sharded are mutually exclusive "
+                     "routes")
+        if not args.sequential:
+            print("[maxflow] --streaming implies the sequential sweep "
+                  "without the global gap heuristic (Alg. 1 staged order)")
+    cfg = SweepConfig(method=args.method,
+                      parallel=not (args.sequential or args.streaming),
+                      use_global_gap=not args.streaming,
                       engine_backend=args.engine_backend,
                       engine_chunk_iters=args.engine_chunk_iters,
                       device_resident=args.device_resident,
@@ -210,7 +245,10 @@ def main():
 
     solver = Solver(SolverOptions.from_sweep_config(
         cfg, num_regions=ry * rx, check=not args.no_check,
-        dtype_policy=args.dtype_policy, autotune=args.autotune))
+        dtype_policy=args.dtype_policy, autotune=args.autotune,
+        streaming=args.streaming,
+        max_resident_regions=args.max_resident_regions,
+        spill_dir=args.spill_dir))
     handle = solver.prepare(prob, part)
 
     mesh = None
@@ -224,6 +262,8 @@ def main():
     res = handle.solve(mesh=mesh, checkpoint=checkpoint,
                        resume_from=resume_from)
     route = (f"sharded x{len(jax.devices())}" if args.sharded
+             else f"streaming(resident={args.max_resident_regions})"
+             if args.streaming
              else f"device_resident={cfg.device_resident}")
     kd = handle.meta.kernel_dtypes
     print(f"[maxflow] {args.method} parallel={cfg.parallel} {route} "
@@ -234,6 +274,10 @@ def main():
           f"boundary_bytes={res.stats.boundary_bytes} "
           f"page_bytes={res.stats.page_bytes} "
           f"t={time.time()-t0:.2f}s")
+    if args.streaming:
+        print(f"[maxflow]   staged_in={res.stats.staged_in_bytes} "
+              f"staged_out={res.stats.staged_out_bytes} "
+              f"|B|={res.stats.num_boundary}")
 
     rng = np.random.RandomState(args.seed + 1)
     m = len(handle.problem.edges)

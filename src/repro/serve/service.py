@@ -524,7 +524,7 @@ class MaxflowService:
             flow_to_t=bstate.flow_to_t[b])
         sw = int(sweeps[b])
         converged = bool(n_act[b] == 0)
-        page_bytes, msg_bytes = _sweep._page_and_msg_bytes(meta, h.state0)
+        page_bytes, msg_bytes = _sweep._page_and_msg_bytes(meta)
         stats = _sweep.SweepStats(
             sweeps=sw, engine_iters=int(iters[b]),
             engine_launches=launches, host_syncs=bucket.syncs,

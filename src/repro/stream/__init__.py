@@ -1,0 +1,27 @@
+"""Out-of-core streaming executor: regions staged one at a time.
+
+The fourth executor route (``core.executor.StreamingExecutor``) solves
+instances bigger than device memory by keeping at most
+``max_resident_regions`` region states in memory, spilling the rest to a
+disk pool and exchanging only |B|-sized boundary messages between region
+visits — the paper's sequential sweep (Alg. 1) made out-of-core.
+
+Modules:
+
+* ``store``    — spill pool, LRU resident set, background prefetch
+* ``boundary`` — |B|-sized boundary exchange layer + pending-flow ledger
+* ``executor`` — staged sweep loop, solve driver, checkpoint/resume
+* ``build``    — shard-wise build (never materializes [K, V, E])
+"""
+
+from repro.stream.boundary import BoundaryPlan, BoundaryState, make_plan
+from repro.stream.build import build_stream
+from repro.stream.executor import (StreamState, assemble_state, open_stream,
+                                   solve_stream, stream_sweep, trace_count)
+from repro.stream.store import StreamStore
+
+__all__ = [
+    "BoundaryPlan", "BoundaryState", "make_plan", "build_stream",
+    "StreamState", "assemble_state", "open_stream", "solve_stream",
+    "stream_sweep", "trace_count", "StreamStore",
+]

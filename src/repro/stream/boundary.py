@@ -1,0 +1,170 @@
+"""Boundary exchange layer of the streaming executor.
+
+Between region visits the ONLY state in memory is |B|-sized (plus the
+O(|cross arcs|) pending-flow ledger): the boundary vertices' labels and
+excess, and the flow pushed across the cut that the receiving region has
+not staged in yet.  This is the paper's streaming invariant — "regions
+are loaded into the memory one-by-one" — made literal: everything a
+discharge needs about the rest of the graph is the ghost labels of its
+cross arcs, and everything it tells the rest of the graph is the flow it
+pushed over them.
+
+Correctness relies on two facts about the sequential sweep (Alg. 1):
+
+* cross-arc endpoints are boundary vertices by construction, so interior
+  excess/labels of a region can only change while that region is being
+  discharged — a per-region interior-active counter updated at writeback
+  time stays exact between visits;
+* a pushed boundary flow raises the receiver's excess immediately
+  (``e_B``) while the arc-level residual update can be parked in ``pend``
+  until the receiving region is staged in — applying it at load time is
+  bit-identical to the resident sweep's immediate ``_apply_cross_flow``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class BoundaryPlan:
+    """Static index tables tying the cross-arc table to boundary ids.
+
+    Boundary vertices get global ids ("bids") in (region, local) order.
+    Per region r: ``bnd_local[r]``/``bnd_bid[r]`` name its boundary
+    vertices; the *out* tables index the valid cross arcs sourced in r
+    (arc slot in r's [V,E] rows + the receiver's bid); the *in* tables
+    index the arcs terminating in r (the slots ``pend`` flushes into at
+    load time).  Everything is O(|B| + |cross arcs|) — never O(n).
+    """
+
+    num_regions: int
+    num_boundary: int
+    num_cross: int                      # valid cross arcs (pend length)
+    bnd_local: list = field(default_factory=list)   # [K] i64[b_r]
+    bnd_bid: list = field(default_factory=list)     # [K] i64[b_r]
+    out_x: list = field(default_factory=list)       # [K] i64 -> pend index
+    out_l: list = field(default_factory=list)       # [K] source local id
+    out_s: list = field(default_factory=list)       # [K] source arc slot
+    out_dst_bid: list = field(default_factory=list)  # [K] receiver bid
+    in_x: list = field(default_factory=list)        # [K] i64 -> pend index
+    in_l: list = field(default_factory=list)        # [K] receiver local id
+    in_s: list = field(default_factory=list)        # [K] receiver arc slot
+
+
+def make_plan(cross_src: np.ndarray, cross_dst: np.ndarray,
+              cross_valid: np.ndarray, num_regions: int) -> BoundaryPlan:
+    """Derive the boundary plan from the build-time cross tables."""
+    cross_src = np.asarray(cross_src)
+    cross_dst = np.asarray(cross_dst)
+    xs = np.nonzero(np.asarray(cross_valid))[0]
+    src = cross_src[xs].astype(np.int64)
+    dst = cross_dst[xs].astype(np.int64)
+    K = num_regions
+
+    # bids in (region, local) order over the union of cross endpoints
+    pairs = np.concatenate([src[:, :2], dst[:, :2]], axis=0)
+    if len(pairs) == 0:
+        uniq = np.zeros((0, 2), dtype=np.int64)
+    else:
+        flat = pairs[:, 0] * (pairs[:, 1].max() + 1) + pairs[:, 1]
+        _, first = np.unique(flat, return_index=True)
+        uniq = pairs[np.sort(first)]
+        order = np.lexsort((uniq[:, 1], uniq[:, 0]))
+        uniq = uniq[order]
+    nb = len(uniq)
+    region_of = uniq[:, 0]
+    starts = np.searchsorted(region_of, np.arange(K + 1))
+
+    def bid_of(region: np.ndarray, local: np.ndarray) -> np.ndarray:
+        out = np.empty(len(region), dtype=np.int64)
+        for r in range(K):
+            sel = region == r
+            if not sel.any():
+                continue
+            locals_r = uniq[starts[r]:starts[r + 1], 1]
+            out[sel] = starts[r] + np.searchsorted(locals_r, local[sel])
+        return out
+
+    plan = BoundaryPlan(num_regions=K, num_boundary=nb, num_cross=len(xs))
+    dst_bid_all = bid_of(dst[:, 0], dst[:, 1])
+    for r in range(K):
+        locals_r = uniq[starts[r]:starts[r + 1], 1]
+        plan.bnd_local.append(locals_r.copy())
+        plan.bnd_bid.append(np.arange(starts[r], starts[r + 1],
+                                      dtype=np.int64))
+        o = np.nonzero(src[:, 0] == r)[0]
+        plan.out_x.append(o)
+        plan.out_l.append(src[o, 1])
+        plan.out_s.append(src[o, 2])
+        plan.out_dst_bid.append(dst_bid_all[o])
+        i = np.nonzero(dst[:, 0] == r)[0]
+        plan.in_x.append(i)
+        plan.in_l.append(dst[i, 1])
+        plan.in_s.append(dst[i, 2])
+    return plan
+
+
+@dataclass
+class BoundaryState:
+    """The mutable between-visit state: |B| labels/excess + pending flow.
+
+    ``e_B`` is authoritative for boundary excess (receivers' excess rises
+    the moment a push happens); ``pend[x]`` holds the receiver-side
+    residual increment of valid cross arc x until its region stages in.
+    ``interior_active[r]`` counts active non-boundary vertices of r as of
+    its last writeback — exact between visits (see module docstring).
+    """
+
+    d_B: np.ndarray              # label dtype [NB]
+    e_B: np.ndarray              # flow dtype  [NB]
+    pend: np.ndarray             # flow dtype  [num_cross]
+    interior_active: np.ndarray  # i64 [K]
+    flow_to_t: int = 0
+
+    @classmethod
+    def zeros(cls, plan: BoundaryPlan, label_np, flow_np) -> "BoundaryState":
+        return cls(
+            d_B=np.zeros(plan.num_boundary, dtype=label_np),
+            e_B=np.zeros(plan.num_boundary, dtype=flow_np),
+            pend=np.zeros(plan.num_cross, dtype=flow_np),
+            interior_active=np.zeros(plan.num_regions, dtype=np.int64))
+
+    def absorb_region(self, plan: BoundaryPlan, r: int, flow: dict,
+                      is_boundary: np.ndarray, vmask: np.ndarray,
+                      d_inf: int) -> None:
+        """Refresh the boundary view of region r from its staged arrays
+        (initial spill and post-discharge writeback share this)."""
+        bl, bb = plan.bnd_local[r], plan.bnd_bid[r]
+        self.d_B[bb] = flow["d"][bl]
+        self.e_B[bb] = flow["excess"][bl]
+        self.interior_active[r] = int(
+            ((flow["excess"] > 0) & (flow["d"] < d_inf)
+             & vmask & ~is_boundary).sum())
+
+    def region_active(self, r: int, plan: BoundaryPlan, d_inf: int) -> bool:
+        """The Alg. 1 skip test without staging the region in."""
+        if self.interior_active[r] > 0:
+            return True
+        bb = plan.bnd_bid[r]
+        return bool(((self.e_B[bb] > 0) & (self.d_B[bb] < d_inf)).any())
+
+    def num_active(self, d_inf: int) -> int:
+        return int(self.interior_active.sum()) + int(
+            ((self.e_B > 0) & (self.d_B < d_inf)).sum())
+
+    def payload(self) -> dict:
+        """Checkpoint payload (everything but the spill pool itself)."""
+        return {"d_B": self.d_B, "e_B": self.e_B, "pend": self.pend,
+                "interior_active": self.interior_active,
+                "flow_to_t": np.asarray(self.flow_to_t, np.int64)}
+
+    def restore(self, payload: dict) -> None:
+        self.d_B = np.asarray(payload["d_B"], dtype=self.d_B.dtype)
+        self.e_B = np.asarray(payload["e_B"], dtype=self.e_B.dtype)
+        self.pend = np.asarray(payload["pend"], dtype=self.pend.dtype)
+        self.interior_active = np.asarray(payload["interior_active"],
+                                          dtype=np.int64)
+        self.flow_to_t = int(payload["flow_to_t"])

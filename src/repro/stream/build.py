@@ -1,0 +1,176 @@
+"""Shard-wise build: a ``Problem`` -> spill pool, one region at a time.
+
+``core.graph.build`` materializes the full ``[K, V, E]`` topology and
+flow arrays — exactly what an out-of-core solve must avoid.  This build
+produces the SAME layout region by region (bit-identical slabs: local
+ids and arc slots come from the same stable-cumcount derivation, see
+``graph._stable_cumcount``) while only ever holding
+
+* O(n + m) 1-D index vectors (the problem description itself), and
+* ONE region's [V, E] slabs at a time, written straight to the pool.
+
+The returned ``GraphMeta`` is field-identical to ``build``'s, so solve
+fingerprints, sweep bounds and dtype selection agree across the resident
+and streaming entries.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import dtypes as _dt
+from repro.core.graph import GraphMeta, _check_problem, _stable_cumcount
+from repro.stream.boundary import BoundaryState, make_plan
+from repro.stream.store import StreamStore
+
+
+def build_stream(problem, part, cfg, *, spill_dir=None,
+                 max_resident_regions: int = 2, prefetch: bool = True,
+                 dtype_policy: str = "int32"):
+    """Block a flat problem straight into a spill pool.
+
+    Returns a ready-to-solve ``stream.StreamState`` — hand it to
+    ``stream.solve_stream``.  Layout-compatible with ``core.build``: the
+    same partition yields byte-identical per-region slabs.
+    """
+    from repro.stream.executor import StreamState
+
+    _check_problem(problem)
+    n = problem.num_vertices
+    part = np.asarray(part, dtype=np.int64)
+    assert part.shape == (n,)
+    K = int(part.max()) + 1 if n else 1
+    local_id = _stable_cumcount(part)
+    region_count = np.bincount(part, minlength=K)
+    V = max(1, int(region_count.max()) if n else 0)
+
+    u_arr = problem.edges[:, 0]
+    v_arr = problem.edges[:, 1]
+    m = len(problem.edges)
+    deg = np.zeros(n, dtype=np.int64)
+    np.add.at(deg, u_arr, 1)
+    np.add.at(deg, v_arr, 1)
+    E = max(1, int(deg.max()) if n else 1)
+    del deg
+
+    occ = np.empty(2 * m, dtype=np.int64)
+    occ[0::2] = u_arr
+    occ[1::2] = v_arr
+    cc = _stable_cumcount(occ)
+    del occ
+    slot_u = cc[0::2].astype(np.int32)
+    slot_v = cc[1::2].astype(np.int32)
+    del cc
+
+    ru = part[u_arr].astype(np.int32)
+    rv = part[v_arr].astype(np.int32)
+
+    # the flat cross-arc table (mutual-reverse pairs at (2i, 2i+1)) —
+    # O(|cross arcs|), kept in memory like the boundary layer itself
+    cross = np.nonzero(ru != rv)[0]
+    nc = len(cross)
+    X = max(1, 2 * nc)
+    cross_src = np.zeros((X, 3), dtype=np.int32)
+    cross_dst = np.zeros((X, 3), dtype=np.int32)
+    cross_valid = np.zeros(X, dtype=bool)
+    num_groups = 1
+    if nc:
+        a = np.column_stack([ru[cross], local_id[u_arr[cross]],
+                             slot_u[cross]]).astype(np.int32)
+        b = np.column_stack([rv[cross], local_id[v_arr[cross]],
+                             slot_v[cross]]).astype(np.int32)
+        cross_src[0:2 * nc:2] = a
+        cross_src[1:2 * nc:2] = b
+        cross_dst[0:2 * nc:2] = b
+        cross_dst[1:2 * nc:2] = a
+        cross_valid[:2 * nc] = True
+        keys = (cross_src[:2 * nc, 0].astype(np.int64) * (K * V)
+                + cross_dst[:2 * nc, 0].astype(np.int64) * V
+                + cross_dst[:2 * nc, 1])
+        num_groups = max(1, len(np.unique(keys)))
+        del keys, a, b
+
+    plan = make_plan(cross_src, cross_dst, cross_valid, K)
+    num_boundary = plan.num_boundary
+
+    mass = _dt.flow_mass(problem)
+    bound = _dt.label_bound(n, V)
+    kd = _dt.select_dtypes(dtype_policy, mass=mass, bound=bound)
+    bad = _dt.narrow_violations(dtype_policy, mass=mass, bound=bound)
+    if bad:
+        from repro.core.graph import ProblemValidationError
+        family, dt, value, limit = bad[0]
+        raise ProblemValidationError(
+            f"invalid build: {family} range {value} exceeds the {dt} "
+            f"bound {limit} under dtype_policy='narrow'")
+
+    meta = GraphMeta(
+        num_regions=K, region_size=V, max_degree=E, num_vertices=n,
+        num_boundary=num_boundary, num_cross_arcs=X,
+        num_ghost_groups=num_groups, d_inf_ard=max(1, num_boundary),
+        d_inf_prd=max(1, n), label_dtype=kd.label, flow_dtype=kd.flow,
+        mask_dtype=kd.mask)
+
+    store = StreamStore(K, spill_dir, max_resident=max_resident_regions,
+                        prefetch=prefetch)
+    bnd = BoundaryState.zeros(plan, kd.label_np, kd.flow_np)
+    ss = StreamState(meta=meta, cfg=cfg, store=store, plan=plan, bnd=bnd)
+    d_inf = ss.d_inf
+
+    # directed-arc records in owner-region order: record 2i is u->v of
+    # edge i (owner u's row), 2i+1 is v->u.  Only the sort permutation is
+    # materialized; per-region columns are gathered from the 1-D problem
+    # vectors through it, one region at a time.
+    owner = np.empty(2 * m, dtype=np.int32)
+    owner[0::2] = ru
+    owner[1::2] = rv
+    del ru, rv
+    aorder = np.argsort(owner, kind="stable")
+    astarts = np.searchsorted(owner[aorder], np.arange(K + 1))
+    del owner
+    vorder = np.argsort(part, kind="stable")
+    vstarts = np.searchsorted(part[vorder], np.arange(K + 1))
+
+    for r in range(K):
+        sel = aorder[astarts[r]:astarts[r + 1]]
+        e = sel >> 1
+        fwd = (sel & 1) == 0                      # u->v records
+        row = np.where(fwd, local_id[u_arr[e]], local_id[v_arr[e]])
+        slot = np.where(fwd, slot_u[e], slot_v[e]).astype(np.int64)
+        nbrr = np.where(fwd, part[v_arr[e]], part[u_arr[e]])
+        nbrl = np.where(fwd, local_id[v_arr[e]], local_id[u_arr[e]])
+        rslot = np.where(fwd, slot_v[e], slot_u[e])
+        cap = np.where(fwd, problem.cap_fwd[e], problem.cap_bwd[e])
+
+        nbr_region = np.zeros((V, E), dtype=np.int32)
+        nbr_local = np.zeros((V, E), dtype=np.int32)
+        rev_slot = np.zeros((V, E), dtype=np.int32)
+        emask = np.zeros((V, E), dtype=bool)
+        cf = np.zeros((V, E), dtype=kd.flow_np)
+        nbr_region[row, slot] = nbrr.astype(np.int32)
+        nbr_local[row, slot] = nbrl.astype(np.int32)
+        rev_slot[row, slot] = rslot.astype(np.int32)
+        emask[row, slot] = True
+        cf[row, slot] = cap.astype(kd.flow_np)
+        del e, fwd, row, slot, nbrr, nbrl, rslot, cap, sel
+
+        vsel = vorder[vstarts[r]:vstarts[r + 1]]
+        locs = local_id[vsel]
+        vmask = np.zeros(V, dtype=bool)
+        vmask[locs] = True
+        sink_cf = np.zeros(V, dtype=kd.flow_np)
+        sink_cf[locs] = problem.sink_cap[vsel].astype(kd.flow_np)
+        excess = np.zeros(V, dtype=kd.flow_np)
+        excess[locs] = problem.excess[vsel].astype(kd.flow_np)
+        is_boundary = np.zeros(V, dtype=bool)
+        is_boundary[plan.bnd_local[r]] = True
+        d = np.zeros(V, dtype=kd.label_np)
+
+        topo = {"nbr_region": nbr_region, "nbr_local": nbr_local,
+                "rev_slot": rev_slot, "emask": emask, "vmask": vmask,
+                "is_boundary": is_boundary}
+        flow = {"cf": cf, "sink_cf": sink_cf, "excess": excess, "d": d}
+        store.put_region(r, topo, flow)
+        bnd.absorb_region(plan, r, flow, is_boundary, vmask, d_inf)
+
+    return ss

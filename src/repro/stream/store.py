@@ -1,0 +1,223 @@
+"""Disk-backed region store: spill pool + LRU resident set + prefetch.
+
+Each region's state lives on disk under its own pool directory, written
+through the atomic snapshot machinery of ``core.resilience`` (write to a
+temp dir, publish via ``os.rename`` — a crashed writer never corrupts
+the pool, which is what makes kill-and-resume safe):
+
+    <pool>/region_00007/topo/step_00000000/     immutable topology,
+                                                written once per solve
+    <pool>/region_00007/state/step_00000003/    mutable flow family at
+                                                version 3
+
+Writebacks are write-through (the new version is published before the
+visit moves on), so eviction from the resident set is free — no dirty
+pages, no flush ordering.  Versions only grow; ``protect`` pins the set
+a checkpoint references and ``_prune`` deletes everything else, so disk
+usage stays at O(current + one checkpoint) versions per region.
+
+The prefetcher is one background thread staging the next region's files
+into a side buffer while the current region discharges on device (the
+host-side analogue of the fused engine's double-buffered DMA).  The
+buffer is consumed only if its version is still current; writebacks
+happen on the main thread and only ever touch the *current* region, so
+the thread never races a writer.
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+import threading
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import resilience as _res
+
+TOPO_FIELDS = ("nbr_region", "nbr_local", "rev_slot", "emask",
+               "vmask", "is_boundary")
+FLOW_FIELDS = ("cf", "sink_cf", "excess", "d")
+
+
+def _nbytes(arrays: dict) -> int:
+    return sum(int(np.asarray(a).nbytes) for a in arrays.values())
+
+
+class StreamStore:
+    """Spill pool for one solve: K regions, ``max_resident`` in memory."""
+
+    def __init__(self, num_regions: int, directory: str | Path | None = None,
+                 *, max_resident: int = 2, prefetch: bool = True):
+        self.num_regions = num_regions
+        self._own_dir = directory is None
+        self.directory = Path(directory) if directory is not None \
+            else Path(tempfile.mkdtemp(prefix="stream_pool_"))
+        self.directory.mkdir(parents=True, exist_ok=True)
+        self.max_resident = max(1, int(max_resident))
+        self.prefetch_enabled = bool(prefetch)
+        self.versions = np.zeros(num_regions, dtype=np.int64)
+        self._protected = np.full(num_regions, -1, dtype=np.int64)
+        self._resident: dict[int, dict] = {}     # insertion order == LRU
+        # accounting (cumulative; the sweep driver reports per-sweep deltas)
+        self.staged_in_bytes = 0
+        self.staged_out_bytes = 0
+        self.loads = 0
+        self.disk_loads = 0
+        self.evictions = 0
+        self.prefetch_hits = 0
+        self.prefetch_wasted = 0
+        self._pf_thread: threading.Thread | None = None
+        self._pf_slot: dict | None = None
+
+    # -- pool layout --------------------------------------------------------
+
+    def _region_dir(self, r: int) -> Path:
+        return self.directory / f"region_{r:05d}"
+
+    def region_exists(self, r: int) -> bool:
+        return _res.snapshot_latest(self._region_dir(r) / "topo") is not None
+
+    # -- population (initial spill / shard-wise build) ----------------------
+
+    def put_region(self, r: int, topo: dict, flow: dict) -> None:
+        """Publish region r's initial version (topology + flow v0).
+
+        Setup cost, not sweep traffic: the per-sweep staged-bytes deltas
+        the driver reports start from whatever the counters hold after
+        population, so these writes never show up in ``SweepStats``.
+        """
+        _res.snapshot_save(self._region_dir(r) / "topo", 0,
+                           {k: np.asarray(v) for k, v in topo.items()})
+        _res.snapshot_save(self._region_dir(r) / "state", 0,
+                           {k: np.asarray(v) for k, v in flow.items()})
+        self.versions[r] = 0
+
+    def attach(self, versions: np.ndarray) -> None:
+        """Adopt an existing pool at the given per-region versions (the
+        checkpoint-resume entry; newer orphan versions a dead process
+        published after the checkpoint are pruned on the next writeback)."""
+        self.versions = np.asarray(versions, dtype=np.int64).copy()
+        self.protect(self.versions)
+        self._resident.clear()
+        self._drop_prefetch()
+
+    # -- staging ------------------------------------------------------------
+
+    def _read(self, r: int) -> dict:
+        topo, _ = _res._snapshot_arrays(self._region_dir(r) / "topo", 0)
+        flow, _ = _res._snapshot_arrays(self._region_dir(r) / "state",
+                                        int(self.versions[r]))
+        return {"topo": topo, "flow": flow, "version": int(self.versions[r]),
+                "bytes": _nbytes(topo) + _nbytes(flow)}
+
+    def load(self, r: int) -> tuple[dict, dict]:
+        """Stage region r in; returns ``(topo, flow)`` host arrays.
+
+        Resident hit: free.  Prefetch hit: the background read's bytes
+        count as staged in (they crossed the disk boundary), but no
+        foreground read happens.  Miss: synchronous read.
+        """
+        self.loads += 1
+        ent = self._resident.pop(r, None)
+        if ent is not None and ent["version"] == int(self.versions[r]):
+            self._resident[r] = ent              # LRU refresh
+            return ent["topo"], ent["flow"]
+        ent = self._take_prefetch(r)
+        if ent is None:
+            ent = self._read(r)
+            self.disk_loads += 1
+            self.staged_in_bytes += ent["bytes"]
+        self._insert(r, ent)
+        return ent["topo"], ent["flow"]
+
+    def writeback(self, r: int, flow: dict) -> int:
+        """Publish region r's next version (write-through); returns the
+        byte count staged out."""
+        flow = {k: np.asarray(v) for k, v in flow.items()}
+        self.versions[r] += 1
+        _res.snapshot_save(self._region_dir(r) / "state",
+                           int(self.versions[r]), flow)
+        nb = _nbytes(flow)
+        self.staged_out_bytes += nb
+        ent = self._resident.get(r)
+        if ent is not None:
+            ent["flow"] = flow
+            ent["version"] = int(self.versions[r])
+        self._prune(r)
+        return nb
+
+    def _insert(self, r: int, ent: dict) -> None:
+        self._resident[r] = ent
+        while len(self._resident) > self.max_resident:
+            lru = next(iter(self._resident))
+            del self._resident[lru]              # write-through: no flush
+            self.evictions += 1
+
+    # -- prefetch -----------------------------------------------------------
+
+    def prefetch(self, r: int | None) -> None:
+        """Start staging region r in the background (no-op when disabled,
+        already resident, or a prefetch is already in flight)."""
+        if (r is None or not self.prefetch_enabled
+                or r in self._resident or self._pf_thread is not None):
+            return
+        slot = {"r": r, "want_version": int(self.versions[r])}
+
+        def work():
+            try:
+                slot["ent"] = self._read(r)
+            except Exception as e:               # surfaced on consume
+                slot["error"] = e
+
+        self._pf_slot = slot
+        self._pf_thread = threading.Thread(target=work, daemon=True)
+        self._pf_thread.start()
+
+    def _take_prefetch(self, r: int) -> dict | None:
+        if self._pf_thread is None:
+            return None
+        self._pf_thread.join()
+        slot, self._pf_slot, self._pf_thread = self._pf_slot, None, None
+        if "error" in slot:
+            raise slot["error"]
+        ent = slot.get("ent")
+        if ent is None:
+            return None
+        self.staged_in_bytes += ent["bytes"]     # the read happened
+        self.disk_loads += 1
+        if slot["r"] != r or ent["version"] != int(self.versions[r]):
+            self.prefetch_wasted += 1
+            return None
+        self.prefetch_hits += 1
+        return ent
+
+    def _drop_prefetch(self) -> None:
+        if self._pf_thread is not None:
+            self._pf_thread.join()
+            self._pf_thread = None
+            self._pf_slot = None
+
+    # -- retention ----------------------------------------------------------
+
+    def protect(self, versions: np.ndarray) -> None:
+        """Pin one version per region (the latest checkpoint's) against
+        pruning, releasing the previously pinned set."""
+        self._protected = np.asarray(versions, dtype=np.int64).copy()
+
+    def _prune(self, r: int) -> None:
+        keep = {int(self.versions[r]), int(self._protected[r])}
+        state_dir = self._region_dir(r) / "state"
+        if not state_dir.exists():
+            return
+        for p in state_dir.iterdir():
+            if not p.name.startswith("step_") or p.name.endswith(".tmp"):
+                continue
+            if int(p.name[5:]) not in keep:
+                shutil.rmtree(p, ignore_errors=True)
+
+    def close(self) -> None:
+        self._drop_prefetch()
+        self._resident.clear()
+        if self._own_dir:
+            shutil.rmtree(self.directory, ignore_errors=True)

@@ -40,6 +40,12 @@ def assert_flow_conservation(meta, state, total0: int, where=""):
     _fail(_inv.check_flow_conservation(meta, state, total0), where)
 
 
+def assert_sweep_bound(meta, stats, *, ard: bool, where=""):
+    """Paper complexity bound: a converged solve took at most 2|B|^2 + 1
+    sweeps (ARD) / 2n^2 + 1 (PRD)."""
+    _fail(_inv.check_sweep_bound(meta, stats, ard=ard), where)
+
+
 def assert_region_labeling_valid(d, cf, sink_cf, *, intra, emask, vmask,
                                  nbr_local, ghost, d_inf, ard: bool):
     """Validity on one region's [V, E] view, by scalar loops.

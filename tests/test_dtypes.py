@@ -143,16 +143,16 @@ class TestByteAccounting:
         p, part = _small_problem()
         meta, state, _ = build(p, part)
         V, E = meta.region_size, meta.max_degree
-        page, msg = _page_and_msg_bytes(meta, state)
+        page, msg = _page_and_msg_bytes(meta)
         assert page == 16 * V * E + 16 * V
         assert msg == 8 * meta.num_cross_arcs
 
     def test_page_bytes_shrink_under_narrowing(self):
         p, part = _small_problem()
-        meta_w, st_w, _ = build(p, part)
-        meta_n, st_n, _ = build(p, part, dtype_policy="narrow")
-        page_w, msg_w = _page_and_msg_bytes(meta_w, st_w)
-        page_n, msg_n = _page_and_msg_bytes(meta_n, st_n)
+        meta_w, _, _ = build(p, part)
+        meta_n, _, _ = build(p, part, dtype_policy="narrow")
+        page_w, msg_w = _page_and_msg_bytes(meta_w)
+        page_n, msg_n = _page_and_msg_bytes(meta_n)
         # the int32 topology slabs (nbr/rev) never narrow, so the page
         # shrinks less than the value-only fused VMEM does (~36% here)
         assert page_n < 0.70 * page_w

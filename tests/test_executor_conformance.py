@@ -32,6 +32,7 @@ from repro.core import (SweepConfig, Solver, SolverOptions, build,
                         grid_partition, solve_mincut, solve_mincut_batch)
 from repro.core.executor import (BatchedExecutor, Capabilities,
                                  LocalExecutor, ShardedExecutor,
+                                 StreamingExecutor,
                                  UnsupportedFeatureError, required_features)
 from repro.core import sweep as sweep_mod
 from repro.core.graph import init_labels
@@ -159,25 +160,60 @@ def test_sharded_executor_conformance(method, backend, chunk,
         (1 if device_resident else ref.stats.sweeps)
 
 
+@pytest.mark.parametrize("backend,chunk", BACKENDS, ids=BACKEND_IDS)
+@pytest.mark.parametrize("method", ["ard", "prd"])
+def test_streaming_executor_conformance(method, backend, chunk):
+    """StreamingExecutor: staging regions through the disk spill pool one
+    at a time is bit-exact with the all-resident sequential host loop —
+    flow, labels, residuals, sweep count and engine counters — while the
+    stats additionally account the staged traffic and |B|."""
+    p, part = _instance()
+    want, _ = maxflow_oracle(p)
+    cfg = dataclasses.replace(_cfg(method, backend, chunk),
+                              parallel=False, use_global_gap=False)
+    ref = solve_mincut(p, part=part, config=cfg)
+    assert ref.flow_value == want
+    got = Solver(SolverOptions.from_sweep_config(
+        cfg, streaming=True)).prepare(p, part).solve()
+    _assert_state_bitexact(ref, got, f"streaming/{method}/{backend}/{chunk}")
+    s_ref, s_got = ref.stats, got.stats
+    assert s_got.sweeps == s_ref.sweeps
+    assert s_got.engine_iters == s_ref.engine_iters
+    assert s_got.regions_discharged == s_ref.regions_discharged
+    assert s_got.flow_curve == s_ref.flow_curve
+    assert s_got.active_curve == s_ref.active_curve
+    # comms accounting: |B| is on every route; the staged-bytes ledgers
+    # are the streaming route's own contribution
+    assert s_got.num_boundary == s_ref.num_boundary \
+        == ref.meta.num_boundary
+    assert s_got.staged_in_bytes > 0 and s_got.staged_out_bytes > 0
+    assert s_ref.staged_in_bytes == 0 and s_ref.staged_out_bytes == 0
+    invariants.assert_sweep_bound(ref.meta, s_got, ard=method == "ard")
+
+
 # --------------------------------------------------------------------------
 # capability matrix: one consistent fail-fast surface
 # --------------------------------------------------------------------------
 
 FEATURE_CFG = {
+    "parallel": dict(parallel=True),
     "sequential": dict(parallel=False),
     "boundary_relabel": dict(use_boundary_relabel=True),
     "partial_discharge": dict(partial_discharge=True),
     "global_gap": dict(use_global_gap=True),
 }
-ALL_EXECUTORS = [LocalExecutor, BatchedExecutor, ShardedExecutor]
+ALL_EXECUTORS = [LocalExecutor, BatchedExecutor, ShardedExecutor,
+                 StreamingExecutor]
 
 
 def test_required_features_maps_every_validated_flag():
-    cfg = SweepConfig(parallel=False, use_boundary_relabel=True,
-                      partial_discharge=True, use_global_gap=True)
-    assert set(required_features(cfg)) == set(FEATURE_CFG)
+    seq_all = SweepConfig(parallel=False, use_boundary_relabel=True,
+                          partial_discharge=True, use_global_gap=True)
+    assert set(required_features(seq_all)) == set(FEATURE_CFG) - {"parallel"}
     assert required_features(
-        SweepConfig(use_global_gap=False)) == ()
+        SweepConfig(use_global_gap=False)) == ("parallel",)
+    assert required_features(
+        SweepConfig(parallel=False, use_global_gap=False)) == ("sequential",)
 
 
 @pytest.mark.parametrize("executor", ALL_EXECUTORS,
@@ -185,9 +221,18 @@ def test_required_features_maps_every_validated_flag():
 @pytest.mark.parametrize("feature", sorted(FEATURE_CFG))
 def test_capability_matrix(executor, feature):
     """Every (feature, executor) pair: supported configs validate,
-    unsupported ones raise the one consistent error."""
+    unsupported ones raise the one consistent error.
+
+    A feature's probe config can require more than the probed feature
+    (e.g. boundary_relabel rides the default parallel sweep), so the
+    expected rejection is the FIRST flag of ``required_features`` the
+    executor lacks — validate's documented fail-fast order."""
     cfg = SweepConfig(**{"use_global_gap": False, **FEATURE_CFG[feature]})
-    if getattr(executor.capabilities, feature):
+    req = required_features(cfg)
+    assert feature in req
+    unsupported = [f for f in req
+                   if not getattr(executor.capabilities, f)]
+    if not unsupported:
         executor.validate(cfg)          # must not raise
     else:
         with pytest.raises(UnsupportedFeatureError) as ei:
@@ -199,8 +244,8 @@ def test_capability_matrix(executor, feature):
         assert isinstance(err, ValueError)
         assert isinstance(err, NotImplementedError)
         assert err.executor == executor.name
-        assert err.feature == feature
-        assert executor.name in str(err) and feature in str(err)
+        assert err.feature == unsupported[0]
+        assert executor.name in str(err) and err.feature in str(err)
 
 
 def test_capability_declarations_pin_the_support_matrix():
@@ -212,6 +257,9 @@ def test_capability_declarations_pin_the_support_matrix():
         host_loop=False)
     assert ShardedExecutor.capabilities == Capabilities(
         sequential=False, boundary_relabel=False)
+    assert StreamingExecutor.capabilities == Capabilities(
+        parallel=False, boundary_relabel=False, global_gap=False,
+        batched=False, device_resident=False)
 
 
 def test_unsupported_combos_fail_fast_at_every_front_end():

@@ -1,0 +1,82 @@
+"""GENRMF / Washington-RLG generators: validity, determinism, oracle flow."""
+
+import numpy as np
+import pytest
+
+from repro.core import SweepConfig, build, solve_mincut
+from repro.core.graph import validate_problem
+from repro.core.partition import block_partition
+from repro.data.generators import genrmf, pipeline_levels, washington_rlg
+from repro.kernels.ref import maxflow_oracle
+
+from invariants import assert_sweep_bound
+
+CASES = [
+    ("genrmf", lambda seed: genrmf(a=3, b=5, c1=1, c2=40, seed=seed)),
+    ("rlg", lambda seed: washington_rlg(rows=5, levels=8, degree=3,
+                                        max_cap=50, seed=seed)),
+]
+
+
+@pytest.mark.parametrize("name,gen", CASES, ids=[c[0] for c in CASES])
+def test_generated_instances_are_valid_and_deterministic(name, gen):
+    p = gen(11)
+    validate_problem(p, context=name)
+    q = gen(11)
+    np.testing.assert_array_equal(p.edges, q.edges)
+    np.testing.assert_array_equal(p.cap_fwd, q.cap_fwd)
+    np.testing.assert_array_equal(p.excess, q.excess)
+    r = gen(12)
+    assert not (len(p.cap_fwd) == len(r.cap_fwd)
+                and np.array_equal(p.cap_fwd, r.cap_fwd))
+
+
+@pytest.mark.parametrize("name,gen", CASES, ids=[c[0] for c in CASES])
+@pytest.mark.parametrize("method", ["ard", "prd"])
+def test_generated_instances_solve_to_oracle_flow(name, gen, method):
+    p = gen(seed=4)
+    want, _ = maxflow_oracle(p)
+    assert want > 0
+    part = block_partition(p.num_vertices, 4)
+    res = solve_mincut(p, part, config=SweepConfig(method=method))
+    assert res.flow_value == want
+    assert_sweep_bound(res.meta, res.stats, ard=method == "ard", where=name)
+
+
+def test_pipeline_levels_absorbs_all_supply():
+    # the bench instance's defining property: no stuck excess, so the
+    # maxflow equals the injected supply exactly and the sequential
+    # sweep drains it in a handful of passes
+    p = pipeline_levels(rows=16, levels=12, supply=100)
+    validate_problem(p, context="pipeline")
+    want, _ = maxflow_oracle(p)
+    assert want == 100 * 16
+    part = np.arange(p.num_vertices) // (16 * 4)
+    res = solve_mincut(p, part, config=SweepConfig(
+        method="ard", parallel=False, use_global_gap=False))
+    assert res.flow_value == want
+    assert res.stats.sweeps <= 4
+
+
+def test_genrmf_flow_percolates_every_frame():
+    # flow must cross all b-1 random inter-frame cuts: the maxflow is
+    # bounded by the narrowest of them, and the sweep count grows with b
+    p_short = genrmf(a=3, b=3, seed=9)
+    p_long = genrmf(a=3, b=9, seed=9)
+    s_short = solve_mincut(p_short, num_regions=3,
+                           config=SweepConfig(method="ard")).stats
+    s_long = solve_mincut(p_long, num_regions=3,
+                          config=SweepConfig(method="ard")).stats
+    assert s_long.sweeps >= s_short.sweeps
+
+
+def test_rlg_source_column_feeds_everything():
+    p = washington_rlg(rows=4, levels=6, seed=0)
+    vid = np.arange(p.num_vertices).reshape(6, 4)
+    assert (p.excess[vid[0]] > 0).all()
+    # random in-degree can leave a last-column vertex unfed, but the
+    # column as a whole is the only drain
+    assert p.sink_cap[vid[-1]].sum() > 0
+    assert p.excess[vid[1:]].sum() == 0 and p.sink_cap[vid[:-1]].sum() == 0
+    meta, _, _ = build(p, block_partition(p.num_vertices, 3))
+    assert meta.num_boundary > 0

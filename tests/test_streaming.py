@@ -1,0 +1,295 @@
+"""Out-of-core streaming executor: store, build, equivalence, resume.
+
+The conformance suite (test_executor_conformance.py) already pins the
+streaming route bit-exact against the resident reference across methods
+and engine backends; this file covers the subsystem's own moving parts —
+the spill pool's versioning/eviction/prefetch, the shard-wise build, the
+sharded DIMACS ingest, checkpoint/resume at sweep boundaries, and the
+capability surface of ``StreamingExecutor``.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (Solver, SolverOptions, StreamingExecutor, SweepConfig,
+                        build, solve_mincut)
+from repro.core.executor import UnsupportedFeatureError
+from repro.core.graph import (REGION_FLOW_FIELDS, REGION_TOPO_FIELDS,
+                              extract_region)
+from repro.core.partition import block_partition
+from repro.core.resilience import CheckpointPolicy
+from repro.data.dimacs import read_dimacs, read_dimacs_sharded, write_dimacs
+from repro.data.grids import random_sparse, synthetic_grid
+from repro.kernels.ref import maxflow_oracle
+from repro.stream import build_stream, solve_stream
+from repro.stream.store import StreamStore
+
+
+def _cfg(**kw):
+    kw.setdefault("method", "ard")
+    kw.setdefault("parallel", False)
+    kw.setdefault("use_global_gap", False)
+    return SweepConfig(**kw)
+
+
+def _problem():
+    return synthetic_grid(10, 12, connectivity=8, strength=120, seed=7)
+
+
+def _part(p, k=4):
+    return block_partition(p.num_vertices, k)
+
+
+# --------------------------------------------------------------------------
+# spill pool unit behavior
+# --------------------------------------------------------------------------
+
+def _tiny(v):
+    return {"cf": np.full((2, 2), v, np.int32)}, \
+        {"excess": np.full(3, v, np.int32)}
+
+
+def test_store_versioning_eviction_and_prune(tmp_path):
+    st = StreamStore(3, tmp_path / "pool", max_resident=2, prefetch=False)
+    for r in range(3):
+        topo, flow = _tiny(r)
+        st.put_region(r, topo, flow)
+    assert st.staged_in_bytes == 0          # population is setup, not traffic
+
+    t0, f0 = st.load(0)
+    st.load(1)
+    assert st.disk_loads == 2
+    st.load(2)                              # evicts LRU region 0
+    assert st.evictions == 1
+    st.load(0)                              # back from disk
+    assert st.disk_loads == 4 and st.staged_in_bytes > 0
+
+    # write-through versioning: writeback publishes v1, prunes v0
+    st.writeback(0, {"excess": np.full(3, 42, np.int32)})
+    assert st.versions[0] == 1
+    state_dir = tmp_path / "pool" / "region_00000" / "state"
+    assert (state_dir / "step_00000001").exists()
+    assert not (state_dir / "step_00000000").exists()
+    _, f = st.load(0)                       # resident entry was refreshed
+    assert f["excess"][0] == 42
+
+    # protect pins the checkpointed version against pruning
+    st.protect(st.versions.copy())
+    st.writeback(0, {"excess": np.full(3, 43, np.int32)})
+    assert (state_dir / "step_00000001").exists()    # pinned
+    assert (state_dir / "step_00000002").exists()    # current
+
+    # attach rewinds to the protected set (the resume entry)
+    st.attach(np.array([1, 0, 0]))
+    _, f = st.load(0)
+    assert f["excess"][0] == 42
+    st.close()
+    assert (tmp_path / "pool").exists()     # caller-owned dir survives close
+
+
+def test_store_prefetch_counters(tmp_path):
+    st = StreamStore(3, tmp_path / "pool", max_resident=1, prefetch=True)
+    for r in range(3):
+        st.put_region(r, *_tiny(r))
+    st.load(0)
+    st.prefetch(1)
+    st.load(1)
+    assert st.prefetch_hits == 1
+    # a mispredicted prefetch is consumed, counted wasted, and the
+    # requested region is re-read synchronously
+    st.prefetch(2)
+    st.load(0)
+    assert st.prefetch_wasted == 1
+    _, f = st.load(0)                       # still correct data
+    assert f["excess"][0] == 0
+    st.close()
+
+
+# --------------------------------------------------------------------------
+# shard-wise build == resident build, slab for slab
+# --------------------------------------------------------------------------
+
+def test_build_stream_slabs_match_resident_build():
+    p = _problem()
+    part = _part(p)
+    cfg = _cfg()
+    meta, state, _ = build(p, part)
+    ss = build_stream(p, part, cfg, prefetch=False)
+    assert ss.meta == meta
+    for r in range(meta.num_regions):
+        topo = extract_region(state, r, REGION_TOPO_FIELDS)
+        flow = extract_region(state, r, REGION_FLOW_FIELDS)
+        got_t, got_f = ss.store.load(r)
+        for f in REGION_TOPO_FIELDS:
+            np.testing.assert_array_equal(got_t[f], np.asarray(topo[f]), f)
+        for f in REGION_FLOW_FIELDS:
+            np.testing.assert_array_equal(got_f[f], np.asarray(flow[f]), f)
+    ss.store.close()
+
+
+# --------------------------------------------------------------------------
+# eviction / prefetch do not change the math
+# --------------------------------------------------------------------------
+
+def _run(p, part, cfg, **kw):
+    ss = build_stream(p, part, cfg, **kw)
+    try:
+        ss, stats = solve_stream(ss)
+        return ss.bnd.flow_to_t, stats, \
+            (ss.bnd.d_B.copy(), ss.bnd.e_B.copy()), ss.store
+    finally:
+        ss.store.close()
+
+
+@pytest.mark.parametrize("method", ["ard", "prd"])
+def test_single_resident_region_is_bit_exact(method):
+    p = _problem()
+    part = _part(p)
+    cfg = _cfg(method=method)
+    want, _ = maxflow_oracle(p)
+    flow_all, stats_all, bnd_all, store_all = _run(
+        p, part, cfg, max_resident_regions=4, prefetch=False)
+    flow_one, stats_one, bnd_one, store_one = _run(
+        p, part, cfg, max_resident_regions=1, prefetch=False)
+    assert flow_all == flow_one == want
+    assert stats_all.sweeps == stats_one.sweeps
+    assert stats_all.flow_curve == stats_one.flow_curve
+    np.testing.assert_array_equal(bnd_all[0], bnd_one[0])
+    np.testing.assert_array_equal(bnd_all[1], bnd_one[1])
+    assert store_one.evictions > store_all.evictions
+    # a 1-resident run re-reads every staged region from disk
+    assert stats_one.staged_in_bytes > stats_all.staged_in_bytes
+
+
+def test_prefetch_on_off_equivalence():
+    p = _problem()
+    part = _part(p)
+    cfg = _cfg()
+    flow_on, stats_on, bnd_on, store_on = _run(
+        p, part, cfg, max_resident_regions=1, prefetch=True)
+    flow_off, stats_off, bnd_off, _ = _run(
+        p, part, cfg, max_resident_regions=1, prefetch=False)
+    assert flow_on == flow_off
+    assert stats_on.sweeps == stats_off.sweeps
+    assert stats_on.flow_curve == stats_off.flow_curve
+    np.testing.assert_array_equal(bnd_on[0], bnd_off[0])
+    assert store_on.prefetch_hits > 0
+
+
+# --------------------------------------------------------------------------
+# checkpoint/resume at sweep boundaries
+# --------------------------------------------------------------------------
+
+def test_checkpoint_resume_is_bit_exact(tmp_path):
+    p = _problem()
+    part = _part(p)
+    pool, ckdir = tmp_path / "pool", tmp_path / "ck"
+
+    _, ref_stats, ref_bnd, _ = _run(p, part, _cfg(), prefetch=False)
+    assert ref_stats.converged and ref_stats.sweeps > 4
+
+    # interrupted run: sweep budget runs out mid-solve, checkpointing
+    cut = _cfg(max_sweeps=3)
+    ss = build_stream(p, part, cut, spill_dir=pool, prefetch=False)
+    _, stats1 = solve_stream(
+        ss, checkpoint=CheckpointPolicy(directory=ckdir, every=1))
+    assert not stats1.converged and stats1.sweeps == 3
+    ss.store.close()
+
+    # resume with the full budget against the same durable pool
+    ss2 = build_stream(p, part, _cfg(), spill_dir=pool, prefetch=False)
+    ss2, stats2 = solve_stream(ss2, resume_from=ckdir)
+    assert stats2.converged
+    assert stats2.sweeps == ref_stats.sweeps
+    assert stats2.flow_curve == ref_stats.flow_curve
+    assert ss2.bnd.flow_to_t == ref_stats.flow_curve[-1]
+    np.testing.assert_array_equal(ss2.bnd.d_B, ref_bnd[0])
+    np.testing.assert_array_equal(ss2.bnd.e_B, ref_bnd[1])
+    ss2.store.close()
+
+
+# --------------------------------------------------------------------------
+# sharded DIMACS ingest
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("p", [
+    random_sparse(14, 28, seed=3),
+    synthetic_grid(6, 6, connectivity=8, strength=120, seed=1),
+], ids=["sparse14", "grid6"])
+def test_sharded_reader_roundtrips_bit_exact(p, tmp_path):
+    path = tmp_path / "instance.max"
+    write_dimacs(p, path)
+    ref = read_dimacs(path)
+    for part in (3, block_partition(ref.num_vertices, 3),
+                 lambda n: block_partition(n, 3)):
+        sd = read_dimacs_sharded(path, part)
+        q = sd.to_problem()
+        assert q.num_vertices == ref.num_vertices
+        np.testing.assert_array_equal(q.edges, ref.edges)
+        np.testing.assert_array_equal(q.cap_fwd, ref.cap_fwd)
+        np.testing.assert_array_equal(q.cap_bwd, ref.cap_bwd)
+        np.testing.assert_array_equal(q.excess, ref.excess)
+        np.testing.assert_array_equal(q.sink_cap, ref.sink_cap)
+        sd.close()
+
+
+def test_sharded_reader_to_stream_solves(tmp_path):
+    p = synthetic_grid(8, 9, connectivity=4, strength=90, seed=5)
+    path = tmp_path / "instance.max"
+    write_dimacs(p, path)
+    want, _ = maxflow_oracle(read_dimacs(path))
+    sd = read_dimacs_sharded(path, 4)
+    ss = sd.to_stream(_cfg(), prefetch=False)
+    ss, stats = solve_stream(ss)
+    assert stats.converged and ss.bnd.flow_to_t == want
+    assert stats.num_boundary == ss.meta.num_boundary
+    ss.store.close()
+    sd.close()
+
+
+def test_sharded_reader_errors_are_loud():
+    with pytest.raises(NotImplementedError):
+        read_dimacs_sharded("p max 3 1\nn 2 s\nn 3 t\na 2 3 5\n", 2)
+    with pytest.raises(AssertionError, match="designators"):
+        read_dimacs_sharded("p max 4 1\na 1 2 5\nn 3 s\nn 4 t\n", 2)
+
+
+# --------------------------------------------------------------------------
+# solver-session route and capability surface
+# --------------------------------------------------------------------------
+
+def test_streaming_executor_refuses_device_loop():
+    p = _problem()
+    cfg = _cfg()
+    meta, _, _ = build(p, _part(p))
+    ex = StreamingExecutor(meta, cfg)
+    for call in (lambda: ex.init_carry(None),
+                 lambda: ex.one_sweep(None, None, 1),
+                 lambda: ex.keep_running(None, None, 1),
+                 lambda: ex.progress(None, 1)):
+        with pytest.raises(UnsupportedFeatureError) as ei:
+            call()
+        assert ei.value.feature == "device_resident"
+    with pytest.raises(UnsupportedFeatureError):
+        StreamingExecutor.validate(_cfg(parallel=True))
+
+
+def test_streaming_and_batching_are_mutually_exclusive():
+    opts = SolverOptions.from_sweep_config(_cfg(), streaming=True)
+    ps = [random_sparse(10, 18, seed=s) for s in (1, 2)]
+    with pytest.raises(ValueError, match="solve_many and streaming"):
+        Solver(opts).solve_many(ps)
+
+
+def test_streaming_session_reports_io_accounting():
+    p = _problem()
+    ref = solve_mincut(p, _part(p), config=_cfg())
+    opts = SolverOptions.from_sweep_config(
+        _cfg(), streaming=True, max_resident_regions=2)
+    res = Solver(opts).prepare(p, _part(p)).solve()
+    assert res.flow_value == ref.flow_value
+    assert res.stats.staged_in_bytes > 0
+    assert res.stats.staged_out_bytes > 0
+    assert res.stats.num_boundary == ref.meta.num_boundary

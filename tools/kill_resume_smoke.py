@@ -19,9 +19,18 @@ The atomic write-to-temp-then-rename snapshot protocol is what makes step
 3 safe: a snapshot the child was writing when it died is a ``.tmp`` dir
 the resume never sees.
 
-Usage (CI: the ``resilience`` job):
+``--streaming`` runs the same protocol through the out-of-core route:
+the child builds the instance straight into a DURABLE spill pool
+(``<ckdir>_pool``), checkpoints the |B|-sized boundary layer + pool
+version vector at every sweep boundary, and dies mid-solve; the resume
+re-attaches the surviving pool at the checkpointed versions — including
+any orphan newer versions the dead process published after its last
+checkpoint — and must match the uninterrupted streamed solve bit-exactly.
+
+Usage (CI: the ``resilience`` and ``streaming`` jobs):
 
     PYTHONPATH=src python tools/kill_resume_smoke.py
+    PYTHONPATH=src python tools/kill_resume_smoke.py --streaming
 """
 
 from __future__ import annotations
@@ -65,6 +74,86 @@ def child(ckdir: str) -> None:
     solve(meta, init_labels(meta, state), SweepConfig(method="ard"),
           checkpoint=resilience.CheckpointPolicy(directory=ckdir, every=1))
     raise SystemExit("unreachable: the solve outlived its kill sweep")
+
+
+def _stream_cfg():
+    from repro.core.sweep import SweepConfig
+
+    return SweepConfig(method="ard", parallel=False, use_global_gap=False)
+
+
+def _stream_problem():
+    import numpy as np
+
+    from repro.core import grid_partition
+    from repro.data.grids import synthetic_grid
+
+    p = synthetic_grid(10, 10, connectivity=8, strength=150, seed=0)
+    return p, np.asarray(grid_partition((10, 10), (2, 2)))
+
+
+def child_streaming(ckdir: str) -> None:
+    """Streamed solve into a durable pool; die hard at sweep KILL_AT."""
+    from repro.core import executor, resilience
+    from repro.stream import build_stream, solve_stream
+
+    def die(route, state, sweeps_done):
+        if sweeps_done >= KILL_AT:
+            os.kill(os.getpid(), signal.SIGKILL)   # no goodbye
+
+    executor.set_fault_hook(die)
+    p, part = _stream_problem()
+    ss = build_stream(p, part, _stream_cfg(), spill_dir=ckdir + "_pool",
+                      prefetch=False)
+    solve_stream(ss, checkpoint=resilience.CheckpointPolicy(
+        directory=ckdir, every=1))
+    raise SystemExit("unreachable: the solve outlived its kill sweep")
+
+
+def parent_streaming(ckdir: str) -> None:
+    import numpy as np
+
+    from repro.core import resilience
+    from repro.stream import build_stream, solve_stream
+
+    p, part = _stream_problem()
+    ss = build_stream(p, part, _stream_cfg(), prefetch=False)
+    ss, base_stats = solve_stream(ss)
+    base_bnd = (ss.bnd.d_B.copy(), ss.bnd.e_B.copy(), ss.bnd.flow_to_t)
+    ss.store.close()
+    assert base_stats.sweeps > KILL_AT, \
+        f"instance converges in {base_stats.sweeps} sweeps; nothing to kill"
+
+    proc = subprocess.run(
+        [sys.executable, __file__, "--streaming", "--child", ckdir],
+        env={**os.environ, "JAX_PLATFORMS": "cpu"},
+        capture_output=True, text=True, timeout=600)
+    assert proc.returncode == -signal.SIGKILL, (
+        f"child exited {proc.returncode}, wanted SIGKILL "
+        f"({-signal.SIGKILL})\n--- child stderr ---\n{proc.stderr}")
+
+    latest = resilience.latest_checkpoint(ckdir)
+    assert latest is not None, "the killed child published no checkpoint"
+    assert latest.route == "stream", latest.route
+    assert latest.sweeps == KILL_AT, \
+        f"latest checkpoint at sweep {latest.sweeps}, wanted {KILL_AT}"
+    print(f"[kill-resume --streaming] child SIGKILLed; latest checkpoint "
+          f"at sweep {latest.sweeps}/{base_stats.sweeps}")
+
+    # resume against the pool the dead process left behind
+    ss2 = build_stream(p, part, _stream_cfg(), spill_dir=ckdir + "_pool",
+                       prefetch=False)
+    ss2, stats = solve_stream(ss2, resume_from=ckdir)
+    np.testing.assert_array_equal(ss2.bnd.d_B, base_bnd[0])
+    np.testing.assert_array_equal(ss2.bnd.e_B, base_bnd[1])
+    assert ss2.bnd.flow_to_t == base_bnd[2]
+    for k in ("sweeps", "engine_iters", "flow_curve", "converged"):
+        assert getattr(stats, k) == getattr(base_stats, k), k
+    assert stats.staged_in_bytes > 0
+    ss2.store.close()
+    print(f"[kill-resume --streaming] resumed {latest.sweeps} -> "
+          f"{stats.sweeps} sweeps: flow={base_bnd[2]} — bit-exact vs "
+          f"uninterrupted. OK")
 
 
 def parent(ckdir: str) -> None:
@@ -111,12 +200,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--child", default=None, metavar="CKDIR",
                     help=argparse.SUPPRESS)
+    ap.add_argument("--streaming", action="store_true",
+                    help="run the protocol through the out-of-core "
+                         "streaming route (durable spill pool + O(|B|) "
+                         "checkpoints)")
     args = ap.parse_args()
     if args.child:
-        child(args.child)
+        (child_streaming if args.streaming else child)(args.child)
     else:
         with tempfile.TemporaryDirectory(prefix="kill_resume_") as d:
-            parent(str(Path(d) / "ck"))
+            (parent_streaming if args.streaming else parent)(
+                str(Path(d) / "ck"))
 
 
 if __name__ == "__main__":
